@@ -1,0 +1,64 @@
+"""Fig. 7: decision-logic ablations — dynamic utility maximization vs
+augmented Chebyshev and Highest-Cost; calibration weight w sweep."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Bundle, pool_predictions_cached
+from repro.core.baselines import chebyshev_choices, highest_cost_choices
+from repro.core.evaluation import evaluate_choices
+
+
+def _curve_area(pts):
+    """Area under the (cost, acc) frontier, cost-normalized (higher=better)."""
+    pts = sorted(pts)
+    if len(pts) < 2:
+        return 0.0
+    xs = np.array([p[0] for p in pts])
+    ys = np.array([p[1] for p in pts])
+    xs = (xs - xs.min()) / max(xs.max() - xs.min(), 1e-9)
+    return float(np.trapezoid(ys, xs))
+
+
+def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
+    rows = []
+    router, pool, qids, data, models = pool_predictions_cached(bundle,
+                                                               ood=False)
+    alphas = np.linspace(0, 1, 9)
+
+    # --- utility-rule comparison (Fig. 7 left) ---------------------------
+    curves = {"scope_dynamic": [], "chebyshev": [], "highest_cost": []}
+    for a in alphas:
+        ch = router.route(pool, float(a))
+        ev = evaluate_choices(data, qids, models, ch)
+        curves["scope_dynamic"].append((ev.total_cost, ev.avg_acc))
+
+        ch = chebyshev_choices(pool.p_hat, pool.cost_hat, float(a))
+        ev = evaluate_choices(data, qids, models, ch)
+        curves["chebyshev"].append((ev.total_cost, ev.avg_acc))
+
+        budget_q = np.quantile(pool.cost_hat, 0.2 + 0.75 * a)
+        ch = highest_cost_choices(pool.cost_hat, float(budget_q))
+        ev = evaluate_choices(data, qids, models, ch)
+        curves["highest_cost"].append((ev.total_cost, ev.avg_acc))
+    for name, pts in curves.items():
+        rows.append((f"ablation/utility/{name}", 0.0,
+                     f"frontier_auc={_curve_area(pts):.4f};"
+                     f"max_acc={max(p[1] for p in pts):.3f}"))
+
+    # --- calibration weight sweep (Fig. 7 right) -------------------------
+    for w_base in (0.0, 0.2, 0.5, 1.0):
+        r2 = bundle.router(models, w_base=w_base)
+        pts = []
+        for a in alphas:
+            ch = r2.route(pool, float(a))
+            ev = evaluate_choices(data, qids, models, ch)
+            pts.append((ev.total_cost, ev.avg_acc))
+        costs = sorted(p[0] for p in pts)
+        gaps = np.diff(costs) / max(costs[-1] - costs[0], 1e-9)
+        rows.append((f"ablation/calibration/w{w_base:g}", 0.0,
+                     f"frontier_auc={_curve_area(pts):.4f};"
+                     f"max_cost_gap={gaps.max() if len(gaps) else 0:.3f}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Appendix F: computational cost of domain adaptation — baseline
+(label-generation + router retraining) vs SCOPE (anchor inference only).
+Reproduces the 38x analytic derivation with the paper's constants and
+reports our world-sim equivalents."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.common import Bundle
+
+
+def flops_ratio(P=37e9, P_router=4e9, N_tr=4778, L=4873, E=3, K=250):
+    T_inf = N_tr * L
+    F_inf = 2 * P * T_inf
+    T_train = E * N_tr * L
+    F_train = 6 * P_router * T_train
+    F_baseline = F_inf + F_train
+    F_scope = 2 * P * K * L
+    return F_baseline, F_scope, F_baseline / F_scope
+
+
+def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
+    rows = []
+    fb, fs, ratio = flops_ratio()
+    rows.append(("adaptation/paper_constants", 0.0,
+                 f"baseline_flops={fb:.3e};scope_flops={fs:.3e};"
+                 f"ratio={ratio:.1f}x"))
+    # closed form (Eq. 35): (N_tr/K) * (1 + 6*P_r*E / (2*P))
+    analytic = (4778 / 250) * (1 + (6 * 4 * 3) / (2 * 37))
+    rows.append(("adaptation/closed_form", 0.0, f"ratio={analytic:.1f}x"))
+
+    # our world: onboarding the 4 unseen models cost = anchor passes only
+    n_anchor = len(bundle.library.anchor_set)
+    n_train = len(bundle.data.train_qids)
+    fb2, fs2, r2 = flops_ratio(N_tr=n_train, K=n_anchor)
+    rows.append(("adaptation/worldsim_scale", 0.0,
+                 f"train_queries={n_train};anchors={n_anchor};"
+                 f"ratio={r2:.1f}x"))
+    return rows

@@ -1,0 +1,58 @@
+"""Fig. 4 / 6 / 13: SCOPE's accuracy-cost frontier vs every individual
+model.  Headline numbers: max accuracy boost at comparable cost (paper:
++24-25.7%) and max cost cut at comparable accuracy (paper: -95.1%)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Bundle, pool_predictions_cached
+from repro.core.evaluation import evaluate_choices
+
+ALPHAS = np.linspace(0.0, 1.0, 11)
+
+
+def frontier(bundle: Bundle, *, ood: bool):
+    router, pool, qids, data, models = pool_predictions_cached(bundle,
+                                                               ood=ood)
+    pts = []
+    for a in ALPHAS:
+        ch = router.route(pool, float(a))
+        ev = evaluate_choices(data, qids, models, ch)
+        pts.append((float(a), ev.avg_acc, ev.total_cost))
+    singles = {}
+    for mi, m in enumerate(models):
+        ev = evaluate_choices(data, qids, models,
+                              np.full(len(qids), mi))
+        singles[m] = (ev.avg_acc, ev.total_cost)
+    return pts, singles
+
+
+def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
+    rows = []
+    for ood in (False, True):
+        tag = "ood" if ood else "test"
+        pts, singles = frontier(bundle, ood=ood)
+        accs = np.array([p[1] for p in pts])
+        costs = np.array([p[2] for p in pts])
+
+        best_single_acc = max(a for a, _ in singles.values())
+        boost = (accs.max() - best_single_acc) / max(best_single_acc, 1e-9)
+
+        # cost cut vs the most expensive single model at >= comparable acc
+        exp_model = max(singles, key=lambda m: singles[m][1])
+        exp_acc, exp_cost = singles[exp_model]
+        ok = accs >= exp_acc - 0.03
+        cut = (1.0 - costs[ok].min() / exp_cost) if ok.any() else 0.0
+
+        for a, acc, cost in pts:
+            rows.append((f"pareto/{tag}/alpha{a:.1f}", 0.0,
+                         f"acc={acc:.3f};cost={cost:.4f}"))
+        for m, (acc, cost) in singles.items():
+            rows.append((f"pareto/{tag}/single/{m}", 0.0,
+                         f"acc={acc:.3f};cost={cost:.4f}"))
+        rows.append((f"pareto/{tag}/headline", 0.0,
+                     f"acc_boost_vs_best_single={boost*100:.1f}%;"
+                     f"cost_cut_vs_{exp_model}={cut*100:.1f}%"))
+    return rows

@@ -1,0 +1,61 @@
+"""Table 2: pre-hoc predictive accuracy (ACC) and token MAE, per category —
+SCOPE vs SCOPE_NoCoT vs the untrained base model (5-shot and 0-shot)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Bundle
+from repro.core import serialization
+from repro.core.evaluation import predictive_metrics
+from repro.data.worldsim import DOMAINS
+
+
+def _eval(bundle: Bundle, which: str, *, anchors: int, n_queries: int = 64):
+    world, data = bundle.world, bundle.data
+    est = bundle.estimator(which)
+    qids = data.test_qids[:n_queries]
+    queries = [data.queries[int(q)] for q in qids]
+    embs = np.stack([world.embed(q) for q in queries])
+    sims, idx = bundle.retriever.retrieve(embs, max(anchors, 1))
+    if anchors == 0:
+        sims = sims[:, :0]
+        idx = idx[:, :0]
+    mi = {m: i for i, m in enumerate(bundle.seen)}
+    prompts, gts, doms = [], [], []
+    for qi, q in enumerate(queries):
+        for m in bundle.seen:
+            prompts.append(serialization.serialize_prompt(
+                world.models[m], mi[m], bundle.library.anchor_set,
+                bundle.library.get(m), sims[qi], idx[qi], q))
+            r = data.record(q.qid, m)
+            gts.append((r.y, r.tokens))
+            doms.append(q.domain)
+    t0 = time.perf_counter()
+    preds = est.predict(prompts)
+    dt_us = (time.perf_counter() - t0) / len(prompts) * 1e6
+    y_hat = np.array([p.y_hat for p in preds])
+    len_hat = np.array([p.len_hat for p in preds])
+    y_gt = np.array([g[0] for g in gts])
+    len_gt = np.array([g[1] for g in gts])
+    m = predictive_metrics(y_hat, y_gt, len_hat, len_gt, np.array(doms))
+    m["well_formed"] = float(np.mean([p.well_formed for p in preds]))
+    return m, dt_us
+
+
+def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
+    rows = []
+    settings = [("scope", 5), ("nocot", 5), ("untrained", 5),
+                ("untrained", 0)]
+    for which, k in settings:
+        m, dt = _eval(bundle, which, anchors=k)
+        per_dom = ";".join(
+            f"{DOMAINS[d][:4]}={m.get(f'acc_d{d}', float('nan')):.2f}"
+            for d in range(4))
+        rows.append((
+            f"predictive/{which}_k{k}", dt,
+            f"acc={m['acc']:.3f};mae={m['mae']:.0f};"
+            f"wf={m['well_formed']:.2f};{per_dom}"))
+    return rows

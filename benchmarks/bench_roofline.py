@@ -1,0 +1,69 @@
+"""Roofline terms per (arch x shape x mesh), read from the dry-run
+artifacts (experiments/artifacts/dryrun_*.json).  No devices touched."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "artifacts")
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) per training step; forward-only
+    (2*N*D) for prefill; 2*N_active per token for decode."""
+    from repro.configs import get_config, INPUT_SHAPES
+    cfg = get_config(arch)
+    import numpy as np
+    import jax
+    from repro.launch import specs as S
+    params = S.abstract_params(cfg)
+    n_total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    if cfg.has_moe():
+        # active params: replace expert count by k experts (+shared)
+        dense_frac_per_layer = (cfg.num_experts_per_tok
+                                + cfg.num_shared_experts) / max(
+            cfg.num_experts + cfg.num_shared_experts, 1)
+        expert_params = (cfg.num_experts * 3 * cfg.d_model
+                         * cfg.resolved_moe_d_ff * cfg.num_layers)
+        n_active = n_total - expert_params * (1 - dense_frac_per_layer)
+    else:
+        n_active = n_total
+    sh = INPUT_SHAPES[shape["shape"]]
+    if sh.mode == "train":
+        return 6.0 * n_active * sh.seq_len * sh.global_batch
+    if sh.mode == "prefill":
+        return 2.0 * n_active * sh.seq_len * sh.global_batch
+    return 2.0 * n_active * sh.global_batch          # one token / seq
+
+
+def run(bundle=None) -> List[Tuple[str, float, str]]:
+    rows = []
+    for mesh_tag, fname in (("16x16", "dryrun_single_pod.json"),
+                            ("2x16x16", "dryrun_multi_pod.json")):
+        path = os.path.join(ART, fname)
+        if not os.path.exists(path):
+            rows.append((f"roofline/{mesh_tag}/missing", 0.0,
+                         f"run=python -m repro.launch.dryrun --all"))
+            continue
+        results = json.load(open(path))
+        for r in results:
+            name = f"roofline/{mesh_tag}/{r['arch']}/{r['shape']}"
+            if r["status"] == "skipped":
+                rows.append((name, 0.0, f"skipped={r['reason'][:40]}"))
+                continue
+            if r["status"] != "ok":
+                rows.append((name, 0.0, f"FAILED={r.get('error','')[:60]}"))
+                continue
+            t = r["roofline"]
+            mf = model_flops(r["arch"], r)
+            nd = r["num_devices"]
+            useful = mf / max(r["hlo_flops_per_device"] * nd, 1.0)
+            rows.append((
+                name, t["compute_s"] * 1e6,
+                f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+                f"collective_s={t['collective_s']:.4f};"
+                f"bottleneck={t['bottleneck'].replace('_s','')};"
+                f"model_vs_hlo_flops={useful:.2f}"))
+    return rows

@@ -1,0 +1,71 @@
+"""Table 1: routing performance (PGR / Avg-A / Cost) on Test and OOD sets,
+SCOPE at alpha in {0, 0.6, 1.0} vs baselines."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Bundle, pool_predictions_cached
+from repro.core.baselines import (
+    KNNRouter, LinearSVMRouter, MLPRouter, oracle_labels, random_choices)
+from repro.core.evaluation import evaluate_choices
+
+
+def _fit_supervised(bundle: Bundle, data, models, train_qids):
+    world = bundle.world
+    embs = np.stack([world.embed(data.queries[int(q)]) for q in train_qids])
+    labels = oracle_labels(data, train_qids, models)
+    routers = {}
+    for name, r in (("knn_router", KNNRouter(k=8)),
+                    ("mlp_router", MLPRouter(steps=300)),
+                    ("svm_router", LinearSVMRouter(steps=300))):
+        r.fit(embs, labels, len(models))
+        routers[name] = r
+    return routers
+
+
+def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
+    rows = []
+    for ood in (False, True):
+        tag = "ood" if ood else "test"
+        router, pool, qids, data, models = pool_predictions_cached(
+            bundle, ood=ood)
+        world = bundle.world
+        Q = len(qids)
+
+        def emit(name, choices, dt_us):
+            ev = evaluate_choices(data, qids, models, choices)
+            rows.append((f"routing/{tag}/{name}", dt_us,
+                         f"pgr={ev.pgr:.3f};acc={ev.avg_acc:.3f};"
+                         f"cost={ev.total_cost:.4f}"))
+
+        # static baselines
+        emit("random", random_choices(Q, len(models), seed=1), 0.0)
+        prices = [world.models[m].price_out for m in models]
+        emit("cheapest", np.full(Q, int(np.argmin(prices))), 0.0)
+        emit("most_expensive", np.full(Q, int(np.argmax(prices))), 0.0)
+
+        # supervised baselines: trained on train split (test) or anchors (ood)
+        if ood:
+            # retrain on anchor-set-sized data from the OOD pool (paper's
+            # adaptation protocol for baselines)
+            train_q = data.train_qids[:200]
+        else:
+            train_q = data.train_qids
+        sup = _fit_supervised(bundle, data, models, train_q)
+        test_embs = np.stack([world.embed(data.queries[int(q)])
+                              for q in qids])
+        for name, r in sup.items():
+            t0 = time.perf_counter()
+            ch = r.predict(test_embs)
+            emit(name, ch, (time.perf_counter() - t0) / Q * 1e6)
+
+        # SCOPE at the paper's three alphas
+        for alpha in (0.0, 0.6, 1.0):
+            t0 = time.perf_counter()
+            ch = router.route(pool, alpha)
+            dt = (time.perf_counter() - t0) / Q * 1e6
+            emit(f"scope_alpha{alpha:g}", ch, dt)
+    return rows

@@ -1,0 +1,48 @@
+"""Fig. 9 / Appendix E: token cost of SCOPE (pool-wide prediction overhead
++ ONE executed model) vs test-time scaling (execute everything).  Also the
+hindsight-distillation compression of the prediction traces (238.7 vs
+2354.9 tokens in the paper; here: trained trace length vs the untrained
+model's budget-exhausting rambles)."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Bundle, pool_predictions_cached
+from repro.core.baselines import tts_outcome
+from repro.core.evaluation import evaluate_choices
+
+
+def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
+    rows = []
+    router, pool, qids, data, models = pool_predictions_cached(bundle,
+                                                               ood=False)
+    ch = router.route(pool, 0.9)
+    ev = evaluate_choices(data, qids, models, ch)
+    scope_exec = ev.exec_tokens
+    scope_pred = int(pool.pred_overhead.sum())
+    scope_total = scope_exec + scope_pred
+
+    tts_tokens = sum(tts_outcome(data, int(q), models)[1] for q in qids)
+    tts_acc = np.mean([tts_outcome(data, int(q), models)[0] for q in qids])
+    saving = 1.0 - scope_total / max(tts_tokens, 1)
+    Q = len(qids)
+    rows.append(("tokens/tts_all_models", 0.0,
+                 f"tokens_per_query={tts_tokens/Q:.0f};acc={tts_acc:.3f}"))
+    rows.append(("tokens/scope", 0.0,
+                 f"tokens_per_query={scope_total/Q:.0f};"
+                 f"pred_overhead_per_query={scope_pred/Q:.0f};"
+                 f"acc={ev.avg_acc:.3f}"))
+    rows.append(("tokens/savings", 0.0, f"saving={saving*100:.1f}%"))
+
+    # prediction-trace compression (App. E): trained vs untrained trace len
+    trained_len = float(pool.pred_overhead.mean())
+    _, pool_u, _, _, _ = pool_predictions_cached(bundle, ood=False,
+                                                 which="untrained",
+                                                 n_queries=16)
+    untrained_len = float(pool_u.pred_overhead.mean())
+    rows.append(("tokens/trace_compression", 0.0,
+                 f"trained={trained_len:.1f};untrained={untrained_len:.1f};"
+                 f"note=untrained_capped_at_12_new_tokens"))
+    return rows

@@ -1,0 +1,134 @@
+"""Shared benchmark setup: world, datasets, fingerprints, and a trained
+SCOPE estimator (SFT + GRPO), cached on disk so repeated benchmark runs
+don't retrain."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.scope_estimator import TINY
+from repro.core.estimator import ReasoningEstimator
+from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
+from repro.core.retrieval import AnchorRetriever
+from repro.core.router import ScopeRouter
+from repro.data.datasets import ScopeData, build_scope_data, stratified_anchors
+from repro.data.worldsim import World
+from repro.models import model as M
+from repro.training import checkpoint
+from repro.training.grpo import GRPOConfig, GRPOTrainer
+from repro.training.sft import build_sft_dataset, train_sft
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "_cache")
+
+N_QUERIES = 2400
+N_ANCHORS = 250
+SFT_STEPS = 2000
+SFT_EXAMPLES = 15000
+GRPO_STEPS = 60
+SEED = 0
+
+
+@dataclasses.dataclass
+class Bundle:
+    world: World
+    data: ScopeData               # seen pool, train+test
+    ood_data: ScopeData           # unseen pool, frontier difficulty
+    library: FingerprintLibrary
+    retriever: AnchorRetriever
+    params: Dict                  # SCOPE (SFT+GRPO, CoT)
+    params_nocot: Dict            # SCOPE_NoCoT ablation
+    params_untrained: Dict        # base model analogue
+    cfg: object
+    seen: List[str]
+    unseen: List[str]
+
+    def estimator(self, which: str = "scope") -> ReasoningEstimator:
+        p = {"scope": self.params, "nocot": self.params_nocot,
+             "untrained": self.params_untrained}[which]
+        return ReasoningEstimator(self.cfg, p, cot=(which != "nocot"))
+
+    def router(self, models: List[str], which: str = "scope",
+               **kw) -> ScopeRouter:
+        return ScopeRouter(self.estimator(which), self.retriever,
+                           self.library, self.world.models,
+                           {m: i for i, m in enumerate(models)}, **kw)
+
+
+_BUNDLE: Optional[Bundle] = None
+
+
+def _train_variant(data, library, retriever, *, cot: bool, grpo: bool,
+                   tag: str) -> Dict:
+    path = os.path.join(CACHE_DIR, f"scope_{tag}.npz")
+    params = M.init_params(jax.random.PRNGKey(SEED), TINY)
+    if os.path.exists(path):
+        return checkpoint.load(path, params)
+    t0 = time.time()
+    ds = build_sft_dataset(data, library, retriever, cot=cot,
+                           max_examples=SFT_EXAMPLES, seed=SEED)
+    params, losses = train_sft(params, TINY, ds, steps=SFT_STEPS,
+                               batch_size=64)
+    if grpo:
+        tr = GRPOTrainer(TINY, params, data, library, retriever,
+                         gcfg=GRPOConfig(), cot=cot, seed=SEED)
+        tr.train(GRPO_STEPS)
+        params = tr.params
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    checkpoint.save(path, params)
+    print(f"# trained {tag}: sft {np.mean(losses[:10]):.3f}->"
+          f"{np.mean(losses[-10:]):.3f} in {time.time()-t0:.0f}s")
+    return params
+
+
+def get_bundle() -> Bundle:
+    global _BUNDLE
+    if _BUNDLE is not None:
+        return _BUNDLE
+    world = World(seed=SEED)
+    seen = [m.name for m in world.pool if m.seen]
+    unseen = [m.name for m in world.pool if not m.seen]
+    data = build_scope_data(world, n_queries=N_QUERIES, seed=SEED)
+    ood_data = build_scope_data(world, n_queries=300, models=unseen,
+                                seed=SEED + 1, difficulty_shift=0.9,
+                                test_frac=0.5)
+    aset = build_anchor_set(world, stratified_anchors(world, n=N_ANCHORS,
+                                                      seed=SEED + 7))
+    library = FingerprintLibrary(aset)
+    for m in seen + unseen:       # unseen: fingerprints only, zero training
+        library.onboard(world, m, seed=SEED + 13)
+    retriever = AnchorRetriever(aset)
+
+    params = _train_variant(data, library, retriever, cot=True, grpo=True,
+                            tag="cot_grpo")
+    params_nocot = _train_variant(data, library, retriever, cot=False,
+                                  grpo=True, tag="nocot_grpo")
+    params_untrained = M.init_params(jax.random.PRNGKey(SEED + 5), TINY)
+
+    _BUNDLE = Bundle(world, data, ood_data, library, retriever, params,
+                     params_nocot, params_untrained, TINY, seen, unseen)
+    return _BUNDLE
+
+
+def pool_predictions_cached(bundle: Bundle, *, ood: bool, which: str = "scope",
+                            n_queries: int = 110):
+    """Pool-wide predictions for the eval split (computed once per run)."""
+    key = (ood, which, n_queries)
+    cache = getattr(bundle, "_pp_cache", None)
+    if cache is None:
+        cache = {}
+        bundle._pp_cache = cache
+    if key in cache:
+        return cache[key]
+    data = bundle.ood_data if ood else bundle.data
+    models = bundle.unseen if ood else bundle.seen
+    qids = data.test_qids[:n_queries]
+    queries = [data.queries[int(q)] for q in qids]
+    router = bundle.router(models, which)
+    pool = router.predict_pool(queries, models)
+    cache[key] = (router, pool, qids, data, models)
+    return cache[key]

@@ -1,0 +1,47 @@
+"""Budget-aware control (Fig. 8 / Appendix D): hand SCOPE a set-level
+dollar budget; it solves for alpha* with the Prop. D.1 finite breakpoint
+search and routes within the budget.
+
+  PYTHONPATH=src python examples/budget_control.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.scope_estimator import TINY
+from repro.core.estimator import ReasoningEstimator
+from repro.core.router import ScopeRouter
+from repro.launch.train import build_world
+from repro.models import model as M
+from repro.training.sft import build_sft_dataset, train_sft
+
+
+def main():
+    world, data, lib, retr = build_world(400, 150, seed=0)
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    ds = build_sft_dataset(data, lib, retr, max_examples=2500)
+    params, _ = train_sft(params, TINY, ds, steps=200, batch_size=32)
+
+    est = ReasoningEstimator(TINY, params)
+    router = ScopeRouter(est, retr, lib, world.models,
+                         {m: i for i, m in enumerate(data.models)})
+    qids = data.test_qids[:24]
+    queries = [data.queries[int(q)] for q in qids]
+    pool = router.predict_pool(queries, data.models)
+
+    lo = float(pool.cost_hat.min(1).sum())
+    hi = float(pool.cost_hat.max(1).sum())
+    print(f"feasible cost range for {len(qids)} queries: "
+          f"${lo:.4f} .. ${hi:.4f}")
+    for budget in np.geomspace(lo * 1.1, hi, 5):
+        alpha, choices, info = router.route_with_budget(pool, float(budget))
+        real = sum(data.record(int(q), data.models[c]).cost
+                   for q, c in zip(qids, choices))
+        acc = np.mean([data.record(int(q), data.models[c]).y
+                       for q, c in zip(qids, choices)])
+        print(f"budget=${budget:.4f} -> alpha*={alpha:.3f} "
+              f"predicted=${info['expected_cost']:.4f} "
+              f"realized=${real:.4f} acc={acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: build a world, fingerprint a model pool, train a tiny SCOPE
+estimator with hindsight-distillation SFT, and route a few queries.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.scope_estimator import TINY
+from repro.core.estimator import ReasoningEstimator
+from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
+from repro.core.retrieval import AnchorRetriever
+from repro.core.router import ScopeRouter
+from repro.data.datasets import build_scope_data, stratified_anchors
+from repro.data.worldsim import World
+from repro.models import model as M
+from repro.training.sft import build_sft_dataset, train_sft
+
+
+def main():
+    # 1. the model pool world and the SCOPE-60K-style interaction corpus
+    world = World(seed=0)
+    data = build_scope_data(world, n_queries=400, seed=0)
+    print(f"pool: {data.models}")
+
+    # 2. SCOPE-250-style anchors + behavioral fingerprints (Eq. 1)
+    anchors = build_anchor_set(world, stratified_anchors(world, n=150))
+    library = FingerprintLibrary(anchors)
+    for m in data.models:
+        library.onboard(world, m)
+    retriever = AnchorRetriever(anchors)
+
+    # 3. Stage-1 training: SFT via hindsight distillation (§4.3)
+    ds = build_sft_dataset(data, library, retriever, max_examples=2500)
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    params, losses = train_sft(params, TINY, ds, steps=200, batch_size=32)
+    print(f"SFT loss {np.mean(losses[:10]):.2f} -> {np.mean(losses[-10:]):.2f}")
+
+    # 4. route held-out queries at two trade-off settings (§5)
+    est = ReasoningEstimator(TINY, params)
+    router = ScopeRouter(est, retriever, library, world.models,
+                         {m: i for i, m in enumerate(data.models)})
+    qids = data.test_qids[:8]
+    queries = [data.queries[int(q)] for q in qids]
+    pool = router.predict_pool(queries, data.models)
+    for alpha in (0.0, 1.0):
+        choices = router.route(pool, alpha)
+        accs = [data.record(int(q), data.models[c]).y
+                for q, c in zip(qids, choices)]
+        costs = [data.record(int(q), data.models[c]).cost
+                 for q, c in zip(qids, choices)]
+        print(f"alpha={alpha:.1f}: acc={np.mean(accs):.2f} "
+              f"cost=${np.sum(costs):.4f} "
+              f"picked={[data.models[c] for c in choices[:4]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end driver: train the SCOPE estimator for a few hundred steps
+(SFT -> GRPO), evaluate predictive quality, save a checkpoint.
+
+This wraps the production launcher; pass --size 100m for a ~100M-parameter
+backbone (slower on CPU) or keep the default tiny config.
+
+  PYTHONPATH=src python examples/train_estimator.py
+  PYTHONPATH=src python examples/train_estimator.py --size 100m --sft-steps 200
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main())

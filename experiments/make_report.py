@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.  Run after `repro.launch.dryrun --all [--multi-pod]`.
+
+  PYTHONPATH=src python experiments/make_report.py > experiments/tables.md
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def model_flops(arch, shape_name):
+    from repro.configs import get_config, INPUT_SHAPES
+    import numpy as np
+    import jax
+    from repro.launch import specs as S
+    cfg = get_config(arch)
+    params = S.abstract_params(cfg)
+    n_total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    if cfg.has_moe():
+        expert_params = (cfg.num_experts * 3 * cfg.d_model
+                         * cfg.resolved_moe_d_ff * cfg.num_layers)
+        active_expert = ((cfg.num_experts_per_tok + cfg.num_shared_experts)
+                         * 3 * cfg.d_model * cfg.resolved_moe_d_ff
+                         * cfg.num_layers)
+        n_active = n_total - expert_params + active_expert
+    else:
+        n_active = n_total
+    sh = INPUT_SHAPES[shape_name]
+    if sh.mode == "train":
+        return 6.0 * n_active * sh.seq_len * sh.global_batch
+    if sh.mode == "prefill":
+        return 2.0 * n_active * sh.seq_len * sh.global_batch
+    return 2.0 * n_active * sh.global_batch
+
+
+def fmt(v, p=3):
+    if v == 0:
+        return "0"
+    if abs(v) >= 1e4 or abs(v) < 1e-3:
+        return f"{v:.2e}"
+    return f"{v:.{p}f}"
+
+
+def render(path, title):
+    results = json.load(open(path))
+    print(f"\n### {title}\n")
+    print("| arch | shape | status | compile s | temp GB/dev | compute s | "
+          "memory s | collective s | bottleneck | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in results:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | skip: sub-quadratic "
+                  f"required | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+            continue
+        t = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        ratio = mf / max(r["hlo_flops_per_device"] * r["num_devices"], 1.0)
+        temp = r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f} "
+              f"| {temp:.1f} | {fmt(t['compute_s'])} | {fmt(t['memory_s'])} "
+              f"| {fmt(t['collective_s'])} "
+              f"| {t['bottleneck'].replace('_s','')} | {ratio:.2f} |")
+
+
+if __name__ == "__main__":
+    render(os.path.join(ART, "dryrun_single_pod.json"),
+           "Single pod 16x16 (256 chips) — optimized")
+    render(os.path.join(ART, "dryrun_multi_pod.json"),
+           "Multi-pod 2x16x16 (512 chips) — optimized")
+    base = os.path.join(ART, "baseline_single_pod.json")
+    if os.path.exists(base):
+        render(base, "Single pod 16x16 — paper-faithful baseline "
+                     "(pre-hillclimb)")

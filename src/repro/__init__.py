@@ -1,0 +1,4 @@
+"""repro: a multi-pod JAX training/serving framework implementing SCOPE
+(Scalable and Controllable Outcome Performance Estimator) routing."""
+
+__version__ = "0.1.0"

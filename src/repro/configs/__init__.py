@@ -1,0 +1,64 @@
+"""Config registry: ``get_config(arch_id)`` and the assigned lists."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    shape_applicable,
+)
+from repro.configs import (  # noqa: F401
+    starcoder2_3b,
+    whisper_medium,
+    internlm2_1_8b,
+    zamba2_7b,
+    gemma2_9b,
+    qwen2_vl_7b,
+    qwen3_moe_235b_a22b,
+    gemma2_2b,
+    mamba2_1_3b,
+    deepseek_v2_lite_16b,
+    scope_estimator,
+)
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+for _mod in (
+    starcoder2_3b, whisper_medium, internlm2_1_8b, zamba2_7b, gemma2_9b,
+    qwen2_vl_7b, qwen3_moe_235b_a22b, gemma2_2b, mamba2_1_3b,
+    deepseek_v2_lite_16b, scope_estimator,
+):
+    _REGISTRY[_mod.CONFIG.name] = _mod.CONFIG
+_REGISTRY[scope_estimator.TINY.name] = scope_estimator.TINY
+
+ASSIGNED_ARCHS = (
+    "starcoder2-3b",
+    "whisper-medium",
+    "internlm2-1.8b",
+    "zamba2-7b",
+    "gemma2-9b",
+    "qwen2-vl-7b",
+    "qwen3-moe-235b-a22b",
+    "gemma2-2b",
+    "mamba2-1.3b",
+    "deepseek-v2-lite-16b",
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}") from None
+
+
+def list_configs():
+    return dict(_REGISTRY)
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES", "shape_applicable",
+    "get_config", "list_configs", "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,28 @@
+"""Gemma2-9B — dense, alternating local/global attention, logit softcaps
+[arXiv:2408.00118].
+
+long_500k uses the long-context variant: global layers fall back to the
+4096-token sliding window (deviation recorded in DESIGN.md §3).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    arch_type="dense",
+    source="arXiv:2408.00118",
+    num_layers=42,
+    d_model=3584,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab_size=256000,
+    block_pattern=("attn_local", "attn"),
+    sliding_window=4096,
+    logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    sandwich_norm=True,
+    scale_embeddings=True,
+    supports_long_context=True,
+    long_context_window=4096,
+)

@@ -1,0 +1,25 @@
+"""Qwen2-VL-7B language backbone — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+The ViT vision encoder + projector is a STUB: ``input_specs`` provides
+precomputed patch embeddings (batch, num_stub_patches, d_model) which the
+model scatters into the token stream; positions carry 3D (t,h,w) M-RoPE ids.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    source="arXiv:2409.12191",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    block_pattern=("attn",),
+    rope_kind="mrope",
+    mrope_sections=(16, 56, 56),   # sums to head_dim 128
+    rope_theta=1000000.0,
+    num_stub_patches=256,
+    supports_long_context=False,
+)

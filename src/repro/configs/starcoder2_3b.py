@@ -1,0 +1,17 @@
+"""StarCoder2-3B — dense GQA decoder [arXiv:2402.19173]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    arch_type="dense",
+    source="arXiv:2402.19173",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12288,
+    vocab_size=49152,
+    block_pattern=("attn",),
+    rope_theta=999999.0,
+    supports_long_context=False,
+)

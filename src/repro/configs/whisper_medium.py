@@ -1,0 +1,26 @@
+"""Whisper-medium transformer backbone — encoder-decoder [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings of shape (batch, encoder_seq_len, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    arch_type="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,                 # decoder layers
+    num_encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51872,               # 51865 padded to /16 for TP (§Perf)
+    block_pattern=("attn",),
+    is_encoder_decoder=True,
+    encoder_seq_len=1500,
+    rope_kind="none",              # whisper uses learned/sinusoidal positions
+    tie_embeddings=True,
+    mlp_kind="gelu",
+    supports_long_context=False,
+)

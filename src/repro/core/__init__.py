@@ -1,0 +1,17 @@
+"""SCOPE core: the paper's contribution as composable JAX modules.
+
+  fingerprint   — anchor-set behavioral fingerprints (Eq. 1)
+  retrieval     — dense top-K anchor retrieval (Eq. 2-3)
+  serialization — structured prompt/target construction (Eq. 4, App. H)
+  estimator     — reasoning estimator wrapper (Eq. 5)
+  rewards       — gated composite GRPO reward (Eq. 6, 9, 10)
+  utility       — log-min-max cost norm + dynamic-gamma utility (Eq. 11-13)
+  calibration   — anchor-calibrated prior (Eq. 14-15)
+  alpha_search  — budget-controlled alpha (App. D, Prop. D.1)
+  router        — the assembled SCOPE router
+  baselines     — Table 1 / Fig. 7 comparison systems
+  evaluation    — PGR / Avg-A / Cost metrics
+"""
+from repro.core import (  # noqa: F401
+    alpha_search, baselines, calibration, estimator, evaluation, fingerprint,
+    retrieval, rewards, router, serialization, utility)

@@ -1,0 +1,77 @@
+"""Budget-controlled alpha selection (SCOPE Appendix D, Prop. D.1).
+
+For a query set X and budget B, find alpha* maximizing the expected accuracy
+proxy P(alpha; X) subject to C(alpha; X) <= B.  Per Prop. D.1, routing
+decisions under the affine score u = alpha*p + (1-alpha)*s only change at
+pairwise intersection breakpoints; enumerating {0, 1, breakpoints, interval
+representatives} suffices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+def route_for_alpha(p_hat: np.ndarray, s_hat: np.ndarray, alpha: float
+                    ) -> np.ndarray:
+    """Affine decision (Eq. 17) with deterministic lowest-index tiebreak.
+
+    p_hat, s_hat: (Q, M).  Returns argmax indices (Q,).
+    """
+    u = alpha * p_hat + (1.0 - alpha) * s_hat
+    return np.argmax(u, axis=1)            # np.argmax: first max index
+
+
+def breakpoints(p_hat: np.ndarray, s_hat: np.ndarray) -> np.ndarray:
+    """All pairwise intersection alphas in (0, 1) (Eq. 22-23)."""
+    Q, M = p_hat.shape
+    slopes = p_hat - s_hat                  # (Q, M)
+    pts = []
+    for q in range(Q):
+        for i in range(M):
+            di = slopes[q, i]
+            for j in range(i + 1, M):
+                dj = slopes[q, j]
+                if abs(di - dj) < 1e-12:
+                    continue
+                a = (s_hat[q, j] - s_hat[q, i]) / (di - dj)
+                if 0.0 < a < 1.0:
+                    pts.append(a)
+    return np.asarray(sorted(set(pts)))
+
+
+def candidate_alphas(p_hat: np.ndarray, s_hat: np.ndarray) -> np.ndarray:
+    """{0, 1} + breakpoints + interval representatives (Prop. D.1)."""
+    bps = breakpoints(p_hat, s_hat)
+    grid = np.concatenate([[0.0], bps, [1.0]])
+    reps = (grid[:-1] + grid[1:]) / 2.0
+    return np.unique(np.concatenate([grid, reps]))
+
+
+def budget_alpha(p_hat: np.ndarray, s_hat: np.ndarray, c_hat: np.ndarray,
+                 budget: float) -> Tuple[float, np.ndarray, Dict]:
+    """Solve Eq. 20: maximize sum p_hat(chosen) s.t. sum c_hat(chosen) <= B.
+
+    Returns (alpha*, choices (Q,), info).  If no alpha is feasible, falls
+    back to the cheapest-cost alpha (most budget-conservative policy).
+    """
+    cands = candidate_alphas(p_hat, s_hat)
+    best: Optional[Tuple[float, float, float, np.ndarray]] = None
+    cheapest: Optional[Tuple[float, float, float, np.ndarray]] = None
+    for a in cands:
+        choice = route_for_alpha(p_hat, s_hat, a)
+        cost = float(np.sum(c_hat[np.arange(len(choice)), choice]))
+        perf = float(np.sum(p_hat[np.arange(len(choice)), choice]))
+        if cheapest is None or cost < cheapest[1]:
+            cheapest = (a, cost, perf, choice)
+        if cost <= budget and (best is None or perf > best[2]
+                               or (perf == best[2] and cost < best[1])):
+            best = (a, cost, perf, choice)
+    feasible = best is not None
+    if best is None:
+        best = cheapest
+    a, cost, perf, choice = best
+    return float(a), choice, {"expected_cost": cost, "expected_perf": perf,
+                              "feasible": feasible,
+                              "num_candidates": len(cands)}

@@ -1,0 +1,219 @@
+"""Router baselines the paper compares against (Table 1, Fig. 7).
+
+Static: Random / Cheapest / Most-Expensive.
+Supervised classifiers over query embeddings (trained on the same data as
+SCOPE): KNN, MLP, Linear-hinge ("SVM").  Labels follow the oracle policy
+(cheapest model that answers correctly; cheapest overall if none do).
+Decision-rule baselines for the Fig. 7 ablation: augmented Chebyshev
+scalarization and Highest-Cost-under-budget.  Plus test-time scaling (TTS):
+execute every model, keep the best outcome (Fig. 9 token comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utility import normalize_cost
+from repro.data.datasets import ScopeData
+from repro.data.worldsim import Query, World
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Oracle / labels
+# ---------------------------------------------------------------------------
+def oracle_choice(data: ScopeData, qid: int, models: Sequence[str]) -> int:
+    """Cheapest model that answers correctly; cheapest overall otherwise."""
+    recs = [data.record(qid, m) for m in models]
+    correct = [i for i, r in enumerate(recs) if r.y == 1]
+    pool = correct if correct else range(len(models))
+    return min(pool, key=lambda i: recs[i].cost)
+
+
+def oracle_labels(data: ScopeData, qids: Sequence[int],
+                  models: Sequence[str]) -> np.ndarray:
+    return np.array([oracle_choice(data, int(q), models) for q in qids])
+
+
+# ---------------------------------------------------------------------------
+# Static baselines
+# ---------------------------------------------------------------------------
+def random_choices(n: int, num_models: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, num_models, n)
+
+
+def price_rank_choice(world: World, models: Sequence[str],
+                      highest: bool) -> int:
+    prices = [world.models[m].price_out for m in models]
+    return int(np.argmax(prices) if highest else np.argmin(prices))
+
+
+# ---------------------------------------------------------------------------
+# KNN router
+# ---------------------------------------------------------------------------
+class KNNRouter:
+    def __init__(self, k: int = 8):
+        self.k = k
+        self._embs: Optional[np.ndarray] = None
+        self._labels: Optional[np.ndarray] = None
+        self.num_models = 0
+
+    def fit(self, embs: np.ndarray, labels: np.ndarray, num_models: int):
+        self._embs = embs / (np.linalg.norm(embs, axis=1, keepdims=True) + 1e-8)
+        self._labels = labels
+        self.num_models = num_models
+
+    def predict(self, embs: np.ndarray) -> np.ndarray:
+        q = embs / (np.linalg.norm(embs, axis=1, keepdims=True) + 1e-8)
+        sims = q @ self._embs.T
+        nn = np.argsort(-sims, axis=1)[:, : self.k]
+        votes = self._labels[nn]                          # (Q, k)
+        out = np.zeros(len(embs), int)
+        for i, v in enumerate(votes):
+            out[i] = np.bincount(v, minlength=self.num_models).argmax()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# MLP router (jax)
+# ---------------------------------------------------------------------------
+class MLPRouter:
+    def __init__(self, hidden: int = 64, steps: int = 400, lr: float = 1e-2,
+                 seed: int = 0):
+        self.hidden = hidden
+        self.steps = steps
+        self.lr = lr
+        self.seed = seed
+        self.params = None
+
+    def fit(self, embs: np.ndarray, labels: np.ndarray, num_models: int):
+        d = embs.shape[1]
+        key = jax.random.PRNGKey(self.seed)
+        k1, k2 = jax.random.split(key)
+        params = {
+            "w1": jax.random.normal(k1, (d, self.hidden)) * (1 / np.sqrt(d)),
+            "b1": jnp.zeros((self.hidden,)),
+            "w2": jax.random.normal(k2, (self.hidden, num_models))
+                  * (1 / np.sqrt(self.hidden)),
+            "b2": jnp.zeros((num_models,)),
+        }
+        x = jnp.asarray(embs)
+        y = jnp.asarray(labels)
+        ocfg = AdamWConfig(lr=self.lr, warmup_steps=10, total_steps=self.steps,
+                           weight_decay=1e-4)
+        ostate = adamw_init(params)
+
+        def loss_fn(p):
+            h = jnp.tanh(x @ p["w1"] + p["b1"])
+            logits = h @ p["w2"] + p["b2"]
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], 1))
+
+        @jax.jit
+        def step(p, s):
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            p, s = adamw_update(ocfg, g, s, p)
+            return p, s, loss
+
+        for _ in range(self.steps):
+            params, ostate, _ = step(params, ostate)
+        self.params = jax.tree.map(np.asarray, params)
+
+    def predict(self, embs: np.ndarray) -> np.ndarray:
+        p = self.params
+        h = np.tanh(embs @ p["w1"] + p["b1"])
+        return np.argmax(h @ p["w2"] + p["b2"], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Linear hinge router ("SVM")
+# ---------------------------------------------------------------------------
+class LinearSVMRouter:
+    def __init__(self, steps: int = 400, lr: float = 5e-3, margin: float = 1.0,
+                 seed: int = 0):
+        self.steps = steps
+        self.lr = lr
+        self.margin = margin
+        self.seed = seed
+        self.params = None
+
+    def fit(self, embs: np.ndarray, labels: np.ndarray, num_models: int):
+        d = embs.shape[1]
+        params = {
+            "w": jax.random.normal(jax.random.PRNGKey(self.seed),
+                                   (d, num_models)) * (1 / np.sqrt(d)),
+            "b": jnp.zeros((num_models,)),
+        }
+        x = jnp.asarray(embs)
+        y = jnp.asarray(labels)
+        ocfg = AdamWConfig(lr=self.lr, warmup_steps=10, total_steps=self.steps,
+                           weight_decay=1e-3)
+        ostate = adamw_init(params)
+
+        def loss_fn(p):
+            scores = x @ p["w"] + p["b"]                   # (N, M)
+            true = jnp.take_along_axis(scores, y[:, None], 1)
+            viol = jnp.maximum(0.0, self.margin + scores - true)
+            viol = viol * (1 - jax.nn.one_hot(y, scores.shape[1]))
+            return jnp.mean(jnp.sum(viol, axis=1))
+
+        @jax.jit
+        def step(p, s):
+            loss, g = jax.value_and_grad(loss_fn)(p)
+            p, s = adamw_update(ocfg, g, s, p)
+            return p, s, loss
+
+        for _ in range(self.steps):
+            params, ostate, _ = step(params, ostate)
+        self.params = jax.tree.map(np.asarray, params)
+
+    def predict(self, embs: np.ndarray) -> np.ndarray:
+        p = self.params
+        return np.argmax(embs @ p["w"] + p["b"], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Decision-rule baselines over SCOPE's own predictions (Fig. 7 left)
+# ---------------------------------------------------------------------------
+def chebyshev_choices(p_hat: np.ndarray, cost_hat: np.ndarray, alpha: float,
+                      rho: float = 0.05) -> np.ndarray:
+    """Augmented Chebyshev scalarization (minimize the max weighted regret)."""
+    Q, M = p_hat.shape
+    out = np.zeros(Q, int)
+    for q in range(Q):
+        c = normalize_cost(cost_hat[q])
+        t1 = alpha * (1.0 - p_hat[q])
+        t2 = (1.0 - alpha) * c
+        score = np.maximum(t1, t2) + rho * (t1 + t2)
+        out[q] = int(np.argmin(score))
+    return out
+
+
+def highest_cost_choices(cost_hat: np.ndarray, per_query_budget: float
+                         ) -> np.ndarray:
+    """Always the most expensive model within the per-query budget."""
+    Q, M = cost_hat.shape
+    out = np.zeros(Q, int)
+    for q in range(Q):
+        ok = np.where(cost_hat[q] <= per_query_budget)[0]
+        out[q] = int(ok[np.argmax(cost_hat[q][ok])]) if len(ok) \
+            else int(np.argmin(cost_hat[q]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Test-time scaling (Fig. 9)
+# ---------------------------------------------------------------------------
+def tts_outcome(data: ScopeData, qid: int, models: Sequence[str]
+                ) -> Tuple[int, int, float]:
+    """Execute all models; pick best (correct, cheapest).  Returns
+    (accuracy, total tokens executed, total $)."""
+    recs = [data.record(qid, m) for m in models]
+    tokens = sum(r.tokens for r in recs)
+    cost = sum(r.cost for r in recs)
+    acc = int(any(r.y == 1 for r in recs))
+    return acc, tokens, cost

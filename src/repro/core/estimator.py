@@ -1,0 +1,90 @@
+"""The reasoning estimator (SCOPE §4.1, Eq. 5).
+
+Wraps an in-framework LM: conditioned on the serialized retrieval-augmented
+prompt it generates a rationale z then the structured tuple (y_hat, l_hat).
+Besides the parsed binary label we expose the correctness *confidence*
+p(YES)/(p(YES)+p(NO)) at the decision token — Appendix D's p_hat(x, M) in
+[0, 1] used by the budget-controlled alpha search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import tokenizer as tok
+from repro.serving import sampler
+
+
+@dataclasses.dataclass
+class Prediction:
+    y_hat: int
+    len_hat: float
+    well_formed: bool
+    p_conf: float               # P(correct) in [0, 1]
+    pred_tokens: int            # prediction overhead (generated tokens)
+    rationale_len: int
+
+
+class ReasoningEstimator:
+    def __init__(self, cfg: ModelConfig, params, *, cot: bool = True,
+                 max_new_tokens: int = 12, batch_size: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.cot = cot
+        self.max_new_tokens = max_new_tokens
+        self.batch_size = batch_size
+
+    # ------------------------------------------------------------------
+    def predict(self, prompts: List[List[int]], *,
+                temperature: float = 0.0,
+                rng: Optional[jax.Array] = None) -> List[Prediction]:
+        if not prompts:
+            return []
+        lens = {len(p) for p in prompts}
+        assert len(lens) == 1, "structured prompts must be constant-length"
+        arr = np.asarray(prompts, np.int32)
+        out: List[Prediction] = []
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        for i in range(0, len(arr), self.batch_size):
+            key, sub = jax.random.split(key)
+            gen, lg = sampler.generate(
+                self.params, self.cfg, arr[i: i + self.batch_size],
+                max_new_tokens=self.max_new_tokens, temperature=temperature,
+                rng=sub)
+            for g, l in zip(gen, lg):
+                out.append(self._parse_one(g, l))
+        return out
+
+    # ------------------------------------------------------------------
+    def _parse_one(self, gen: np.ndarray, logits: np.ndarray) -> Prediction:
+        toks = [int(t) for t in gen]
+        parsed = tok.parse_prediction(toks)
+        # locate the decision step: first YES/NO after THINK_END (CoT) or at 0
+        dec_pos = None
+        start = 0
+        if tok.THINK in toks and tok.THINK_END in toks:
+            start = toks.index(tok.THINK_END) + 1
+        for j in range(start, len(toks)):
+            if toks[j] in (tok.YES, tok.NO):
+                dec_pos = j
+                break
+        if dec_pos is not None:
+            row = logits[dec_pos].astype(np.float64)
+            m = max(row[tok.YES], row[tok.NO])
+            py = np.exp(row[tok.YES] - m)
+            pn = np.exp(row[tok.NO] - m)
+            conf = float(py / (py + pn))
+        else:
+            conf = 0.5
+        n_gen = int(np.sum(np.asarray(toks) != tok.PAD))
+        rat = 0
+        if tok.THINK in toks and tok.THINK_END in toks:
+            rat = toks.index(tok.THINK_END) - toks.index(tok.THINK) + 1
+        return Prediction(
+            y_hat=parsed["y_hat"], len_hat=parsed["len_hat"],
+            well_formed=parsed["well_formed"], p_conf=conf,
+            pred_tokens=n_gen, rationale_len=rat)

@@ -1,0 +1,30 @@
+"""Dense top-K anchor retrieval (SCOPE §3.2, Eq. 2-3).
+
+Cosine similarity between query and anchor embeddings; the hot path is the
+Pallas ``topk_retrieval`` kernel (``impl="pallas"``), with the XLA twin as
+default on CPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fingerprint import AnchorSet
+from repro.kernels import ops
+
+
+class AnchorRetriever:
+    def __init__(self, anchor_set: AnchorSet, *, impl: str = "xla"):
+        self.anchor_set = anchor_set
+        self.impl = impl
+        self._anchor_embs = jnp.asarray(anchor_set.embeddings)
+
+    def retrieve(self, query_embs: np.ndarray, k: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """query_embs: (Q, d) or (d,).  Returns (sims (Q, k), idx (Q, k))."""
+        q = np.atleast_2d(np.asarray(query_embs, np.float32))
+        scores, idx = ops.topk_retrieval(jnp.asarray(q), self._anchor_embs,
+                                         k, impl=self.impl)
+        return np.asarray(scores), np.asarray(idx)

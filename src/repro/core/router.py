@@ -1,0 +1,139 @@
+"""The SCOPE router: fingerprint retrieval -> pre-hoc estimation ->
+calibrated, budget-aware decision (SCOPE §5, Eq. 15/16/20).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import alpha_search, calibration, serialization, utility
+from repro.core.estimator import Prediction, ReasoningEstimator
+from repro.core.fingerprint import FingerprintLibrary
+from repro.core.retrieval import AnchorRetriever
+from repro.data.worldsim import PoolModel, Query
+
+PROMPT_TOKENS_EST = 200.0       # serialized prompt size charged to the pool model
+
+
+@dataclasses.dataclass
+class PoolPredictions:
+    """Pool-wide pre-hoc estimates for a query set (alpha-independent)."""
+    models: List[str]
+    p_hat: np.ndarray           # (Q, M) correctness confidence in [0,1]
+    y_hat: np.ndarray           # (Q, M) binary labels
+    len_hat: np.ndarray         # (Q, M) predicted completion tokens
+    cost_hat: np.ndarray        # (Q, M) predicted $ per call
+    well_formed: np.ndarray     # (Q, M) format gate
+    pred_overhead: np.ndarray   # (Q, M) estimator tokens spent predicting
+    sims: np.ndarray            # (Q, K) retrieval similarities
+    idx: np.ndarray             # (Q, K) retrieved anchor ids
+
+
+class ScopeRouter:
+    def __init__(self, estimator: ReasoningEstimator,
+                 retriever: AnchorRetriever, library: FingerprintLibrary,
+                 models_meta: Dict[str, PoolModel],
+                 model_indices: Dict[str, int], *, k: int = 5,
+                 gamma_base: float = 1.0, beta: float = 2.0,
+                 w_base: float = 0.2, use_confidence: bool = True):
+        self.estimator = estimator
+        self.retriever = retriever
+        self.library = library
+        self.models_meta = models_meta
+        self.model_indices = model_indices
+        self.k = k
+        self.gamma_base = gamma_base
+        self.beta = beta
+        self.w_base = w_base
+        self.use_confidence = use_confidence
+
+    # ------------------------------------------------------------------
+    def predict_pool(self, queries: Sequence[Query],
+                     models: Sequence[str],
+                     query_embs: Optional[np.ndarray] = None,
+                     rng: Optional[jax.Array] = None) -> PoolPredictions:
+        """Run the estimator for every (query, model) pair — Eq. 24's
+        prediction overhead term; one batched engine pass."""
+        models = list(models)
+        Q, M = len(queries), len(models)
+        if query_embs is None:
+            query_embs = np.stack([q.embedding for q in queries])
+        sims, idx = self.retriever.retrieve(query_embs, self.k)
+
+        prompts: List[List[int]] = []
+        for qi, q in enumerate(queries):
+            for m in models:
+                fp = self.library.get(m)
+                meta = self.models_meta[m]
+                prompts.append(serialization.serialize_prompt(
+                    meta, self.model_indices.get(m, 0), self.library.anchor_set,
+                    fp, sims[qi], idx[qi], q))
+        preds = self.estimator.predict(prompts, rng=rng)
+
+        p_hat = np.zeros((Q, M))
+        y_hat = np.zeros((Q, M), int)
+        len_hat = np.zeros((Q, M))
+        cost_hat = np.zeros((Q, M))
+        wf = np.zeros((Q, M), bool)
+        overhead = np.zeros((Q, M))
+        for qi in range(Q):
+            for mi, m in enumerate(models):
+                pr: Prediction = preds[qi * M + mi]
+                meta = self.models_meta[m]
+                p_hat[qi, mi] = pr.p_conf if self.use_confidence else float(pr.y_hat)
+                y_hat[qi, mi] = pr.y_hat
+                lh = pr.len_hat if pr.well_formed else 512.0
+                len_hat[qi, mi] = lh
+                cost_hat[qi, mi] = (PROMPT_TOKENS_EST * meta.price_in
+                                    + lh * meta.price_out) / 1e6
+                wf[qi, mi] = pr.well_formed
+                overhead[qi, mi] = pr.pred_tokens
+        return PoolPredictions(models, p_hat, y_hat, len_hat, cost_hat, wf,
+                               overhead, sims, idx)
+
+    # ------------------------------------------------------------------
+    def utilities(self, pool: PoolPredictions, alpha: float,
+                  *, with_calibration: bool = True) -> np.ndarray:
+        """Final decision scores (Eq. 15) for each (query, model)."""
+        Q, M = pool.p_hat.shape
+        u_final = np.zeros((Q, M))
+        wc = utility.w_cal(alpha, w_base=self.w_base) if with_calibration else 0.0
+        fps = {m: self.library.get(m) for m in pool.models}
+        for qi in range(Q):
+            c_norm = utility.normalize_cost(pool.cost_hat[qi])
+            u_pred = utility.predicted_utility(
+                pool.p_hat[qi], c_norm, alpha,
+                gamma_base=self.gamma_base, beta=self.beta)
+            if with_calibration and wc > 0.0:
+                u_cal = calibration.calibration_utilities(
+                    fps, pool.models, pool.idx[qi], pool.sims[qi], alpha,
+                    gamma_base=self.gamma_base, beta=self.beta)
+            else:
+                u_cal = np.zeros(M)
+            u_final[qi] = (1.0 - wc) * u_pred + wc * u_cal
+        return u_final
+
+    def route(self, pool: PoolPredictions, alpha: float,
+              *, with_calibration: bool = True) -> np.ndarray:
+        """argmax model index per query (Eq. 15)."""
+        return np.argmax(self.utilities(pool, alpha,
+                                        with_calibration=with_calibration),
+                         axis=1)
+
+    # ------------------------------------------------------------------
+    def route_with_budget(self, pool: PoolPredictions, budget: float
+                          ) -> Tuple[float, np.ndarray, Dict]:
+        """Appendix D: pick alpha* maximizing expected accuracy s.t. the
+        set-level budget, via the Prop. D.1 finite breakpoint search."""
+        Q, M = pool.p_hat.shape
+        s_hat = np.zeros((Q, M))
+        for qi in range(Q):
+            c_norm = utility.normalize_cost(pool.cost_hat[qi])
+            s_hat[qi] = utility.cost_score(c_norm, 1.0,
+                                           gamma_base=self.gamma_base,
+                                           beta=0.0)
+        return alpha_search.budget_alpha(pool.p_hat, s_hat, pool.cost_hat,
+                                         budget)

@@ -1,0 +1,3 @@
+"""Data substrate: world simulator, SCOPE-60K/250 synthesis, tokenizer,
+batching pipeline."""
+from repro.data import datasets, pipeline, tokenizer, worldsim  # noqa: F401

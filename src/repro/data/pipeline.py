@@ -1,0 +1,65 @@
+"""Batching / padding / sharded host->device pipeline."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import PAD
+
+
+def pad_to(seq: Sequence[int], length: int, pad: int = PAD) -> np.ndarray:
+    out = np.full((length,), pad, np.int32)
+    out[: len(seq)] = np.asarray(seq[:length], np.int32)
+    return out
+
+
+def make_lm_batch(prompts: List[List[int]], targets: List[List[int]],
+                  max_len: int) -> Dict[str, np.ndarray]:
+    """Concatenate prompt+target; labels = next-token, -100 on prompt/pad.
+
+    Loss applies only to target tokens (SFT over the generated suffix, as in
+    hindsight distillation — the prompt is conditioning, not supervision).
+    """
+    bsz = len(prompts)
+    tokens = np.full((bsz, max_len), PAD, np.int32)
+    labels = np.full((bsz, max_len), -100, np.int32)
+    for i, (p, t) in enumerate(zip(prompts, targets)):
+        seq = (p + t)[:max_len]
+        tokens[i, : len(seq)] = seq
+        # label at position j predicts tokens[j+1]
+        start = max(len(p) - 1, 0)
+        end = min(len(seq) - 1, max_len - 1)
+        for j in range(start, end + 1):
+            nxt = j + 1
+            if nxt < len(seq):
+                labels[i, j] = seq[nxt]
+    return {"tokens": tokens, "labels": labels}
+
+
+def batches(data: Dict[str, np.ndarray], batch_size: int, *,
+            shuffle: bool = True, seed: int = 0, drop_last: bool = True
+            ) -> Iterator[Dict[str, jnp.ndarray]]:
+    n = len(next(iter(data.values())))
+    idx = np.arange(n)
+    if shuffle:
+        np.random.default_rng(seed).shuffle(idx)
+    stop = n - (n % batch_size) if drop_last else n
+    for i in range(0, stop, batch_size):
+        sel = idx[i: i + batch_size]
+        yield {k: jnp.asarray(v[sel]) for k, v in data.items()}
+
+
+def stack_examples(examples: List[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    keys = examples[0].keys()
+    return {k: np.stack([e[k] for e in examples]) for k in keys}
+
+
+def shard_batch(batch: Dict[str, jnp.ndarray], mesh,
+                spec) -> Dict[str, jnp.ndarray]:
+    """Place a host batch onto the mesh with the given PartitionSpec."""
+    from jax.sharding import NamedSharding
+    sharding = NamedSharding(mesh, spec)
+    return {k: jax.device_put(v, sharding) for k, v in batch.items()}

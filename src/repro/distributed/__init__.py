@@ -1,0 +1,2 @@
+"""Distribution: meshes, sharding rules, collectives-by-construction."""
+from repro.distributed import sharding  # noqa: F401

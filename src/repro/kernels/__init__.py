@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (+ XLA twins and pure-jnp oracles).
+
+Kernels:
+  flash_attention — online-softmax attention (causal/window/softcap/GQA)
+  ssd_scan        — Mamba2 SSD chunk scan with VMEM-carried state
+  topk_retrieval  — anchor-set cosine top-k (SCOPE fingerprint retrieval)
+
+``ops`` holds the dispatching wrappers used by model code; ``ref`` the
+oracles used by tests.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for single-token decode attention.
+
+The decode hot spot is a memory-bound sweep of the KV cache: one query
+token attends to S cached keys.  The grid walks KV blocks sequentially per
+(batch, kv-head); an online-softmax accumulator for all grouped query
+heads lives in VMEM scratch, so the cache streams HBM->VMEM exactly once
+— the roofline-optimal traffic for this op.
+
+Masking supports a per-batch valid length (``cache_len``) and an optional
+sliding window (both used by the ring-buffer serving caches).
+
+Validated against ``ref.attention`` / ``ops.decode_attention`` in
+interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, window: int, softcap: float,
+                   block_k: int, seq_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (g, bk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = len_ref[0]
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (kpos < valid) & (kpos < seq_k)
+    if window > 0:
+        mask &= kpos >= (valid - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, window: int = 0, softcap: float = 0.0,
+                     scale: Optional[float] = None, block_k: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: (b, hq, 1, d); caches: (b, hkv, S, d[v]); cache_len: (b,) or
+    scalar valid lengths.  Returns (b, hq, 1, dv)."""
+    b, hq, _, d = q.shape
+    hkv, S = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (S + pad) // block_k
+
+    qg = q.reshape(b, hkv, g, d)[:, :, None]             # (b, hkv, 1, g, d)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap,
+        block_k=block_k, seq_k=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h, ik: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, ik: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, ik: (b_, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dv), lambda b_, h, ik: (b_, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda b_, h, ik: (b_, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len, qg[:, :, 0], k_cache, v_cache)
+    return out.reshape(b, hq, 1, dv)

@@ -1,0 +1,166 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth for kernel tests (``assert_allclose`` sweeps) and
+the small-shape fallback implementations.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: int = 0,
+              softcap: float = 0.0,
+              scale: Optional[float] = None,
+              q_offset: int = 0) -> jax.Array:
+    """Naive masked softmax attention.
+
+    q: (b, hq, sq, d); k: (b, hkv, sk, d); v: (b, hkv, sk, dv) with
+    hq % hkv == 0 (dv may differ from d, e.g. MLA).  ``window`` > 0
+    restricts attention to the last ``window`` keys (sliding window,
+    inclusive of self).  ``q_offset`` is the absolute position of q[0]
+    (for decode: q_offset = sk - sq).
+    """
+    b, hq, sq, d = q.shape
+    dv = v.shape[-1]
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, group, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+
+    if softcap > 0.0:
+        logits = softcap_fn(logits, softcap)
+
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def softcap_fn(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked) — follows the minimal listing of
+# arXiv:2405.21060 App. B, with explicit initial state for decode handoff.
+# ---------------------------------------------------------------------------
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k]."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+        C: jax.Array, *, chunk: int,
+        init_state: Optional[jax.Array] = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (b, l, h, p)  per-head inputs
+    dt: (b, l, h)     positive step sizes (already softplus'd)
+    A:  (h,)          negative per-head decay rates
+    B:  (b, l, n)     input projections (single group)
+    C:  (b, l, n)     output projections
+    Returns y (b, l, h, p) and final state (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    a = dt * A[None, None, :]                       # (b, l, h) log-decay <= 0
+    xdt = x * dt[..., None]                         # discretized input
+
+    # reshape into chunks
+    ar = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)        # (b,h,c,t)
+    xr = xdt.reshape(b, nc, chunk, h, p)                         # (b,c,t,h,p)
+    Br = B.reshape(b, nc, chunk, n)                              # (b,c,t,n)
+    Cr = C.reshape(b, nc, chunk, n)
+
+    # 1. intra-chunk (diagonal block) output
+    L = jnp.exp(_segsum(ar))                                     # (b,h,c,t,t)
+    y_diag = jnp.einsum("bcsn,bctn,bhcst,bcthp->bcshp", Cr, Br, L, xr)
+
+    # 2. chunk-final states
+    a_cum = jnp.cumsum(ar, axis=-1)                              # (b,h,c,t)
+    a_total = a_cum[..., -1]                                     # (b,h,c)
+    decay_states = jnp.exp(a_total[..., None] - a_cum)           # (b,h,c,t)
+    states = jnp.einsum("bctn,bhct,bcthp->bchpn", Br, decay_states, xr)
+
+    # 3. inter-chunk recurrence over chunk states
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st_in, a_tot = inp                                       # (b,h,p,n),(b,h)
+        new = carry * jnp.exp(a_tot)[..., None, None] + st_in
+        return new, carry                                        # emit state *entering* chunk
+
+    final_state, entry_states = jax.lax.scan(
+        step,
+        init_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         a_total.transpose(2, 0, 1)),
+    )
+    # entry_states: (c, b, h, p, n) = state at the *start* of each chunk
+
+    # 4. inter-chunk (off-diagonal) output: y_off = C_t · (decay_in · h_entry)
+    decay_out = jnp.exp(a_cum)                                   # (b,h,c,t)
+    y_off = jnp.einsum("bcsn,bhcs,cbhpn->bcshp",
+                       Cr, decay_out, entry_states)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent SSD update.
+
+    state: (b, h, p, n); x: (b, h, p); dt: (b, h); B, C: (b, n).
+    Returns (y (b, h, p), new_state).
+    """
+    a = jnp.exp(dt * A[None, :])                        # (b, h)
+    upd = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], B)
+    new_state = state * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Top-k cosine retrieval
+# ---------------------------------------------------------------------------
+def topk_retrieval(queries: jax.Array, anchors: jax.Array, k: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Cosine-similarity top-k.
+
+    queries: (q, d); anchors: (n, d).  Returns (scores (q, k), idx (q, k)).
+    """
+    qn = queries / (jnp.linalg.norm(queries, axis=-1, keepdims=True) + 1e-8)
+    an = anchors / (jnp.linalg.norm(anchors, axis=-1, keepdims=True) + 1e-8)
+    sims = qn @ an.T
+    return jax.lax.top_k(sims, k)

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import ``repro.launch.dryrun`` from library code — it forces
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time.
+"""

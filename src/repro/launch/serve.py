@@ -1,0 +1,83 @@
+"""SCOPE routing service driver.
+
+Loads (or quickly trains) an estimator, fingerprints the pool — including
+the unseen OOD models, which need NO retraining — and serves a batch of
+queries at a chosen alpha or under a set-level budget.
+
+  PYTHONPATH=src python -m repro.launch.serve --alpha 0.6
+  PYTHONPATH=src python -m repro.launch.serve --budget 0.5 --ood
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.core.estimator import ReasoningEstimator
+from repro.core.router import ScopeRouter
+from repro.data.datasets import build_scope_data
+from repro.launch.train import build_world, estimator_config
+from repro.models import model as M
+from repro.serving.router_service import RouterService
+from repro.training import checkpoint
+from repro.training.sft import build_sft_dataset, train_sft
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="tiny")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--alpha", type=float, default=None)
+    ap.add_argument("--budget", type=float, default=None)
+    ap.add_argument("--ood", action="store_true",
+                    help="route over the unseen (OOD) model pool")
+    ap.add_argument("--queries", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.alpha is None and args.budget is None:
+        args.alpha = 0.6
+
+    cfg = estimator_config(args.size)
+    world, data, lib, retr = build_world(600, 250, args.seed)
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.checkpoint:
+        params = checkpoint.load(args.checkpoint, params)
+    else:
+        print("no checkpoint given - quick SFT bootstrap...")
+        ds = build_sft_dataset(data, lib, retr, max_examples=3000,
+                               seed=args.seed)
+        params, _ = train_sft(params, cfg, ds, steps=250, batch_size=64)
+
+    if args.ood:
+        pool = [m.name for m in world.pool if not m.seen]
+        # training-free onboarding: fingerprints only, no weight updates
+        for m in pool:
+            if m not in lib:
+                lib.onboard(world, m, seed=args.seed + 99)
+        data = build_scope_data(world, n_queries=300, models=pool,
+                                seed=args.seed + 1, difficulty_shift=0.9)
+    else:
+        pool = data.models
+
+    est = ReasoningEstimator(cfg, params)
+    router = ScopeRouter(est, retr, lib, world.models,
+                         {m: i for i, m in enumerate(pool)})
+    service = RouterService(router, data, pool)
+    qids = data.test_qids[: args.queries]
+    report = service.serve(qids, alpha=args.alpha, budget=args.budget)
+    print(json.dumps({
+        "alpha": report.alpha,
+        "accuracy": report.accuracy,
+        "total_cost_usd": round(report.total_cost, 4),
+        "exec_tokens": report.exec_tokens,
+        "prediction_overhead_tokens": report.overhead_tokens,
+        "portfolio": {k: round(v, 3) for k, v in
+                      report.per_model_share.items() if v > 0},
+    }, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct input specs + step functions for the dry-run.
+
+``input_specs(cfg, shape)`` follows the brief: weak-type-correct, shardable
+stand-ins, no device allocation.  Decode shapes lower ``serve_step`` (ONE
+token against a seq_len cache); train/prefill lower the full sequence.
+Audio/VLM stub frontends surface here as precomputed embedding inputs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    INPUT_SHAPES, InputShape, ModelConfig, long_context_variant,
+    shape_applicable)
+from repro.models import model as M
+from repro.models.common import dtype_of
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def resolved_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if shape.name == "long_500k":
+        return long_context_variant(cfg)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    act_dt = dtype_of(cfg.dtype)
+    if shape.mode in ("train", "prefill"):
+        batch: Dict[str, Any] = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.mode == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+        if cfg.is_encoder_decoder:
+            batch["enc_features"] = _sds((b, cfg.encoder_seq_len, cfg.d_model),
+                                         act_dt)
+        if cfg.num_stub_patches > 0:
+            batch["image_embeds"] = _sds((b, cfg.num_stub_patches, cfg.d_model),
+                                         act_dt)
+        if cfg.rope_kind == "mrope":
+            batch["positions_3d"] = _sds((3, b, s), jnp.int32)
+        return {"batch": batch}
+    # decode: ONE new token + caches holding seq_len entries
+    token = _sds((b, 1), jnp.int32)
+    caches = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    return {"token": token, "caches": caches}
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: M.init_params(k, cfg), key)
+
+
+def abstract_opt_state(params_shapes):
+    return jax.eval_shape(adamw_init, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Step functions (what actually lowers)
+# ---------------------------------------------------------------------------
+def _split_microbatches(batch, m: int):
+    """Reshape every batch leaf to (m, b/m, ...); positions_3d batches on
+    axis 1."""
+    out = {}
+    for k, v in batch.items():
+        if k == "positions_3d":
+            b = v.shape[1]
+            out[k] = v.reshape(v.shape[0], m, b // m, *v.shape[2:]
+                               ).swapaxes(0, 1)
+        else:
+            b = v.shape[0]
+            out[k] = v.reshape(m, b // m, *v.shape[1:])
+    return out
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    microbatches: int = 1):
+    """Train step with optional gradient accumulation.
+
+    ``microbatches`` > 1 scans over batch slices accumulating f32 grads
+    (sharded like the params, so the accumulator is tiny) — the standard
+    lever for fitting large-activation train steps into HBM; the dry-run
+    auto-doubles it until memory_analysis() fits the 16 GB chip budget.
+    """
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        else:
+            mb = _split_microbatches(batch, microbatches)
+
+            def body(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(
+                    lambda p: M.loss_fn(p, cfg, mbatch), has_aux=True)(params)
+                gsum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, microbatches: int = 1):
+    def prefill_step(params, batch):
+        if microbatches == 1:
+            logits, _ = M.forward_train(params, cfg, batch)
+            return logits
+        mb = _split_microbatches(batch, microbatches)
+
+        def body(_, mbatch):
+            logits, _ = M.forward_train(params, cfg, mbatch)
+            return None, logits
+
+        _, out = jax.lax.scan(body, None, mb)
+        return out.reshape(-1, *out.shape[2:])
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, caches):
+        # the new token lands at the last cache slot (cache holds seq_len)
+        pos = _cache_capacity(caches) - 1
+        logits, new_caches = M.decode_step(params, cfg, token, caches, pos)
+        return logits, new_caches
+    return serve_step
+
+
+def _cache_capacity(caches) -> int:
+    """Max sequence capacity across KV leaves (static)."""
+    best = 1
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("k", "v") and leaf.ndim == 5:
+            best = max(best, leaf.shape[3])
+        if name in ("c_kv", "k_rope") and leaf.ndim == 4:
+            best = max(best, leaf.shape[2])
+    return best

@@ -1,0 +1,4 @@
+"""Composable model definitions for every assigned architecture family."""
+from repro.models import model  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step, forward_train, init_cache, init_params, loss_fn, prefill)

@@ -1,0 +1,264 @@
+"""Attention blocks: GQA (RoPE / M-RoPE / softcap / sliding window),
+cross-attention (enc-dec), and Multi-head Latent Attention (DeepSeek-V2).
+
+Shapes: activations are (batch, seq, d_model); heads are split internally.
+Every block exposes a full-sequence path (train/prefill, returns the KV
+cache slice) and a single-token decode path (reads/writes a cache).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import rope as rope_mod
+from repro.models.common import dense_init, init_rmsnorm, rmsnorm, shard_activation
+
+
+def resolve_window(cfg: ModelConfig, kind: str) -> int:
+    if cfg.force_window > 0:
+        return cfg.force_window
+    if kind == "attn_local":
+        return cfg.sliding_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg: ModelConfig) -> Dict:
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd)),
+        "wk": dense_init(ks[1], (d, hkv * hd)),
+        "wv": dense_init(ks[2], (d, hkv * hd)),
+        "wo": dense_init(ks[3], (hq * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _gqa_qkv(p, cfg: ModelConfig, x, cos, sin):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.rmsnorm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.rmsnorm_eps)
+    if cos is not None:
+        q = rope_mod.apply_rope(q, cos, sin)
+        k = rope_mod.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_full(p, cfg: ModelConfig, x, cos, sin, *, kind: str = "attn",
+             causal: bool = True) -> Tuple[jax.Array, Dict]:
+    """Full-sequence GQA.  Returns (y, {"k", "v"} cache slice)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = _gqa_qkv(p, cfg, x, cos, sin)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    qh = shard_activation(qh, "batch", "heads", None, None)
+    out = ops.flash_attention(
+        qh, kh, vh, causal=causal,
+        window=resolve_window(cfg, kind),
+        softcap=cfg.logit_softcap,
+        scale=cfg.attn_scale or None)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.num_heads * hd)
+    y = y @ p["wo"]
+    return y, {"k": kh, "v": vh}
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
+               *, kind: str = "attn") -> Tuple[jax.Array, Dict]:
+    """Single-token GQA decode.
+
+    x: (b, 1, d); cache["k"/"v"]: (b, hkv, S, hd); pos: scalar int — number
+    of tokens already generated (the new token has absolute position
+    ``pos``).
+
+    Windowed layers whose cache is allocated at exactly ``window`` entries
+    run in **ring-buffer mode**: the new KV lands at ``pos % window`` and
+    attention sees min(pos+1, window) valid slots — softmax is permutation
+    invariant, so slot order is irrelevant.  This keeps long_500k decode
+    memory/traffic at O(window), not O(context) (EXPERIMENTS.md §Perf HC3).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _gqa_qkv(p, cfg, x, cos, sin)
+    window = resolve_window(cfg, kind)
+    S_cache = cache["k"].shape[2]
+    ring = window > 0 and S_cache == window
+    if ring:
+        slot = jnp.asarray(pos) % window
+        valid = jnp.minimum(jnp.asarray(pos) + 1, window)
+        attn_window = 0                     # ring already enforces it
+    else:
+        slot = pos
+        valid = jnp.asarray(pos) + 1
+        attn_window = window
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype), slot, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), slot, axis=2)
+    out = ops.decode_attention(
+        q.transpose(0, 2, 1, 3), kc, vc, valid,
+        window=attn_window,
+        softcap=cfg.logit_softcap,
+        scale=cfg.attn_scale or None)
+    y = out.transpose(0, 2, 1, 3).reshape(b, 1, cfg.num_heads * hd)
+    return y @ p["wo"], {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def init_cross(key, cfg: ModelConfig) -> Dict:
+    d, hq = cfg.d_model, cfg.num_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, hq * hd)),
+        "wk": dense_init(ks[1], (d, hq * hd)),
+        "wv": dense_init(ks[2], (d, hq * hd)),
+        "wo": dense_init(ks[3], (hq * hd, d)),
+    }
+
+
+def cross_kv(p, cfg: ModelConfig, enc_out) -> Dict:
+    """Project encoder output once; cached for the whole decode."""
+    b, se, _ = enc_out.shape
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(b, se, hq, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"]).reshape(b, se, hq, hd).transpose(0, 2, 1, 3)
+    return {"ck": k, "cv": v}
+
+
+def cross_attend(p, cfg: ModelConfig, x, kv: Dict) -> jax.Array:
+    b, s, _ = x.shape
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    out = ops.flash_attention(q, kv["ck"], kv["cv"], causal=False)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return y @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 family)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, h * (nope + rdim))),
+        "w_dkv": dense_init(ks[1], (d, lora + rdim)),
+        "kv_norm": init_rmsnorm(lora),
+        "w_uk": dense_init(ks[2], (lora, h * nope)),
+        "w_uv": dense_init(ks[3], (lora, h * vdim)),
+        "wo": dense_init(ks[4], (h * vdim, d)),
+    }
+
+
+def _mla_q(p, cfg: ModelConfig, x, cos, sin):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope_mod.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _mla_compress(p, cfg: ModelConfig, x, cos, sin):
+    """Down-project to the latent cache: c_kv (b,s,lora) + k_rope (b,s,rdim)."""
+    lora, rdim = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    dkv = x @ p["w_dkv"]
+    c_kv = rmsnorm(p["kv_norm"], dkv[..., :lora], cfg.rmsnorm_eps)
+    k_rope = dkv[..., lora:][:, :, None, :]                 # 1 shared head
+    k_rope = rope_mod.apply_rope(k_rope, cos, sin)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_full(p, cfg: ModelConfig, x, cos, sin, *, kind: str = "mla",
+             causal: bool = True) -> Tuple[jax.Array, Dict]:
+    """Full-sequence MLA (naive/up-projected form for train & prefill)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, cos, sin)
+    c_kv, k_rope = _mla_compress(p, cfg, x, cos, sin)
+
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, nope)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, vdim)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rdim))
+
+    q = jnp.concatenate([q_nope, q_rope], -1).transpose(0, 2, 1, 3)
+    k = jnp.concatenate([k_nope, k_rope_h], -1).transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    scale = (nope + rdim) ** -0.5
+    out = ops.flash_attention(q, k, vh, causal=causal, scale=scale,
+                              window=resolve_window(cfg, kind),
+                              softcap=cfg.logit_softcap)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
+    return y @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
+               *, kind: str = "mla") -> Tuple[jax.Array, Dict]:
+    """Absorbed-form MLA decode: attention runs in the latent space.
+
+    cache: {"c_kv": (b, S, lora), "k_rope": (b, S, rdim)}.  The up
+    projections w_uk/w_uv are folded into the query / output instead of
+    re-expanding the cache each step (the TPU-friendly serving form — the
+    naive form would up-project all S cached entries per token).
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, cfg, x, cos, sin)            # (b,1,h,·)
+    c_kv_new, k_rope_new = _mla_compress(p, cfg, x, cos, sin)
+
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # absorb w_uk into q: q_lat[b,h,lora] = sum_n q_nope[b,h,n] w_uk[lora,h,n]
+    w_uk = p["w_uk"].reshape(lora, h, nope)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (nope + rdim) ** -0.5
+    s_lat = jnp.einsum("bhl,bsl->bhs", q_lat,
+                       ckv.astype(jnp.float32)) * scale
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                        krope.astype(jnp.float32)) * scale
+    s = s_lat + s_rope
+    if cfg.logit_softcap > 0.0:
+        s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+    S = ckv.shape[1]
+    kpos = jnp.arange(S)[None, None]
+    mask = kpos <= pos
+    window = resolve_window(cfg, kind)
+    if window > 0:
+        mask = mask & (kpos > pos - window)
+    s = jnp.where(mask, s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", probs, ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(lora, h, vdim)
+    v_ctx = jnp.einsum("bhl,lhv->bhv", ctx_lat, w_uv.astype(jnp.float32))
+    y = v_ctx.reshape(b, 1, h * vdim).astype(x.dtype) @ p["wo"]
+    return y, {"c_kv": ckv, "k_rope": krope}

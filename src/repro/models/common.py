@@ -1,0 +1,123 @@
+"""Shared model building blocks: norms, initializers, sharding helpers.
+
+Parameters are plain nested dicts (pytrees) of jnp arrays.  Every submodule
+exposes ``init_*(key, cfg) -> params`` and a pure ``apply`` function.  Layer
+stacks are built by vmapping ``init`` over a leading layer axis and scanning
+the apply function, so a 94-layer model traces a single layer body.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Ambient mesh for activation sharding constraints (set by the launcher).
+# ---------------------------------------------------------------------------
+_MESH_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh, rules: Optional[dict] = None):
+    """Install an ambient mesh so model code can constrain activations.
+
+    ``rules`` maps logical names ("batch", "model") to mesh axis names (or
+    tuples).  Outside this context ``shard_activation`` is the identity, so
+    all model code runs unchanged on a single CPU device.
+    """
+    prev = getattr(_MESH_STATE, "ctx", None)
+    _MESH_STATE.ctx = (mesh, rules or {})
+    try:
+        yield
+    finally:
+        _MESH_STATE.ctx = prev
+
+
+def shard_activation(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint using the ambient mesh, if any.
+
+    ``logical_axes`` has one entry per array dim; entries are logical names
+    resolved through the installed rules, or None for replicated dims.
+    """
+    ctx = getattr(_MESH_STATE, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def resolve(dim_size, logical):
+        if logical is None:
+            return None
+        axes = rules.get(logical)
+        if axes is None:
+            return None
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = 1
+        for a in axes_t:
+            total *= sizes[a]
+        if dim_size % total != 0:
+            return None                  # skip non-divisible constraints
+        return axes
+    spec = P(*(resolve(x.shape[i], a) for i, a in enumerate(logical_axes)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype=jnp.float32, scale: float = 1.0):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(1, shape[-1])
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def stacked_init(init_fn, key, num: int):
+    """vmap an init function over a leading layer axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, num))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Standard sinusoidal position table (whisper-style)."""
+    pos = jnp.arange(length)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, dim, 2).astype(jnp.float32)
+                  * (-jnp.log(10000.0) / dim))
+    tab = jnp.zeros((length, dim), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab.astype(dtype)

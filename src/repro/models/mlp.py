@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen/gemma family) and GeLU (whisper)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, shard_activation
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "gelu":
+        return {"w1": dense_init(ks[0], (d, f)),
+                "w2": dense_init(ks[1], (f, d))}
+    return {"wi_gate": dense_init(ks[0], (d, f)),
+            "wi_up": dense_init(ks[1], (d, f)),
+            "wo": dense_init(ks[2], (f, d))}
+
+
+def mlp_forward(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind == "gelu":
+        h = jax.nn.gelu(x @ p["w1"])
+        h = shard_activation(h, "batch", None, "ffn")
+        return h @ p["w2"]
+    h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    h = shard_activation(h, "batch", None, "ffn")
+    return h @ p["wo"]

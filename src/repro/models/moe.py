@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN (Qwen3-MoE, DeepSeek-V2 style).
+
+TPU-idiomatic token-choice routing with capacity buckets, in the
+**einsum-dispatch** form (Mesh-TF / Flaxformer lineage):
+
+  1. tokens are regrouped into routing groups of <= MOE_GROUP tokens —
+     small groups keep the (T, E, C) dispatch tensor tiny (C scales with
+     group size) while remaining MXU-friendly;
+  2. per group, top-k choices get a position-in-expert via a cumsum rank;
+     tokens beyond capacity drop (capacity_factor);
+  3. dispatch/combine are one-hot einsums — **no scatter/gather**: data-
+     dependent scatters defeat the SPMD partitioner, which replicates the
+     (G, E, C, d) buffer and all-reduces it across the mesh (measured:
+     80 TB/device of all-reduce on qwen3-moe train_4k; see EXPERIMENTS.md
+     §Perf HC2).  Einsums shard cleanly: the expert axis resharding lowers
+     to the expected expert-parallel all-to-all;
+  4. per-expert SwiGLU runs as batched einsums on the MXU (experts sharded
+     on the ``model`` axis);
+  5. shared experts (DeepSeek) are a dense SwiGLU on every token.
+
+The load-balance auxiliary loss is the switch-style E * sum(f_e * P_e).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, shard_activation
+from repro.models.mlp import init_mlp, mlp_forward
+
+MOE_GROUP = 256
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.resolved_moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), scale=1.0),
+        "wi_gate": jax.vmap(lambda k_: dense_init(k_, (d, f)))(
+            jax.random.split(ks[1], e)),
+        "wi_up": jax.vmap(lambda k_: dense_init(k_, (d, f)))(
+            jax.random.split(ks[2], e)),
+        "wo": jax.vmap(lambda k_: dense_init(k_, (f, d)))(
+            jax.random.split(ks[3], e)),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = init_mlp(ks[4], cfg,
+                               d_ff=cfg.resolved_moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _group_size(total: int) -> int:
+    g = min(MOE_GROUP, total)
+    while total % g != 0:
+        g -= 1
+    return g
+
+
+def moe_forward(p: Dict, cfg: ModelConfig, x: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) -> (y, aux_load_balance_loss)."""
+    b, s, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    total = b * s
+    T = _group_size(total)
+    G = total // T
+    C = max(int(math.ceil(T * k / E * cfg.capacity_factor)), 1)
+
+    xg = x.reshape(G, T, d)
+    xg = shard_activation(xg, "batch", None, None)
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G, T, E)
+    top_p, top_i = jax.lax.top_k(probs, k)                     # (G, T, k)
+    top_p = top_p / (jnp.sum(top_p, -1, keepdims=True) + 1e-9)
+
+    # --- position-in-expert via cumsum rank over the (T*k) flat order ----
+    oe = jax.nn.one_hot(top_i, E, dtype=jnp.float32)           # (G, T, k, E)
+    oe_flat = oe.reshape(G, T * k, E)
+    pos = jnp.cumsum(oe_flat, axis=1) * oe_flat                # rank occurrences
+    pos = jnp.sum(pos, axis=-1).reshape(G, T, k) - 1.0         # (G, T, k)
+    keep = (pos < C).astype(jnp.float32)
+    pos_c = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+
+    # --- one-hot dispatch / combine tensors (no scatter) -----------------
+    # build in the activation dtype: the (G,T,E,C) products are the largest
+    # routing tensors and exact in bf16 (entries are 0/1 and top-k probs)
+    oe_a = oe.astype(x.dtype)
+    oc = (jax.nn.one_hot(pos_c, C, dtype=jnp.float32)
+          * keep[..., None]).astype(x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oe_a, oc)         # (G, T, E, C)
+    combine = jnp.einsum("gtke,gtkc->gtec", oe_a,
+                         oc * top_p[..., None].astype(x.dtype))
+    dispatch = shard_activation(dispatch, "batch", None, None, None)
+    combine = shard_activation(combine, "batch", None, None, None)
+
+    # --- dispatch to experts ---------------------------------------------
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)     # (G, E, C, d)
+    expert_in = shard_activation(expert_in, "batch", None, None, None)
+
+    # --- expert compute: weight-gathered expert parallelism --------------
+    # Tokens stay sharded on (pod, data); the (much smaller) expert weights
+    # are gathered per layer instead.  Resharding tokens group->expert made
+    # GSPMD all-gather the full global expert_in (86 GB/layer); weights are
+    # 4.8 GB/layer — an 18x collective reduction (EXPERIMENTS.md §Perf HC2).
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["wi_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", expert_in, p["wi_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"])      # (G, E, C, d)
+    expert_out = shard_activation(expert_out, "batch", None, None, None)
+
+    # --- combine ----------------------------------------------------------
+    y = jnp.einsum("gtec,gecd->gtd", combine, expert_out)
+    y = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts > 0:
+        y = y + mlp_forward(p["shared"], cfg, x)
+
+    # --- load-balance aux loss -------------------------------------------
+    frac_tokens = jnp.sum(oe, axis=(0, 1, 2)) / (G * T * k)    # f_e
+    mean_prob = jnp.mean(probs, axis=(0, 1))                   # P_e
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+    return y, aux

@@ -1,0 +1,70 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head dim into (temporal, height, width) sections; each
+section rotates by its own position stream.  For text-only tokens all three
+streams coincide, recovering standard RoPE.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2).astype(jnp.float32)
+                            / head_dim))
+
+
+def _rotate_half(x: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., seq) int32 -> cos/sin of shape (..., seq, head_dim)."""
+    freqs = rope_frequencies(head_dim, theta)           # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    angles = jnp.concatenate([angles, angles], axis=-1)  # (..., s, hd)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (batch, seq, heads, head_dim); cos/sin: (batch, seq, head_dim)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return (x32 * c + _rotate_half(x32) * s).astype(dt)
+
+
+def mrope_cos_sin(positions_3d: jax.Array, head_dim: int, theta: float,
+                  sections: Sequence[int]) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d: (3, batch, seq) int32 — temporal / height / width streams.
+    ``sections`` gives the per-stream share of head_dim (sums to head_dim);
+    internally each stream owns ``sections[i] // 2`` of the hd/2 frequency
+    slots, interleaved as in the reference implementation.
+    """
+    assert sum(sections) == head_dim, (sections, head_dim)
+    freqs = rope_frequencies(head_dim, theta)            # (hd/2,)
+    # (3, b, s, hd/2)
+    angles = positions_3d[..., None].astype(jnp.float32) * freqs
+    half_secs = [s // 2 for s in sections]
+    # pick stream i for its slice of the hd/2 frequency axis
+    parts = []
+    start = 0
+    for i, hs in enumerate(half_secs):
+        parts.append(angles[i, ..., start:start + hs])
+        start += hs
+    merged = jnp.concatenate(parts, axis=-1)             # (b, s, hd/2)
+    merged = jnp.concatenate([merged, merged], axis=-1)  # (b, s, hd)
+    return jnp.cos(merged), jnp.sin(merged)
+
+
+def text_positions_3d(positions: jax.Array) -> jax.Array:
+    """Lift 1-D positions (batch, seq) to degenerate 3-D M-RoPE streams."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

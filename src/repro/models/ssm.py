@@ -1,0 +1,138 @@
+"""Mamba2 block (SSD — state-space duality) [arXiv:2405.21060].
+
+Full-sequence path uses the chunked SSD scan (``kernels.ops.ssd``);
+decode maintains an O(1) recurrent state (conv window + SSM state), which is
+what makes long_500k decode linear for mamba2/zamba2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, init_rmsnorm, rmsnorm, shard_activation
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    n = cfg.ssm_state
+    heads = cfg.resolved_ssm_heads
+    conv_dim = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * din + 2 * n + heads)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_dim), scale=1.0),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((heads,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": init_rmsnorm(din),
+        "out_proj": dense_init(ks[3], (din, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    din, n, heads = cfg.d_inner, cfg.ssm_state, cfg.resolved_ssm_heads
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:din + din + 2 * n]
+    dt = zxbcdt[..., -heads:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq: xBC (b, l, c); w (width, c)."""
+    width = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i][None, None]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None])
+
+
+def mamba_full(p: Dict, cfg: ModelConfig, x: jax.Array,
+               init_state: Optional[Dict] = None
+               ) -> Tuple[jax.Array, Dict]:
+    """x: (b, l, d) -> (y, cache {"conv", "ssm"})."""
+    b, l, d = x.shape
+    din, n = cfg.d_inner, cfg.ssm_state
+    heads, hd = cfg.resolved_ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x_in, B, C = xBC[..., :din], xBC[..., din:din + n], xBC[..., din + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])            # (b, l, h)
+    A = -jnp.exp(p["A_log"])
+
+    xh = x_in.reshape(b, l, heads, hd)
+    xh = shard_activation(xh, "batch", None, "heads", None)
+    from repro.kernels import ops                                 # local import
+    chunk = cfg.ssm_chunk if l % cfg.ssm_chunk == 0 else (
+        1 if l == 1 else _largest_chunk(l, cfg.ssm_chunk))
+    y, final_state = ops.ssd(
+        xh, dt, A, B.astype(jnp.float32), C.astype(jnp.float32),
+        chunk=chunk,
+        init_state=None if init_state is None else init_state["ssm"])
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b, l, din)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    out = y @ p["out_proj"]
+
+    conv_state = _conv_tail(cfg, zxbcdt)
+    return out, {"conv": conv_state, "ssm": final_state}
+
+
+def _largest_chunk(l: int, preferred: int) -> int:
+    for c in range(min(preferred, l), 0, -1):
+        if l % c == 0:
+            return c
+    return 1
+
+
+def _conv_tail(cfg: ModelConfig, zxbcdt: jax.Array) -> jax.Array:
+    """Last (width-1) pre-conv xBC inputs — the decode conv state."""
+    _, xBC, _ = _split_proj(cfg, zxbcdt)
+    w = cfg.ssm_conv_width
+    b, l, c = xBC.shape
+    if l >= w - 1:
+        return xBC[:, l - (w - 1):]
+    pad = jnp.zeros((b, w - 1 - l, c), xBC.dtype)
+    return jnp.concatenate([pad, xBC], axis=1)
+
+
+def mamba_decode(p: Dict, cfg: ModelConfig, x: jax.Array, cache: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent step.
+
+    x: (b, 1, d); cache: {"conv": (b, width-1, conv_dim),
+    "ssm": (b, heads, head_dim, n)}.
+    """
+    b = x.shape[0]
+    din, n = cfg.d_inner, cfg.ssm_state
+    heads, hd = cfg.resolved_ssm_heads, cfg.ssm_head_dim
+    width = cfg.ssm_conv_width
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC_new, dt = _split_proj(cfg, zxbcdt)                   # (b,1,·)
+    conv_in = jnp.concatenate([cache["conv"], xBC_new], axis=1)  # (b,w,c)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"][None]).astype(x.dtype)
+    x_in, B, C = xBC[:, :din], xBC[:, din:din + n], xBC[:, din + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+
+    from repro.kernels import ops
+    xh = x_in.reshape(b, heads, hd)
+    y, new_ssm = ops.ssd_decode_step(
+        cache["ssm"], xh.astype(jnp.float32), dt, A,
+        B.astype(jnp.float32), C.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    out = y @ p["out_proj"]
+    new_conv = conv_in[:, 1:]
+    return out, {"conv": new_conv, "ssm": new_ssm}

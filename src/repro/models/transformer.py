@@ -1,0 +1,259 @@
+"""Decoder/encoder stack assembly.
+
+Layers are grouped into homogeneous **segments**; per-layer parameters are
+stacked (leading layer axis) and the layer body is applied with
+``jax.lax.scan`` so the traced HLO contains each distinct layer body once —
+this keeps 94-layer MoE dry-run compiles tractable on 512 devices.
+
+Unit patterns handle heterogeneous stacks:
+  gemma2      -> unit ("attn_local", "attn") x 21
+  zamba2      -> unit ("mamba",)*6 + ("shared_attn",) x 13  (+ remainder)
+  deepseek-v2 -> segment ("mla",) x 1 (dense layer 0) + ("mla_moe",) x 26
+``shared_attn`` blocks reuse one parameter set (closed over, Zamba2-style)
+but keep per-occurrence KV caches.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (init_rmsnorm, rmsnorm, shard_activation,
+                                 stacked_init)
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+def build_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """Returns [(unit_kinds, count), ...] covering the decoder stack."""
+    if cfg.has_ssm() and cfg.shared_attn_every > 0:
+        every = cfg.shared_attn_every
+        unit = ("mamba",) * every + ("shared_attn",)
+        full = cfg.num_layers // every
+        rem = cfg.num_layers % every
+        plan = []
+        if full:
+            plan.append((unit, full))
+        if rem:
+            plan.append((("mamba",), rem))
+        return plan
+
+    kinds = list(cfg.layer_kinds())
+    # first_dense_layers: MoE variants fall back to dense FFN
+    for i in range(min(cfg.first_dense_layers, len(kinds))):
+        kinds[i] = {"mla_moe": "mla", "moe": "attn"}.get(kinds[i], kinds[i])
+
+    pat = cfg.block_pattern
+    if (len(pat) > 1 and len(kinds) % len(pat) == 0
+            and tuple(kinds[:len(pat)]) == pat
+            and all(kinds[i] == pat[i % len(pat)] for i in range(len(kinds)))):
+        return [(tuple(pat), len(kinds) // len(pat))]
+
+    # group consecutive identical kinds
+    plan = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        plan.append(((kinds[i],), j - i))
+        i = j
+    return plan
+
+
+def _is_attn(kind: str) -> bool:
+    return kind in ("attn", "attn_local", "moe", "shared_attn")
+
+
+def _is_mla(kind: str) -> bool:
+    return kind in ("mla", "mla_moe")
+
+
+def _is_moe(kind: str) -> bool:
+    return kind in ("moe", "mla_moe")
+
+
+# ---------------------------------------------------------------------------
+# Block init
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, kind: str, *, cross: bool = False) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if kind == "mamba":
+        return {"norm": init_rmsnorm(d), "mamba": ssm_mod.init_mamba(ks[0], cfg)}
+    p: Dict = {"attn_norm": init_rmsnorm(d), "mlp_norm": init_rmsnorm(d)}
+    if _is_mla(kind):
+        p["attn"] = attn_mod.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attn_mod.init_gqa(ks[0], cfg)
+    if _is_moe(kind):
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(ks[1], cfg)
+    if cfg.sandwich_norm:
+        p["post_attn_norm"] = init_rmsnorm(d)
+        p["post_mlp_norm"] = init_rmsnorm(d)
+    if cross:
+        p["cross_norm"] = init_rmsnorm(d)
+        p["cross"] = attn_mod.init_cross(ks[2], cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Block apply — full sequence
+# ---------------------------------------------------------------------------
+def block_full(p: Dict, cfg: ModelConfig, kind: str, h: jax.Array,
+               cos, sin, *, enc_out=None, causal: bool = True
+               ) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Returns (h, cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict = {}
+    if kind == "mamba":
+        y, cache = ssm_mod.mamba_full(p["mamba"], cfg,
+                                      rmsnorm(p["norm"], h, cfg.rmsnorm_eps))
+        return shard_activation(h + y, "batch", None, "residual"), cache, aux
+
+    x = rmsnorm(p["attn_norm"], h, cfg.rmsnorm_eps)
+    if _is_mla(kind):
+        y, kv = attn_mod.mla_full(p["attn"], cfg, x, cos, sin, kind=kind,
+                                  causal=causal)
+    else:
+        y, kv = attn_mod.gqa_full(p["attn"], cfg, x, cos, sin, kind=kind,
+                                  causal=causal)
+    if cfg.sandwich_norm:
+        y = rmsnorm(p["post_attn_norm"], y, cfg.rmsnorm_eps)
+    h = h + y
+    cache.update(kv)
+
+    if "cross" in p and enc_out is not None:
+        ckv = attn_mod.cross_kv(p["cross"], cfg, enc_out)
+        xc = rmsnorm(p["cross_norm"], h, cfg.rmsnorm_eps)
+        h = h + attn_mod.cross_attend(p["cross"], cfg, xc, ckv)
+        cache.update(ckv)
+
+    x2 = rmsnorm(p["mlp_norm"], h, cfg.rmsnorm_eps)
+    if _is_moe(kind):
+        y2, aux = moe_mod.moe_forward(p["moe"], cfg, x2)
+    else:
+        y2 = mlp_mod.mlp_forward(p["mlp"], cfg, x2)
+    if cfg.sandwich_norm:
+        y2 = rmsnorm(p["post_mlp_norm"], y2, cfg.rmsnorm_eps)
+    out = shard_activation(h + y2, "batch", None, "residual")
+    return out, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Block apply — single-token decode
+# ---------------------------------------------------------------------------
+def block_decode(p: Dict, cfg: ModelConfig, kind: str, h: jax.Array,
+                 cos, sin, cache: Dict, pos) -> Tuple[jax.Array, Dict]:
+    if kind == "mamba":
+        y, new = ssm_mod.mamba_decode(p["mamba"], cfg,
+                                      rmsnorm(p["norm"], h, cfg.rmsnorm_eps),
+                                      cache)
+        return h + y, new
+
+    new_cache: Dict = {}
+    x = rmsnorm(p["attn_norm"], h, cfg.rmsnorm_eps)
+    if _is_mla(kind):
+        y, kv = attn_mod.mla_decode(p["attn"], cfg, x, cos, sin, cache, pos,
+                                    kind=kind)
+    else:
+        y, kv = attn_mod.gqa_decode(p["attn"], cfg, x, cos, sin, cache, pos,
+                                    kind=kind)
+    if cfg.sandwich_norm:
+        y = rmsnorm(p["post_attn_norm"], y, cfg.rmsnorm_eps)
+    h = h + y
+    new_cache.update(kv)
+
+    if "cross" in p:
+        ckv = {"ck": cache["ck"], "cv": cache["cv"]}
+        xc = rmsnorm(p["cross_norm"], h, cfg.rmsnorm_eps)
+        h = h + attn_mod.cross_attend(p["cross"], cfg, xc, ckv)
+        new_cache.update(ckv)
+
+    x2 = rmsnorm(p["mlp_norm"], h, cfg.rmsnorm_eps)
+    if _is_moe(kind):
+        y2, _ = moe_mod.moe_forward(p["moe"], cfg, x2)
+    else:
+        y2 = mlp_mod.mlp_forward(p["mlp"], cfg, x2)
+    if cfg.sandwich_norm:
+        y2 = rmsnorm(p["post_mlp_norm"], y2, cfg.rmsnorm_eps)
+    return h + y2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Segment init / apply
+# ---------------------------------------------------------------------------
+def init_segment(key, cfg: ModelConfig, unit: Tuple[str, ...], count: int,
+                 *, cross: bool = False) -> Dict:
+    """Stacked per-unit params.  ``shared_attn`` kinds hold no per-layer
+    params (tied set lives at model level)."""
+    seg = {}
+    ks = jax.random.split(key, len(unit))
+    for j, kind in enumerate(unit):
+        if kind == "shared_attn":
+            continue
+        seg[str(j)] = stacked_init(
+            lambda k_, kind=kind: init_block(k_, cfg, kind, cross=cross),
+            ks[j], count)
+    return seg
+
+
+def segment_full(seg_params: Dict, shared_params, cfg: ModelConfig,
+                 unit: Tuple[str, ...], count: int, h: jax.Array, cos, sin,
+                 *, enc_out=None, causal: bool = True, remat: bool = True,
+                 want_cache: bool = True):
+    """Scan the unit body over ``count`` stacked layers.
+
+    The body is rematerialized (activation checkpointing, MaxText-style):
+    backward recomputes layer internals instead of storing the blocked
+    attention / SSD scan carries — without this, training memory explodes
+    (the online-softmax accumulators of every KV block would be saved).
+    """
+    def body(carry, xs):
+        hh, aux = carry
+        caches = {}
+        for j, kind in enumerate(unit):
+            p = shared_params if kind == "shared_attn" else xs[str(j)]
+            kk = "attn" if kind == "shared_attn" else kind
+            hh, cache, a = block_full(p, cfg, kk, hh, cos, sin,
+                                      enc_out=enc_out, causal=causal)
+            if want_cache:
+                caches[str(j)] = cache
+            aux = aux + a
+        return (hh, aux), caches
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), seg_params, length=count)
+    return h, aux, caches
+
+
+def segment_decode(seg_params: Dict, shared_params, cfg: ModelConfig,
+                   unit: Tuple[str, ...], count: int, h: jax.Array, cos, sin,
+                   caches: Dict, pos):
+    def body(hh, xs):
+        layer_caches = xs["__cache__"]
+        new_caches = {}
+        for j, kind in enumerate(unit):
+            p = shared_params if kind == "shared_attn" else xs[str(j)]
+            kk = "attn" if kind == "shared_attn" else kind
+            hh, nc = block_decode(p, cfg, kk, hh, cos, sin,
+                                  layer_caches[str(j)], pos)
+            new_caches[str(j)] = nc
+        return hh, new_caches
+
+    xs = dict(seg_params)
+    xs["__cache__"] = caches
+    h, new_caches = jax.lax.scan(body, h, xs, length=count)
+    return h, new_caches

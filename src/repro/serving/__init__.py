@@ -1,0 +1,2 @@
+"""Serving substrate: KV-cache sampler, batched engine, router service."""
+from repro.serving import engine, sampler  # noqa: F401

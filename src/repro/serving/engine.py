@@ -1,0 +1,72 @@
+"""Batched serving engine.
+
+Collects requests, pads them into fixed-size batches, runs prefill+decode
+via ``sampler.generate``, and returns per-request results.  This is the
+substrate both for the SCOPE estimator (pool-wide prediction batches: one
+request per candidate model) and for the examples' serve driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import PAD
+from repro.serving import sampler
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+
+
+@dataclasses.dataclass
+class Result:
+    rid: int
+    tokens: np.ndarray           # (T,) generated
+    logits: np.ndarray           # (T, V) per-step logits
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch_size: int = 32,
+                 max_new_tokens: int = 12, temperature: float = 0.0):
+        self.params = params
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self._queue: List[Request] = []
+        self._next_rid = 0
+
+    def submit(self, prompt: Sequence[int]) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, list(prompt)))
+        return rid
+
+    def run(self, rng: Optional[jax.Array] = None) -> Dict[int, Result]:
+        """Drain the queue in fixed-size batches (last batch padded)."""
+        results: Dict[int, Result] = {}
+        queue, self._queue = self._queue, []
+        if not queue:
+            return results
+        lp = max(len(r.prompt) for r in queue)
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        for i in range(0, len(queue), self.batch_size):
+            chunk = queue[i: i + self.batch_size]
+            pad_n = self.batch_size - len(chunk)
+            prompts = np.full((len(chunk) + pad_n, lp), PAD, np.int32)
+            for j, r in enumerate(chunk):
+                prompts[j, : len(r.prompt)] = r.prompt
+            key, sub = jax.random.split(key)
+            gen, lg = sampler.generate(
+                self.params, self.cfg, prompts,
+                max_new_tokens=self.max_new_tokens,
+                temperature=self.temperature, rng=sub)
+            for j, r in enumerate(chunk):
+                results[r.rid] = Result(r.rid, gen[j], lg[j])
+        return results

@@ -1,0 +1,62 @@
+"""End-to-end routing service: SCOPE decision + (simulated) execution.
+
+Routes each query with the SCOPE router, "executes" the chosen pool model
+against the world (standing in for the API call), and accounts tokens/$ —
+including the estimator's own prediction overhead (Eq. 24).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.router import PoolPredictions, ScopeRouter
+from repro.data.datasets import ScopeData
+from repro.data.worldsim import Query
+
+
+@dataclasses.dataclass
+class ServiceReport:
+    choices: np.ndarray
+    alpha: float
+    accuracy: float
+    total_cost: float
+    exec_tokens: int
+    overhead_tokens: int
+    per_model_share: Dict[str, float]
+
+
+class RouterService:
+    def __init__(self, router: ScopeRouter, data: ScopeData,
+                 models: Sequence[str]):
+        self.router = router
+        self.data = data
+        self.models = list(models)
+
+    def serve(self, qids: Sequence[int], *, alpha: Optional[float] = None,
+              budget: Optional[float] = None,
+              pool: Optional[PoolPredictions] = None) -> ServiceReport:
+        queries = [self.data.queries[int(q)] for q in qids]
+        if pool is None:
+            pool = self.router.predict_pool(queries, self.models)
+        if budget is not None:
+            alpha, choices, _ = self.router.route_with_budget(pool, budget)
+        else:
+            assert alpha is not None
+            choices = self.router.route(pool, alpha)
+
+        accs, costs, tokens = [], [], 0
+        share = {m: 0 for m in self.models}
+        for q, c in zip(qids, choices):
+            rec = self.data.record(int(q), self.models[int(c)])
+            accs.append(rec.y)
+            costs.append(rec.cost)
+            tokens += rec.tokens
+            share[self.models[int(c)]] += 1
+        return ServiceReport(
+            choices=choices, alpha=float(alpha),
+            accuracy=float(np.mean(accs)), total_cost=float(np.sum(costs)),
+            exec_tokens=tokens,
+            overhead_tokens=int(pool.pred_overhead.sum()),
+            per_model_share={m: v / len(qids) for m, v in share.items()})

@@ -1,0 +1,85 @@
+"""KV-cache generation loop: prefill + jitted single-token decode steps.
+
+Prompts in SCOPE's structured serialization have constant length, so the
+batch prefisll is a single full forward; decode steps are jitted with donated
+caches.  Supports greedy and temperature sampling (GRPO rollouts) and
+returns per-step logits (the estimator reads its correctness confidence off
+the decision token's distribution).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS, PAD
+from repro.models import model as M
+
+
+@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
+def _decode_step(params, cfg: ModelConfig, token, caches, pos):
+    logits, caches = M.decode_step(params, cfg, token, caches, pos)
+    return logits[:, 0], caches
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _prefill(params, cfg: ModelConfig, tokens):
+    return M.prefill(params, cfg, {"tokens": tokens})
+
+
+def _pad_caches(caches, max_len: int, prompt_len: int):
+    """Grow prefill caches (seq = prompt_len) to decode capacity."""
+    def pad(path_leaf):
+        return path_leaf
+
+    def grow(leaf):
+        # KV leaves have a seq axis == prompt_len somewhere; mamba states don't.
+        shape = leaf.shape
+        for ax, n in enumerate(shape):
+            if n == prompt_len and ax >= 2:      # (count, b, ..., S, ...)
+                widths = [(0, 0)] * leaf.ndim
+                widths[ax] = (0, max_len - prompt_len)
+                return jnp.pad(leaf, widths)
+        return leaf
+
+    return jax.tree.map(grow, caches)
+
+
+def generate(params, cfg: ModelConfig, prompts: np.ndarray, *,
+             max_new_tokens: int = 12, temperature: float = 0.0,
+             rng: Optional[jax.Array] = None, stop_at_eos: bool = True
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    """prompts: (b, Lp) int32, constant length.  Returns
+    (generated (b, T) int32, step_logits (b, T, V) float32)."""
+    prompts = jnp.asarray(prompts, jnp.int32)
+    b, lp = prompts.shape
+    max_len = lp + max_new_tokens
+
+    logits, caches = _prefill(params, cfg, prompts)
+    caches = _pad_caches(caches, max_len, lp)
+    last_logits = logits[:, -1].astype(jnp.float32)
+
+    outs, step_logits = [], []
+    done = jnp.zeros((b,), bool)
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+    for t in range(max_new_tokens):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, last_logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last_logits, axis=-1)
+        nxt = jnp.where(done, PAD, nxt).astype(jnp.int32)
+        outs.append(nxt)
+        step_logits.append(last_logits)
+        if stop_at_eos:
+            done = done | (nxt == EOS)
+        last_logits, caches = _decode_step(params, cfg, nxt[:, None], caches,
+                                           lp + t)
+        last_logits = last_logits.astype(jnp.float32)
+    gen = np.asarray(jnp.stack(outs, axis=1))
+    lg = np.asarray(jnp.stack(step_logits, axis=1))
+    return gen, lg

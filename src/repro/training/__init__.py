@@ -1,0 +1,3 @@
+"""Training substrate: AdamW, SFT (hindsight distillation), GRPO,
+checkpointing."""
+from repro.training import checkpoint, grpo, optimizer, sft  # noqa: F401

@@ -1,0 +1,49 @@
+"""Pytree checkpointing: flattened key-path .npz archives (no pickle)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    return f"x:{p}"
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path_t, leaf in leaves_t:
+        key = _SEP.join(_path_str(p) for p in path_t)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)

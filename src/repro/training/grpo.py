@@ -1,0 +1,198 @@
+"""Stage 2: GRPO alignment (SCOPE §4.3, Eq. 6; GRPO per Shao et al. 2024).
+
+Per task (query, model): sample a group of G rollouts from the current
+policy, score them with the gated composite reward (format gate x
+(R_corr + R_token with adaptive tolerance)), normalize advantages within
+the group, and apply a token-level PPO-clip policy gradient with a k3 KL
+penalty toward the SFT reference policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import rewards as rw
+from repro.core import serialization
+from repro.core.fingerprint import FingerprintLibrary
+from repro.core.retrieval import AnchorRetriever
+from repro.data import tokenizer as tok
+from repro.data.datasets import ScopeData
+from repro.models import model as M
+from repro.serving import sampler
+from repro.training.optimizer import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update)
+
+
+@dataclasses.dataclass
+class GRPOConfig:
+    group_size: int = 4
+    tasks_per_step: int = 16
+    temperature: float = 1.0
+    clip_eps: float = 0.2
+    kl_coef: float = 0.02
+    max_new_tokens: int = 12
+    inner_epochs: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Token-level log-probs of a generated suffix
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=(1,))
+def sequence_logprobs(params, cfg: ModelConfig, tokens, gen_mask):
+    """tokens: (B, L) prompt+generation; gen_mask marks generated positions.
+    Returns per-position logp of tokens[t] for masked t (shifted)."""
+    logits, _ = M.forward_train(params, cfg, {"tokens": tokens})
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    # position t-1 predicts token t
+    tgt = tokens[:, 1:]
+    lp = jnp.take_along_axis(logp[:, :-1], tgt[..., None], axis=-1)[..., 0]
+    mask = gen_mask[:, 1:].astype(jnp.float32)
+    return lp * mask, mask
+
+
+def grpo_loss(params, cfg: ModelConfig, batch, clip_eps: float,
+              kl_coef: float):
+    lp, mask = sequence_logprobs(params, cfg, batch["tokens"],
+                                 batch["gen_mask"])
+    old_lp = batch["old_logp"]
+    ref_lp = batch["ref_logp"]
+    adv = batch["adv"][:, None]
+
+    ratio = jnp.exp(lp - old_lp)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+    pg = -jnp.minimum(unclipped, clipped)
+
+    # k3 KL estimator toward the reference policy
+    delta = ref_lp - lp
+    kl = jnp.exp(delta) - delta - 1.0
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum((pg + kl_coef * kl) * mask) / denom
+    return loss, {"pg": jnp.sum(pg * mask) / denom,
+                  "kl": jnp.sum(kl * mask) / denom}
+
+
+@functools.partial(jax.jit, static_argnums=(1, 4, 5, 6))
+def grpo_step(params, cfg: ModelConfig, opt_state, batch,
+              opt_cfg: AdamWConfig, clip_eps: float, kl_coef: float):
+    (loss, metrics), grads = jax.value_and_grad(
+        grpo_loss, has_aux=True)(params, cfg, batch, clip_eps, kl_coef)
+    params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+    return params, opt_state, loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Rollout + training loop
+# ---------------------------------------------------------------------------
+class GRPOTrainer:
+    def __init__(self, cfg: ModelConfig, params, data: ScopeData,
+                 library: FingerprintLibrary, retriever: AnchorRetriever, *,
+                 gcfg: Optional[GRPOConfig] = None,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 k: int = 5, cot: bool = True, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.ref_params = jax.tree.map(jnp.copy, params)
+        self.data = data
+        self.library = library
+        self.retriever = retriever
+        self.gcfg = gcfg or GRPOConfig()
+        self.opt_cfg = opt_cfg or AdamWConfig(lr=2e-4, warmup_steps=10,
+                                              total_steps=1000)
+        self.opt_state = adamw_init(params)
+        self.k = k
+        self.cot = cot
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+        self.model_indices = {m: i for i, m in enumerate(data.models)}
+        self.reward_history: List[float] = []
+
+    # ------------------------------------------------------------------
+    def _sample_tasks(self, n: int):
+        qids = self.rng.choice(self.data.train_qids, size=n)
+        models = self.rng.choice(self.data.models, size=n)
+        return list(zip(qids.tolist(), models.tolist()))
+
+    def _build_prompts(self, tasks):
+        world = self.data.world
+        embs = np.stack([world.embed(self.data.queries[q]) for q, _ in tasks])
+        sims, idx = self.retriever.retrieve(embs, self.k)
+        prompts, gts = [], []
+        for t, (qid, m) in enumerate(tasks):
+            q = self.data.queries[qid]
+            rec = self.data.record(qid, m)
+            fp = self.library.get(m)
+            prompts.append(serialization.serialize_prompt(
+                world.models[m], self.model_indices[m],
+                self.library.anchor_set, fp, sims[t], idx[t], q))
+            gts.append((rec.y, rec.tokens))
+        return prompts, gts
+
+    # ------------------------------------------------------------------
+    def rollout_step(self) -> Dict:
+        g = self.gcfg.group_size
+        tasks = self._sample_tasks(self.gcfg.tasks_per_step)
+        prompts, gts = self._build_prompts(tasks)
+        lp_len = len(prompts[0])
+
+        # tile each prompt G times → one batched generation pass
+        tiled = np.repeat(np.asarray(prompts, np.int32), g, axis=0)
+        self.key, sub = jax.random.split(self.key)
+        gen, _ = sampler.generate(
+            self.params, self.cfg, tiled,
+            max_new_tokens=self.gcfg.max_new_tokens,
+            temperature=self.gcfg.temperature, rng=sub)
+
+        B = len(tiled)
+        L = lp_len + self.gcfg.max_new_tokens
+        tokens = np.concatenate([tiled, gen], axis=1)
+        gen_mask = np.zeros((B, L), np.float32)
+        rewards = np.zeros(B, np.float32)
+        for i in range(B):
+            y_gt, len_gt = gts[i // g]
+            toks = [int(t) for t in gen[i]]
+            parsed = tok.parse_prediction(toks)
+            rewards[i] = rw.grpo_reward(parsed, y_gt, len_gt)
+            # mask: generated positions up to & including EOS (or all)
+            upto = toks.index(tok.EOS) + 1 if tok.EOS in toks else len(toks)
+            gen_mask[i, lp_len: lp_len + upto] = 1.0
+
+        # group-normalized advantages
+        r = rewards.reshape(-1, g)
+        adv = (r - r.mean(axis=1, keepdims=True)) / (r.std(axis=1, keepdims=True) + 1e-6)
+        adv = adv.reshape(-1)
+
+        jt = jnp.asarray(tokens)
+        jm = jnp.asarray(gen_mask)
+        old_lp, _ = sequence_logprobs(self.params, self.cfg, jt, jm)
+        ref_lp, _ = sequence_logprobs(self.ref_params, self.cfg, jt, jm)
+        batch = {"tokens": jt, "gen_mask": jm,
+                 "old_logp": jax.lax.stop_gradient(old_lp),
+                 "ref_logp": jax.lax.stop_gradient(ref_lp),
+                 "adv": jnp.asarray(adv)}
+
+        for _ in range(self.gcfg.inner_epochs):
+            self.params, self.opt_state, loss, metrics = grpo_step(
+                self.params, self.cfg, self.opt_state, batch, self.opt_cfg,
+                self.gcfg.clip_eps, self.gcfg.kl_coef)
+        mean_r = float(rewards.mean())
+        self.reward_history.append(mean_r)
+        return {"reward": mean_r, "loss": float(loss),
+                "kl": float(metrics["kl"]),
+                "format_rate": float(np.mean(rewards > 0))}
+
+    def train(self, steps: int, *, verbose: bool = False,
+              log_every: int = 10) -> List[float]:
+        for s in range(steps):
+            info = self.rollout_step()
+            if verbose and (s + 1) % log_every == 0:
+                print(f"  grpo step {s+1}: reward {info['reward']:.3f} "
+                      f"kl {info['kl']:.4f}")
+        return self.reward_history

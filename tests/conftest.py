@@ -1,0 +1,58 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the dry-run flag is only ever
+# set inside repro.launch.dryrun / subprocesses)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
+from repro.core.retrieval import AnchorRetriever
+from repro.data.datasets import build_scope_data, stratified_anchors
+from repro.data.worldsim import World
+
+
+@pytest.fixture(scope="session")
+def world():
+    return World(seed=0)
+
+
+@pytest.fixture(scope="session")
+def scope_data(world):
+    return build_scope_data(world, n_queries=200, seed=0)
+
+
+@pytest.fixture(scope="session")
+def anchor_set(world):
+    return build_anchor_set(world, stratified_anchors(world, n=80, seed=7))
+
+
+@pytest.fixture(scope="session")
+def library(world, anchor_set):
+    lib = FingerprintLibrary(anchor_set)
+    for m in world.pool:
+        if m.seen:
+            lib.onboard(world, m.name, seed=3)
+    return lib
+
+
+@pytest.fixture(scope="session")
+def retriever(anchor_set):
+    return AnchorRetriever(anchor_set)
+
+
+@pytest.fixture(scope="session")
+def tiny_trained(scope_data, library, retriever):
+    """A briefly SFT-trained tiny estimator shared across tests."""
+    import jax
+    from repro.configs.scope_estimator import TINY
+    from repro.models import model as M
+    from repro.training.sft import build_sft_dataset, train_sft
+
+    ds = build_sft_dataset(scope_data, library, retriever, cot=True,
+                           max_examples=1200, seed=0)
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    params, losses = train_sft(params, TINY, ds, steps=130, batch_size=32)
+    return TINY, params, losses

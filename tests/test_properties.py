@@ -1,0 +1,196 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alpha_search, rewards, utility
+from repro.data import tokenizer as tok
+
+finite = st.floats(allow_nan=False, allow_infinity=False)
+
+
+# ---------------------------------------------------------------------------
+# Cost normalization (Eq. 11)
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(min_value=1e-6, max_value=100.0), min_size=2,
+                max_size=12))
+@settings(max_examples=200, deadline=None)
+def test_cost_normalization_bounds_and_order(costs):
+    c = np.asarray(costs)
+    out = utility.normalize_cost(c)
+    assert np.all(out >= 0.0) and np.all(out <= 1.0)
+    # order-preserving (monotone transform)
+    i, j = np.argmin(c), np.argmax(c)
+    assert out[i] <= out[j] + 1e-12
+    if c.max() > c.min() * (1 + 1e-6):
+        assert abs(out[i]) < 1e-9 and abs(out[j] - 1.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Utility (Eq. 12-13)
+# ---------------------------------------------------------------------------
+@given(st.floats(min_value=0, max_value=1), st.floats(min_value=0, max_value=1),
+       st.floats(min_value=0, max_value=1))
+@settings(max_examples=200, deadline=None)
+def test_utility_bounded(p, c, alpha):
+    u = utility.predicted_utility(np.array([p]), np.array([c]), alpha)
+    assert 0.0 - 1e-9 <= u[0] <= 1.0 + 1e-9
+
+
+@given(st.floats(min_value=0, max_value=1))
+@settings(max_examples=100, deadline=None)
+def test_gamma_dyn_range(alpha):
+    g = utility.gamma_dyn(alpha, gamma_base=1.0, beta=2.0)
+    assert 1.0 - 1e-9 <= g <= 3.0 + 1e-9
+    # alpha -> 0 gives the harshest cost penalty
+    assert utility.gamma_dyn(0.0) >= utility.gamma_dyn(1.0)
+
+
+@given(st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=1.0))
+@settings(max_examples=100, deadline=None)
+def test_utility_monotone_in_accuracy_at_fixed_cost(alpha, c):
+    """Higher predicted accuracy never lowers utility."""
+    lo = utility.predicted_utility(np.array([0.2]), np.array([c]), alpha)[0]
+    hi = utility.predicted_utility(np.array([0.9]), np.array([c]), alpha)[0]
+    assert hi >= lo - 1e-12
+
+
+def test_w_cal_endpoints():
+    assert abs(utility.w_cal(0.0) - 0.1) < 1e-12
+    assert abs(utility.w_cal(1.0) - 0.2) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Adaptive token reward (Eq. 9-10)
+# ---------------------------------------------------------------------------
+@given(st.floats(min_value=1, max_value=20000))
+@settings(max_examples=200, deadline=None)
+def test_token_reward_plateau(len_gt):
+    tau = rewards.adaptive_tolerance(len_gt)
+    assert tau == max(200.0, 0.5 * len_gt)
+    # full reward inside tau/2
+    assert rewards.token_reward(len_gt + tau / 2 * 0.99, len_gt) == 1.0
+    # zero beyond tau
+    assert rewards.token_reward(len_gt + tau * 1.01, len_gt) == 0.0
+    # linear decay in between
+    mid = rewards.token_reward(len_gt + 0.75 * tau, len_gt)
+    assert 0.0 < mid < 1.0
+
+
+@given(st.integers(min_value=0, max_value=1),
+       st.integers(min_value=0, max_value=1),
+       st.floats(min_value=1, max_value=16384),
+       st.floats(min_value=1, max_value=16384))
+@settings(max_examples=100, deadline=None)
+def test_grpo_reward_gate_and_range(y_hat, y_gt, lh, lg):
+    parsed = {"y_hat": y_hat, "len_hat": lh, "well_formed": True}
+    r = rewards.grpo_reward(parsed, y_gt, lg)
+    assert 0.0 <= r <= 2.0
+    bad = dict(parsed, well_formed=False)
+    assert rewards.grpo_reward(bad, y_gt, lg) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer roundtrips
+# ---------------------------------------------------------------------------
+@given(st.floats(min_value=8, max_value=16384))
+@settings(max_examples=200, deadline=None)
+def test_len_bucket_roundtrip_within_tolerance(tokens):
+    b = tok.len_bucket(tokens)
+    back = tok.len_from_bucket(b)
+    # geometric buckets: relative error bounded by bucket ratio
+    ratio = (16384 / 8) ** (1 / tok.NUM_LEN_BUCKETS)
+    assert back / tokens < ratio * 1.01 and tokens / back < ratio * 1.01
+
+
+@given(st.integers(min_value=0, max_value=1),
+       st.integers(min_value=0, max_value=tok.NUM_LEN_BUCKETS - 1),
+       st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_parse_prediction_roundtrip(y, lb, cot):
+    seq = []
+    if cot:
+        seq += [tok.THINK, tok.cnt_token(3), tok.LEN_BASE + 5,
+                tok.domain_token(2), tok.THINK_END]
+    seq += [tok.YES if y else tok.NO, tok.LEN_BASE + lb, tok.EOS]
+    parsed = tok.parse_prediction(seq)
+    assert parsed["well_formed"]
+    assert parsed["y_hat"] == y
+    assert parsed["len_hat"] == tok.len_from_bucket(lb)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=tok.VOCAB_SIZE - 1),
+                min_size=0, max_size=12))
+@settings(max_examples=200, deadline=None)
+def test_parse_prediction_never_crashes(seq):
+    parsed = tok.parse_prediction(seq)
+    assert isinstance(parsed["well_formed"], bool)
+
+
+@given(st.floats(min_value=-1, max_value=1))
+@settings(max_examples=100, deadline=None)
+def test_sim_bucket_in_range(s):
+    b = tok.sim_bucket(s)
+    assert 0 <= b < tok.NUM_SIM_BUCKETS
+
+
+# ---------------------------------------------------------------------------
+# Budget-controlled alpha (Prop. D.1)
+# ---------------------------------------------------------------------------
+@st.composite
+def _pool(draw):
+    q = draw(st.integers(min_value=1, max_value=5))
+    m = draw(st.integers(min_value=2, max_value=5))
+    p = draw(st.lists(st.floats(min_value=0, max_value=1),
+                      min_size=q * m, max_size=q * m))
+    s = draw(st.lists(st.floats(min_value=0, max_value=1),
+                      min_size=q * m, max_size=q * m))
+    c = draw(st.lists(st.floats(min_value=0.001, max_value=2.0),
+                      min_size=q * m, max_size=q * m))
+    return (np.array(p).reshape(q, m), np.array(s).reshape(q, m),
+            np.array(c).reshape(q, m))
+
+
+@given(_pool(), st.floats(min_value=0.001, max_value=10.0))
+@settings(max_examples=60, deadline=None)
+def test_budget_alpha_feasible_and_optimal_vs_grid(pool, budget):
+    p, s, c = pool
+    a_star, choice, info = alpha_search.budget_alpha(p, s, c, budget)
+    if info["feasible"]:
+        assert info["expected_cost"] <= budget + 1e-9
+        # no denser grid alpha beats it on the same affine objective
+        for a in np.linspace(0, 1, 47):
+            ch = alpha_search.route_for_alpha(p, s, a)
+            cost = c[np.arange(len(ch)), ch].sum()
+            perf = p[np.arange(len(ch)), ch].sum()
+            if cost <= budget:
+                assert perf <= info["expected_perf"] + 1e-9
+
+
+@given(_pool())
+@settings(max_examples=60, deadline=None)
+def test_routing_constant_between_breakpoints(pool):
+    """Prop D.1: decisions are piecewise-constant in alpha."""
+    p, s, _ = pool
+    bps = alpha_search.breakpoints(p, s)
+    grid = np.concatenate([[0.0], bps, [1.0]])
+    for lo, hi in zip(grid[:-1], grid[1:]):
+        if hi - lo < 1e-9:
+            continue
+        a1 = lo + (hi - lo) * 0.25
+        a2 = lo + (hi - lo) * 0.75
+        c1 = alpha_search.route_for_alpha(p, s, a1)
+        c2 = alpha_search.route_for_alpha(p, s, a2)
+        assert np.array_equal(c1, c2)
+
+
+# ---------------------------------------------------------------------------
+# GRPO group advantages
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(min_value=0, max_value=2), min_size=4, max_size=4),
+       st.integers(min_value=1, max_value=4))
+@settings(max_examples=100, deadline=None)
+def test_group_advantages_zero_mean(rewards_, groups):
+    r = np.tile(np.asarray(rewards_), (groups, 1))
+    adv = (r - r.mean(1, keepdims=True)) / (r.std(1, keepdims=True) + 1e-6)
+    assert np.all(np.abs(adv.mean(1)) < 1e-6)

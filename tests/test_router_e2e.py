@@ -1,0 +1,86 @@
+"""End-to-end SCOPE routing behaviour on the trained tiny estimator."""
+import numpy as np
+import pytest
+
+from repro.core.estimator import ReasoningEstimator
+from repro.core.evaluation import evaluate_choices
+from repro.core.router import ScopeRouter
+from repro.serving.router_service import RouterService
+
+
+@pytest.fixture(scope="module")
+def router_setup(tiny_trained, scope_data, library, retriever):
+    cfg, params, _ = tiny_trained
+    est = ReasoningEstimator(cfg, params)
+    world = scope_data.world
+    router = ScopeRouter(est, retriever, library, world.models,
+                         {m: i for i, m in enumerate(scope_data.models)})
+    qids = scope_data.test_qids[:10]
+    queries = [scope_data.queries[int(q)] for q in qids]
+    pool = router.predict_pool(queries, scope_data.models)
+    return router, pool, qids
+
+
+def test_pool_predictions_shapes(router_setup, scope_data):
+    router, pool, qids = router_setup
+    Q, M = len(qids), len(scope_data.models)
+    assert pool.p_hat.shape == (Q, M)
+    assert np.all((pool.p_hat >= 0) & (pool.p_hat <= 1))
+    assert np.all(pool.cost_hat > 0)
+    assert pool.pred_overhead.sum() > 0
+
+
+def test_alpha_zero_is_cheaper_than_alpha_one(router_setup, scope_data):
+    router, pool, qids = router_setup
+    ch0 = router.route(pool, alpha=0.0)
+    ch1 = router.route(pool, alpha=1.0)
+    ev0 = evaluate_choices(scope_data, qids, scope_data.models, ch0)
+    ev1 = evaluate_choices(scope_data, qids, scope_data.models, ch1)
+    assert ev0.total_cost <= ev1.total_cost + 1e-9
+
+
+def test_budget_alpha_respects_budget(router_setup, scope_data):
+    router, pool, qids = router_setup
+    tight = float(np.sort(pool.cost_hat.min(axis=1)).sum() * 1.5)
+    alpha, choices, info = router.route_with_budget(pool, tight)
+    if info["feasible"]:
+        assert info["expected_cost"] <= tight + 1e-9
+    assert 0.0 <= alpha <= 1.0
+    assert choices.shape == (len(qids),)
+
+
+def test_calibration_changes_decisions_smoothly(router_setup):
+    router, pool, _ = router_setup
+    u_with = router.utilities(pool, 0.5, with_calibration=True)
+    u_without = router.utilities(pool, 0.5, with_calibration=False)
+    assert u_with.shape == u_without.shape
+    assert not np.allclose(u_with, u_without)       # prior has an effect
+
+
+def test_router_service_report(router_setup, scope_data):
+    router, pool, qids = router_setup
+    service = RouterService(router, scope_data, scope_data.models)
+    rep = service.serve(qids, alpha=0.7, pool=pool)
+    assert 0.0 <= rep.accuracy <= 1.0
+    assert abs(sum(rep.per_model_share.values()) - 1.0) < 1e-9
+    assert rep.overhead_tokens > 0
+
+
+def test_unseen_model_routable_without_retraining(tiny_trained, scope_data,
+                                                  library, retriever):
+    """The core SCOPE claim: onboard an unseen model via fingerprint only."""
+    cfg, params, _ = tiny_trained
+    world = scope_data.world
+    unseen = "claude-sonnet-4.5"
+    if unseen not in library:
+        library.onboard(world, unseen, seed=99)
+    est = ReasoningEstimator(cfg, params)
+    models = scope_data.models + [unseen]
+    router = ScopeRouter(est, retriever, library, world.models,
+                         {m: i for i, m in enumerate(models)})
+    queries = [scope_data.queries[int(q)] for q in scope_data.test_qids[:6]]
+    pool = router.predict_pool(queries, models)
+    assert pool.p_hat.shape == (6, len(models))
+    # at alpha=1 the strongest (unseen) model should attract some traffic
+    ch1 = router.route(pool, alpha=1.0)
+    assert np.all(ch1 >= 0)

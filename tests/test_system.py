@@ -1,0 +1,81 @@
+"""System-level behaviour: registry, plans, shapes matrix, data pipeline."""
+import numpy as np
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_configs, shape_applicable)
+from repro.configs.base import long_context_variant
+from repro.data.datasets import build_scope_data, ood_queries, stratified_anchors
+from repro.data.pipeline import batches, make_lm_batch
+from repro.data.worldsim import DOMAIN_WEIGHTS, NUM_DOMAINS, World
+
+
+def test_registry_contains_all_assigned():
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.name == a and cfg.source
+
+
+def test_assigned_matrix_skips_match_design_doc():
+    long_ok = {a for a in ASSIGNED_ARCHS
+               if shape_applicable(get_config(a), INPUT_SHAPES["long_500k"])[0]}
+    assert long_ok == {"zamba2-7b", "gemma2-9b", "gemma2-2b", "mamba2-1.3b"}
+    for a in ASSIGNED_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), INPUT_SHAPES[s])[0]
+
+
+def test_long_context_variant_windows_everything():
+    cfg = long_context_variant(get_config("gemma2-9b"))
+    assert cfg.force_window == cfg.long_context_window > 0
+
+
+def test_world_heterogeneity():
+    """Fig. 16/17: models must differ in accuracy and verbosity."""
+    world = World(seed=0)
+    qs = world.sample_queries(200, seed=1)
+    accs, toks = {}, {}
+    for m in world.pool:
+        accs[m.name] = np.mean([world.correct_prob(m, q) for q in qs])
+        toks[m.name] = np.mean([world.expected_tokens(m, q) for q in qs])
+    assert max(accs.values()) - min(accs.values()) > 0.2
+    assert max(toks.values()) / min(toks.values()) > 1.5
+    # the premium unseen model is the strongest (Tab. 4 structure)
+    assert max(accs, key=accs.get) == "claude-sonnet-4.5"
+
+
+def test_anchor_set_mirrors_domain_distribution():
+    world = World(seed=0)
+    anchors = stratified_anchors(world, n=250, seed=7)
+    counts = np.bincount([a.domain for a in anchors], minlength=NUM_DOMAINS)
+    target = DOMAIN_WEIGHTS / DOMAIN_WEIGHTS.sum() * 250
+    assert np.abs(counts - target).max() <= 2   # Fig. 15 alignment
+
+
+def test_ood_queries_are_harder():
+    world = World(seed=0)
+    easy = world.sample_queries(300, seed=3)
+    hard = ood_queries(world, n=300, seed=3)
+    assert (np.mean([q.difficulty for q in hard])
+            > np.mean([q.difficulty for q in easy]) + 0.5)
+
+
+def test_scope_data_split_disjoint():
+    world = World(seed=0)
+    data = build_scope_data(world, n_queries=100, seed=0)
+    assert set(data.train_qids).isdisjoint(set(data.test_qids))
+    assert len(data.records) == 100 * len(data.models)
+
+
+def test_make_lm_batch_masks_prompt():
+    batch = make_lm_batch([[1, 2, 3]], [[4, 5]], max_len=8)
+    labels = batch["labels"][0]
+    # position 2 (last prompt token) predicts first target token (4)
+    assert labels[2] == 4 and labels[3] == 5
+    assert all(l == -100 for l in labels[:2]) and all(l == -100 for l in labels[4:])
+
+
+def test_batches_iterator_shapes():
+    data = {"x": np.arange(10)[:, None]}
+    got = list(batches(data, 4, seed=0))
+    assert len(got) == 2 and got[0]["x"].shape == (4, 1)
