@@ -68,4 +68,23 @@ def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
             ch = router.route(pool, alpha)
             dt = (time.perf_counter() - t0) / Q * 1e6
             emit(f"scope_alpha{alpha:g}", ch, dt)
+
+        # prediction-cache hot path: cold vs warm predict_pool through the
+        # repro.api engine (warm run never touches the estimator)
+        from repro.api import RouteRequest
+        engine = bundle.engine(models)
+        queries = [data.queries[int(q)] for q in qids]
+        req = RouteRequest(queries)
+        t0 = time.perf_counter()
+        cold = engine.predict(req)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = engine.predict(req)
+        t_warm = time.perf_counter() - t0
+        assert warm.cache_misses == 0 and warm.cache_hits == cold.cache_misses
+        rows.append((f"routing/{tag}/predict_cache",
+                     t_warm / Q * 1e6,
+                     f"cold_ms={t_cold * 1e3:.1f};warm_ms={t_warm * 1e3:.1f};"
+                     f"speedup={t_cold / max(t_warm, 1e-9):.1f}x;"
+                     f"pairs={cold.cache_misses}"))
     return rows

@@ -58,6 +58,14 @@ class Bundle:
                            self.library, self.world.models,
                            {m: i for i, m in enumerate(models)}, **kw)
 
+    def engine(self, models: List[str], which: str = "scope", **kw):
+        """A cache-enabled ScopeEngine over the given pool."""
+        from repro.api import EngineConfig, ScopeEngine
+        return ScopeEngine.build(EngineConfig(
+            estimator=self.estimator(which), retriever=self.retriever,
+            library=self.library,
+            models_meta={m: self.world.models[m] for m in models}, **kw))
+
 
 _BUNDLE: Optional[Bundle] = None
 

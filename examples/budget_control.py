@@ -1,15 +1,17 @@
 """Budget-aware control (Fig. 8 / Appendix D): hand SCOPE a set-level
-dollar budget; it solves for alpha* with the Prop. D.1 finite breakpoint
-search and routes within the budget.
+dollar budget via ``SetBudgetPolicy``; it solves for alpha* with the
+Prop. D.1 finite breakpoint search and routes within the budget.  Every
+budget in the sweep reuses the same cached pool predictions — one estimator
+pass for the whole figure.
 
   PYTHONPATH=src python examples/budget_control.py
 """
 import jax
 import numpy as np
 
+from repro.api import EngineConfig, RouteRequest, ScopeEngine, SetBudgetPolicy
 from repro.configs.scope_estimator import TINY
 from repro.core.estimator import ReasoningEstimator
-from repro.core.router import ScopeRouter
 from repro.launch.train import build_world
 from repro.models import model as M
 from repro.training.sft import build_sft_dataset, train_sft
@@ -21,26 +23,23 @@ def main():
     ds = build_sft_dataset(data, lib, retr, max_examples=2500)
     params, _ = train_sft(params, TINY, ds, steps=200, batch_size=32)
 
-    est = ReasoningEstimator(TINY, params)
-    router = ScopeRouter(est, retr, lib, world.models,
-                         {m: i for i, m in enumerate(data.models)})
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(TINY, params), retriever=retr,
+        library=lib, models_meta={m: world.models[m] for m in data.models}))
     qids = data.test_qids[:24]
     queries = [data.queries[int(q)] for q in qids]
-    pool = router.predict_pool(queries, data.models)
+    pool = engine.predict(RouteRequest(queries))
 
     lo = float(pool.cost_hat.min(1).sum())
     hi = float(pool.cost_hat.max(1).sum())
     print(f"feasible cost range for {len(qids)} queries: "
           f"${lo:.4f} .. ${hi:.4f}")
     for budget in np.geomspace(lo * 1.1, hi, 5):
-        alpha, choices, info = router.route_with_budget(pool, float(budget))
-        real = sum(data.record(int(q), data.models[c]).cost
-                   for q, c in zip(qids, choices))
-        acc = np.mean([data.record(int(q), data.models[c]).y
-                       for q, c in zip(qids, choices)])
-        print(f"budget=${budget:.4f} -> alpha*={alpha:.3f} "
-              f"predicted=${info['expected_cost']:.4f} "
-              f"realized=${real:.4f} acc={acc:.2f}")
+        rep = engine.serve(data, qids, SetBudgetPolicy(float(budget)))
+        print(f"budget=${budget:.4f} -> alpha*={rep.alpha:.3f} "
+              f"predicted=${rep.info['expected_cost']:.4f} "
+              f"realized=${rep.total_cost:.4f} acc={rep.accuracy:.2f} "
+              f"cache={rep.cache_hits}h/{rep.cache_misses}m")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,17 @@
 """Quickstart: build a world, fingerprint a model pool, train a tiny SCOPE
-estimator with hindsight-distillation SFT, and route a few queries.
+estimator with hindsight-distillation SFT, and route a few queries through
+the ``repro.api`` surface.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
+from repro.api import EngineConfig, FixedAlphaPolicy, ScopeEngine
 from repro.configs.scope_estimator import TINY
 from repro.core.estimator import ReasoningEstimator
 from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
 from repro.core.retrieval import AnchorRetriever
-from repro.core.router import ScopeRouter
 from repro.data.datasets import build_scope_data, stratified_anchors
 from repro.data.worldsim import World
 from repro.models import model as M
@@ -36,22 +37,17 @@ def main():
     params, losses = train_sft(params, TINY, ds, steps=200, batch_size=32)
     print(f"SFT loss {np.mean(losses[:10]):.2f} -> {np.mean(losses[-10:]):.2f}")
 
-    # 4. route held-out queries at two trade-off settings (§5)
-    est = ReasoningEstimator(TINY, params)
-    router = ScopeRouter(est, retriever, library, world.models,
-                         {m: i for i, m in enumerate(data.models)})
+    # 4. assemble the engine and serve held-out queries at two trade-offs
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(TINY, params), retriever=retriever,
+        library=library,
+        models_meta={m: world.models[m] for m in data.models}))
     qids = data.test_qids[:8]
-    queries = [data.queries[int(q)] for q in qids]
-    pool = router.predict_pool(queries, data.models)
     for alpha in (0.0, 1.0):
-        choices = router.route(pool, alpha)
-        accs = [data.record(int(q), data.models[c]).y
-                for q, c in zip(qids, choices)]
-        costs = [data.record(int(q), data.models[c]).cost
-                 for q, c in zip(qids, choices)]
-        print(f"alpha={alpha:.1f}: acc={np.mean(accs):.2f} "
-              f"cost=${np.sum(costs):.4f} "
-              f"picked={[data.models[c] for c in choices[:4]]}")
+        rep = engine.serve(data, qids, FixedAlphaPolicy(alpha))
+        picked = [d.model for d in rep.decisions[:4]]
+        print(f"alpha={alpha:.1f}: acc={rep.accuracy:.2f} "
+              f"cost=${rep.total_cost:.4f} picked={picked}")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,24 @@
-"""Serve a batch of requests through the SCOPE routing service, including
+"""Serve a batch of requests through the `repro.api` surface, including
 training-free onboarding of unseen (OOD) models — the paper's headline
-generalization mechanism.
+generalization mechanism — and cached re-serving.
+
+The flow demonstrates the two claims the API is built around:
+  1. scalable pool growth: after an initial serve, onboarding a new model
+     and re-serving the same batch reuses every cached (query, model)
+     estimate — the estimator runs only for the new model's pairs;
+  2. controllable trade-offs: the same batch is served under several
+     distinct ``RoutingPolicy`` implementations, no router internals touched.
 
   PYTHONPATH=src python examples/serve_router.py
 """
 import jax
-import numpy as np
 
+from repro.api import (
+    AccuracyFloorPolicy, CostCeilingPolicy, EngineConfig, FixedAlphaPolicy,
+    ScopeEngine, SetBudgetPolicy)
 from repro.core.estimator import ReasoningEstimator
-from repro.core.router import ScopeRouter
-from repro.data.datasets import build_scope_data
 from repro.launch.train import build_world
 from repro.models import model as M
-from repro.serving.router_service import RouterService
 from repro.training.sft import build_sft_dataset, train_sft
 from repro.configs.scope_estimator import TINY
 
@@ -22,28 +28,45 @@ def main():
     params = M.init_params(jax.random.PRNGKey(0), TINY)
     ds = build_sft_dataset(data, lib, retr, max_examples=2500)
     params, _ = train_sft(params, TINY, ds, steps=200, batch_size=32)
-    est = ReasoningEstimator(TINY, params)
 
-    # ---- seen pool ----
-    router = ScopeRouter(est, retr, lib, world.models,
-                         {m: i for i, m in enumerate(data.models)})
-    service = RouterService(router, data, data.models)
-    rep = service.serve(data.test_qids[:16], alpha=0.7)
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(TINY, params), retriever=retr,
+        library=lib, models_meta={m: world.models[m] for m in data.models}))
+
+    # ---- initial serve over the seen pool (cold cache) ----
+    qids = data.test_qids[:16]
+    rep = engine.serve(data, qids, FixedAlphaPolicy(0.7))
     print(f"[seen pool]   acc={rep.accuracy:.2f} cost=${rep.total_cost:.4f} "
-          f"overhead={rep.overhead_tokens}tok")
+          f"overhead={rep.overhead_tokens}tok "
+          f"cache={rep.cache_hits}h/{rep.cache_misses}m")
 
-    # ---- unseen pool: fingerprints only, no retraining ----
+    # ---- onboard the unseen models mid-session: fingerprints only, ----
+    # ---- no retraining; re-serving reuses every cached estimate     ----
     unseen = [m.name for m in world.pool if not m.seen]
     for m in unseen:
-        lib.onboard(world, m, seed=99)
-    ood = build_scope_data(world, n_queries=120, models=unseen, seed=3,
-                           difficulty_shift=0.9)
-    router2 = ScopeRouter(est, retr, lib, world.models,
-                          {m: i for i, m in enumerate(unseen)})
-    service2 = RouterService(router2, ood, unseen)
-    rep2 = service2.serve(ood.test_qids[:16], alpha=0.7)
-    print(f"[unseen pool] acc={rep2.accuracy:.2f} cost=${rep2.total_cost:.4f} "
-          f"portfolio={ {k: round(v,2) for k,v in rep2.per_model_share.items() if v>0} }")
+        engine.onboard(world, m, seed=99)
+    data.extend_models(unseen, seed=99)
+    rep2 = engine.serve(data, qids, FixedAlphaPolicy(0.7))
+    assert rep2.cache_misses == len(qids) * len(unseen), \
+        "estimator must run only for the onboarded models' pairs"
+    print(f"[+{len(unseen)} unseen] acc={rep2.accuracy:.2f} "
+          f"cost=${rep2.total_cost:.4f} overhead={rep2.overhead_tokens}tok "
+          f"cache={rep2.cache_hits}h/{rep2.cache_misses}m "
+          f"portfolio={ {k: round(v, 2) for k, v in rep2.per_model_share.items() if v > 0} }")
+
+    # ---- same batch, distinct control policies (now fully cached) ----
+    budget = rep2.total_cost * 0.5
+    ceiling = float(max(d.cost_hat for d in rep2.decisions))
+    for policy in (FixedAlphaPolicy(0.3),
+                   SetBudgetPolicy(budget),
+                   AccuracyFloorPolicy(0.6),
+                   CostCeilingPolicy(ceiling * 0.25, alpha=0.7)):
+        r = engine.serve(data, qids, policy)
+        assert r.cache_misses == 0, "policy sweep must be estimator-free"
+        extra = {k: v for k, v in r.info.items()
+                 if k in ("feasible", "fallback_queries")}
+        print(f"[{policy.name:>14}] alpha={r.alpha if r.alpha is None else round(r.alpha, 3)} "
+              f"acc={r.accuracy:.2f} cost=${r.total_cost:.4f} {extra}")
 
 
 if __name__ == "__main__":

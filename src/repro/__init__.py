@@ -1,4 +1,7 @@
 """repro: a multi-pod JAX training/serving framework implementing SCOPE
-(Scalable and Controllable Outcome Performance Estimator) routing."""
+(Scalable and Controllable Outcome Performance Estimator) routing.
+
+Public routing surface: ``repro.api`` (ScopeEngine, PoolRegistry,
+RoutingPolicy, PredictionCache)."""
 
 __version__ = "0.1.0"

@@ -1,0 +1,39 @@
+"""repro.api — the public SCOPE routing surface.
+
+  ScopeEngine      — facade owning estimator, retriever, library, and pool
+  EngineConfig     — single typed builder input (``ScopeEngine.build``)
+  PoolRegistry     — live pool: add_model / remove_model / onboard
+  RoutingPolicy    — pluggable decision policies (subclass to extend)
+  PredictionCache  — (query_id, model, estimator_version) -> estimate
+
+Legacy callers keep working through the ``ScopeRouter`` / ``RouterService``
+shims in ``repro.core.router`` / ``repro.serving.router_service``; new code
+should enter through this package.
+"""
+from repro.api.cache import CachedPrediction, CacheStats, PredictionCache
+from repro.api.engine import ScopeEngine
+from repro.api.policy import (
+    AccuracyFloorPolicy, CostCeilingPolicy, FixedAlphaPolicy, PolicyDecision,
+    RoutingPolicy, SetBudgetPolicy)
+from repro.api.registry import PoolRegistry
+from repro.api.types import (
+    BatchReport, EngineConfig, PoolPredictions, RouteDecision, RouteRequest)
+
+__all__ = [
+    "AccuracyFloorPolicy",
+    "BatchReport",
+    "CacheStats",
+    "CachedPrediction",
+    "CostCeilingPolicy",
+    "EngineConfig",
+    "FixedAlphaPolicy",
+    "PolicyDecision",
+    "PoolPredictions",
+    "PoolRegistry",
+    "PredictionCache",
+    "RouteDecision",
+    "RouteRequest",
+    "RoutingPolicy",
+    "ScopeEngine",
+    "SetBudgetPolicy",
+]

@@ -1,0 +1,106 @@
+"""Prediction cache for pre-hoc estimates.
+
+Keyed by ``(query_id, model, estimator_version)`` so ``ScopeEngine.predict``
+only runs the estimator for missing pairs.  Onboarding a new model onto an
+already-served query set then costs O(Q) estimator calls instead of a full
+O(Q x M) recompute (the Appendix F adaptation argument, applied to serving).
+
+``query_id`` must identify query *content* — the engine derives it from the
+query embedding, not the dataset-local ``qid``, so two datasets that reuse
+integer ids never collide.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.data.worldsim import Query
+
+
+def query_key(query: Query) -> int:
+    """Stable content-derived id: dataset qid mixed with an embedding CRC."""
+    crc = zlib.crc32(np.ascontiguousarray(query.embedding,
+                                          np.float32).tobytes())
+    return (int(query.qid) << 32) ^ crc
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedPrediction:
+    """The estimator's raw parsed output for one (query, model) pair."""
+    y_hat: int
+    len_hat: float
+    well_formed: bool
+    p_conf: float
+    pred_tokens: int            # overhead spent when this entry was computed
+    prompt_tokens: int          # serialized prompt length (cost accounting)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> "CacheStats":
+        return CacheStats(self.hits, self.misses, self.evictions)
+
+    def delta(self, since: "CacheStats") -> "CacheStats":
+        return CacheStats(self.hits - since.hits, self.misses - since.misses,
+                          self.evictions - since.evictions)
+
+
+class PredictionCache:
+    """LRU map ``(query_id, model, estimator_version) -> CachedPrediction``."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and capacity <= 0:
+            raise ValueError("capacity must be positive or None")
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._store: "OrderedDict[Tuple[int, str, str], CachedPrediction]" = \
+            OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: Tuple[int, str, str]) -> bool:
+        return key in self._store
+
+    def get(self, query_id: int, model: str, version: str
+            ) -> Optional[CachedPrediction]:
+        entry = self._store.get((query_id, model, version))
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._store.move_to_end((query_id, model, version))
+        self.stats.hits += 1
+        return entry
+
+    def put(self, query_id: int, model: str, version: str,
+            pred: CachedPrediction) -> None:
+        key = (query_id, model, version)
+        self._store[key] = pred
+        self._store.move_to_end(key)
+        if self.capacity is not None:
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+                self.stats.evictions += 1
+
+    def invalidate_model(self, model: str) -> int:
+        """Drop every entry for ``model`` (e.g. after re-fingerprinting)."""
+        drop = [k for k in self._store if k[1] == model]
+        for k in drop:
+            del self._store[k]
+        return len(drop)
+
+    def clear(self) -> None:
+        self._store.clear()

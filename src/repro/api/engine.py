@@ -1,0 +1,314 @@
+"""``ScopeEngine`` — the single public entry point for SCOPE routing.
+
+The engine owns the four components the paper's pipeline needs at serve time
+(reasoning estimator, anchor retriever, fingerprint library, model pool) and
+exposes the routing surface as four verbs:
+
+  predict  — cache-aware pool-wide pre-hoc estimation (Eq. 5, Eq. 24)
+  route    — apply a ``RoutingPolicy`` to a request, report expected metrics
+  serve    — route + execute against a ``ScopeData`` world, report realized
+  onboard  — training-free pool growth (fingerprint pass, §3.1)
+
+``predict`` consults the ``PredictionCache`` keyed by
+``(query_id, model, estimator_version)`` and runs the estimator only for the
+missing (query, model) pairs, so onboarding a model onto an already-served
+query set costs O(Q) new estimator calls instead of an O(Q x M) recompute.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.api.cache import (
+    CachedPrediction, CacheStats, PredictionCache, query_key)
+from repro.api.policy import PolicyDecision, RoutingPolicy
+from repro.api.registry import PoolRegistry
+from repro.api.types import (
+    BatchReport, EngineConfig, RouteDecision, RouteRequest)
+from repro.core import calibration, serialization, utility
+from repro.core.fingerprint import Fingerprint
+from repro.core.router import PoolPredictions
+from repro.data.datasets import ScopeData
+from repro.data.worldsim import PoolModel, World
+
+FALLBACK_LEN_HAT = 512.0    # tokens charged when the estimate is malformed
+
+
+class ScopeEngine:
+    def __init__(self, config: EngineConfig, registry: PoolRegistry,
+                 cache: PredictionCache):
+        self.config = config
+        self.registry = registry
+        self.cache = cache
+
+    # -- construction --------------------------------------------------
+    @classmethod
+    def build(cls, config: EngineConfig) -> "ScopeEngine":
+        """Validate an ``EngineConfig`` and wire the facade."""
+        for field in ("estimator", "retriever", "library"):
+            if getattr(config, field) is None:
+                raise ValueError(f"EngineConfig.{field} is required")
+        if config.registry is not None and config.models_meta is not None:
+            raise ValueError(
+                "pass either EngineConfig.registry or .models_meta, not both")
+        registry = config.registry
+        if registry is None:
+            registry = PoolRegistry(config.library, config.models_meta)
+        elif registry.library is not config.library:
+            raise ValueError("registry.library and config.library differ")
+        return cls(config, registry, PredictionCache(config.cache_capacity))
+
+    # -- owned components ----------------------------------------------
+    @property
+    def estimator(self):
+        return self.config.estimator
+
+    @property
+    def retriever(self):
+        return self.config.retriever
+
+    @property
+    def library(self):
+        return self.config.library
+
+    def set_estimator(self, estimator, version: str) -> None:
+        """Swap estimator weights; the version bump keys a fresh cache space."""
+        self.config.estimator = estimator
+        self.config.estimator_version = version
+
+    # -- pool lifecycle ------------------------------------------------
+    def onboard(self, world: World, name: str, *, seed: int = 0,
+                meta: Optional[PoolModel] = None,
+                refresh: bool = False) -> Fingerprint:
+        """Training-free: register + one fingerprint pass, no weight update.
+
+        ``refresh=True`` re-fingerprints an already-known model and drops
+        its cached predictions (they were computed from the old fingerprint).
+        """
+        fp = self.registry.onboard(world, name, seed=seed, meta=meta,
+                                   refresh=refresh)
+        if refresh:
+            self.cache.invalidate_model(name)
+        return fp
+
+    def remove_model(self, name: str) -> None:
+        self.registry.remove_model(name)
+        self.cache.invalidate_model(name)
+
+    # -- prediction ----------------------------------------------------
+    def predict(self, request: RouteRequest, *,
+                rng: Optional[jax.Array] = None,
+                use_cache: Optional[bool] = None) -> PoolPredictions:
+        """Pool-wide pre-hoc estimates; estimator runs on cache misses only.
+
+        The default pool is ``registry.routable()`` — a model staged with
+        ``add_model`` but not yet fingerprinted is excluded rather than
+        failing the whole batch; naming it in ``request.models`` raises.
+        """
+        cfg = self.config
+        if use_cache is None:
+            use_cache = cfg.enable_cache
+        models = (list(request.models) if request.models is not None
+                  else self.registry.routable())
+        queries = list(request.queries)
+        Q, M = len(queries), len(models)
+        if Q == 0 or M == 0:
+            return PoolPredictions(
+                models, np.zeros((Q, M)), np.zeros((Q, M), int),
+                np.zeros((Q, M)), np.zeros((Q, M)), np.zeros((Q, M), bool),
+                np.zeros((Q, M)), np.zeros((Q, cfg.k)),
+                np.zeros((Q, cfg.k), int))
+        for m in models:
+            if m not in self.registry:
+                raise KeyError(f"model {m!r} is not registered; "
+                               "PoolRegistry.add_model/onboard it first")
+            if m not in self.library:
+                raise KeyError(f"model {m!r} has no fingerprint; "
+                               "PoolRegistry.onboard it first")
+
+        embs = request.query_embs
+        if embs is None:
+            embs = np.stack([q.embedding for q in queries])
+        sims, idx = self.retriever.retrieve(embs, cfg.k)
+
+        version = cfg.estimator_version
+        qkeys = [query_key(q) for q in queries]
+        entries: Dict[Tuple[int, int], CachedPrediction] = {}
+        missing: List[Tuple[int, int]] = []
+        before = self.cache.stats.snapshot()
+        for qi in range(Q):
+            for mi, m in enumerate(models):
+                e = self.cache.get(qkeys[qi], m, version) if use_cache else None
+                if e is None:
+                    missing.append((qi, mi))
+                else:
+                    entries[(qi, mi)] = e
+
+        prompts: List[List[int]] = []
+        for qi, mi in missing:
+            m = models[mi]
+            prompts.append(serialization.serialize_prompt(
+                self.registry.meta(m), self.registry.index(m),
+                self.library.anchor_set, self.library.get(m),
+                sims[qi], idx[qi], queries[qi]))
+        preds = self.estimator.predict(prompts, rng=rng) if prompts else []
+        if len(preds) != len(prompts):
+            raise RuntimeError(
+                f"estimator returned {len(preds)} predictions for "
+                f"{len(prompts)} prompts")
+        for (qi, mi), prompt, pr in zip(missing, prompts, preds):
+            entry = CachedPrediction(
+                y_hat=int(pr.y_hat), len_hat=float(pr.len_hat),
+                well_formed=bool(pr.well_formed), p_conf=float(pr.p_conf),
+                pred_tokens=int(pr.pred_tokens), prompt_tokens=len(prompt))
+            entries[(qi, mi)] = entry
+            if use_cache:
+                self.cache.put(qkeys[qi], models[mi], version, entry)
+
+        p_hat = np.zeros((Q, M))
+        y_hat = np.zeros((Q, M), int)
+        len_hat = np.zeros((Q, M))
+        cost_hat = np.zeros((Q, M))
+        wf = np.zeros((Q, M), bool)
+        overhead = np.zeros((Q, M))
+        fresh = set(missing)
+        for (qi, mi), e in entries.items():
+            meta = self.registry.meta(models[mi])
+            lh = e.len_hat if e.well_formed else FALLBACK_LEN_HAT
+            p_hat[qi, mi] = e.p_conf if cfg.use_confidence else float(e.y_hat)
+            y_hat[qi, mi] = e.y_hat
+            len_hat[qi, mi] = lh
+            # actual serialized prompt length, not a flat constant (Eq. 24)
+            cost_hat[qi, mi] = (e.prompt_tokens * meta.price_in
+                                + lh * meta.price_out) / 1e6
+            wf[qi, mi] = e.well_formed
+            # cached pairs spend no new estimator tokens on this call
+            overhead[qi, mi] = e.pred_tokens if (qi, mi) in fresh else 0.0
+        if use_cache:
+            delta = self.cache.stats.delta(before)
+        else:
+            delta = CacheStats(misses=len(missing))
+        return PoolPredictions(models, p_hat, y_hat, len_hat, cost_hat, wf,
+                               overhead, sims, idx,
+                               cache_hits=delta.hits,
+                               cache_misses=delta.misses)
+
+    # -- decision math (Eq. 15, shared by policies) --------------------
+    def utilities(self, pool: PoolPredictions, alpha: float, *,
+                  with_calibration: bool = True) -> np.ndarray:
+        """Final decision scores (Eq. 15) for each (query, model)."""
+        cfg = self.config
+        Q, M = pool.p_hat.shape
+        u_final = np.zeros((Q, M))
+        wc = (utility.w_cal(alpha, w_base=cfg.w_base)
+              if with_calibration else 0.0)
+        fps = {m: self.library.get(m) for m in pool.models}
+        for qi in range(Q):
+            c_norm = utility.normalize_cost(pool.cost_hat[qi])
+            u_pred = utility.predicted_utility(
+                pool.p_hat[qi], c_norm, alpha,
+                gamma_base=cfg.gamma_base, beta=cfg.beta)
+            if with_calibration and wc > 0.0:
+                u_cal = calibration.calibration_utilities(
+                    fps, pool.models, pool.idx[qi], pool.sims[qi], alpha,
+                    gamma_base=cfg.gamma_base, beta=cfg.beta)
+            else:
+                u_cal = np.zeros(M)
+            u_final[qi] = (1.0 - wc) * u_pred + wc * u_cal
+        return u_final
+
+    def affine_scores(self, pool: PoolPredictions
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(p_hat, s_hat) for the affine Prop. D.1 search (Eq. 17)."""
+        Q, M = pool.p_hat.shape
+        s_hat = np.zeros((Q, M))
+        for qi in range(Q):
+            c_norm = utility.normalize_cost(pool.cost_hat[qi])
+            s_hat[qi] = utility.cost_score(
+                c_norm, 1.0, gamma_base=self.config.gamma_base, beta=0.0)
+        return pool.p_hat, s_hat
+
+    def decide(self, pool: PoolPredictions, policy: RoutingPolicy
+               ) -> PolicyDecision:
+        return policy.decide(pool, self)
+
+    def _assemble(self, policy_name: str, decision: PolicyDecision,
+                  pool: PoolPredictions, query_ids: Sequence[int], *,
+                  accuracy: float, total_cost: float, exec_tokens: int,
+                  executed: bool, extra_info: Optional[Dict] = None
+                  ) -> BatchReport:
+        """Shared per-query decision list + batch accounting."""
+        choices = np.asarray(decision.choices, int)
+        decisions = [
+            RouteDecision(query_id=int(q), model=pool.models[int(c)],
+                          alpha=decision.alpha,
+                          p_hat=float(pool.p_hat[i, c]),
+                          cost_hat=float(pool.cost_hat[i, c]))
+            for i, (q, c) in enumerate(zip(query_ids, choices))]
+        share = {m: 0 for m in pool.models}
+        for d in decisions:
+            share[d.model] += 1
+        return BatchReport(
+            policy=policy_name, alpha=decision.alpha, decisions=decisions,
+            accuracy=accuracy, total_cost=total_cost,
+            exec_tokens=exec_tokens,
+            overhead_tokens=int(pool.pred_overhead.sum()),
+            per_model_share={m: v / len(decisions) for m, v in share.items()},
+            cache_hits=pool.cache_hits, cache_misses=pool.cache_misses,
+            executed=executed, info=dict(decision.info, **(extra_info or {})))
+
+    # -- routing verbs -------------------------------------------------
+    def route(self, request: RouteRequest, policy: RoutingPolicy, *,
+              rng: Optional[jax.Array] = None,
+              use_cache: Optional[bool] = None) -> BatchReport:
+        """Decide without executing; accuracy/cost are *expected* values."""
+        models = (list(request.models) if request.models is not None
+                  else self.registry.routable())
+        if len(request.queries) == 0:
+            return BatchReport.empty(policy.name, models)
+        pool = self.predict(request, rng=rng, use_cache=use_cache)
+        decision = policy.decide(pool, self)
+        choices = np.asarray(decision.choices, int)
+        rows = np.arange(len(choices))
+        return self._assemble(
+            policy.name, decision, pool, [q.qid for q in request.queries],
+            accuracy=float(np.mean(pool.p_hat[rows, choices])),
+            total_cost=float(np.sum(pool.cost_hat[rows, choices])),
+            exec_tokens=0, executed=False, extra_info={"expected": True})
+
+    def serve(self, data: ScopeData, qids: Sequence[int],
+              policy: RoutingPolicy, *, models: Optional[Sequence[str]] = None,
+              rng: Optional[jax.Array] = None,
+              use_cache: Optional[bool] = None) -> BatchReport:
+        """Route and execute against the world; realized accuracy/cost."""
+        qids = [int(q) for q in qids]
+        pool_models = (list(models) if models is not None
+                       else self.registry.routable())
+        if not qids:
+            return BatchReport.empty(policy.name, pool_models)
+        queries = [data.queries[q] for q in qids]
+        pool = self.predict(RouteRequest(queries, models=pool_models),
+                            rng=rng, use_cache=use_cache)
+        decision = policy.decide(pool, self)
+        return self.execute(data, qids, pool, decision, policy.name)
+
+    def execute(self, data: ScopeData, qids: Sequence[int],
+                pool: PoolPredictions, decision: PolicyDecision,
+                policy_name: str = "policy") -> BatchReport:
+        """Run the chosen models against the world and account the batch."""
+        qids = [int(q) for q in qids]
+        if not qids:
+            return BatchReport.empty(policy_name, pool.models)
+        choices = np.asarray(decision.choices, int)
+        accs, costs, tokens = [], [], 0
+        for q, c in zip(qids, choices):
+            rec = data.record(q, pool.models[int(c)])
+            accs.append(rec.y)
+            costs.append(rec.cost)
+            tokens += rec.tokens
+        return self._assemble(
+            policy_name, decision, pool, qids,
+            accuracy=float(np.mean(accs)), total_cost=float(np.sum(costs)),
+            exec_tokens=int(tokens), executed=True)

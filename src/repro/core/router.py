@@ -1,5 +1,10 @@
 """The SCOPE router: fingerprint retrieval -> pre-hoc estimation ->
 calibrated, budget-aware decision (SCOPE §5, Eq. 15/16/20).
+
+``ScopeRouter`` is now a thin legacy shim over ``repro.api.ScopeEngine``
+(see ``repro/api/engine.py`` for the canonical implementation); it keeps the
+frozen-dict constructor signature for existing callers.  New code should
+build a ``ScopeEngine`` directly.
 """
 from __future__ import annotations
 
@@ -9,13 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core import alpha_search, calibration, serialization, utility
-from repro.core.estimator import Prediction, ReasoningEstimator
-from repro.core.fingerprint import FingerprintLibrary
-from repro.core.retrieval import AnchorRetriever
 from repro.data.worldsim import PoolModel, Query
-
-PROMPT_TOKENS_EST = 200.0       # serialized prompt size charged to the pool model
 
 
 @dataclasses.dataclass
@@ -27,14 +26,22 @@ class PoolPredictions:
     len_hat: np.ndarray         # (Q, M) predicted completion tokens
     cost_hat: np.ndarray        # (Q, M) predicted $ per call
     well_formed: np.ndarray     # (Q, M) format gate
-    pred_overhead: np.ndarray   # (Q, M) estimator tokens spent predicting
+    pred_overhead: np.ndarray   # (Q, M) estimator tokens spent on this call
     sims: np.ndarray            # (Q, K) retrieval similarities
     idx: np.ndarray             # (Q, K) retrieved anchor ids
+    cache_hits: int = 0         # pairs served from the PredictionCache
+    cache_misses: int = 0       # pairs that ran the estimator
 
 
 class ScopeRouter:
-    def __init__(self, estimator: ReasoningEstimator,
-                 retriever: AnchorRetriever, library: FingerprintLibrary,
+    """Legacy facade: frozen model dicts in, engine-backed routing out.
+
+    The shim runs uncached (every ``predict_pool`` call hits the estimator),
+    matching the pre-engine behavior; use ``repro.api.ScopeEngine`` for the
+    prediction cache and pluggable policies.
+    """
+
+    def __init__(self, estimator, retriever, library,
                  models_meta: Dict[str, PoolModel],
                  model_indices: Dict[str, int], *, k: int = 5,
                  gamma_base: float = 1.0, beta: float = 2.0,
@@ -49,6 +56,15 @@ class ScopeRouter:
         self.beta = beta
         self.w_base = w_base
         self.use_confidence = use_confidence
+        # deferred import: repro.api depends on this module for the
+        # PoolPredictions type, so the shim resolves the engine lazily
+        from repro.api import EngineConfig, PoolRegistry, ScopeEngine
+        registry = PoolRegistry(library, models_meta, indices=model_indices)
+        self.engine = ScopeEngine.build(EngineConfig(
+            estimator=estimator, retriever=retriever, library=library,
+            registry=registry, k=k, gamma_base=gamma_base, beta=beta,
+            w_base=w_base, use_confidence=use_confidence,
+            enable_cache=False))
 
     # ------------------------------------------------------------------
     def predict_pool(self, queries: Sequence[Query],
@@ -57,64 +73,17 @@ class ScopeRouter:
                      rng: Optional[jax.Array] = None) -> PoolPredictions:
         """Run the estimator for every (query, model) pair — Eq. 24's
         prediction overhead term; one batched engine pass."""
-        models = list(models)
-        Q, M = len(queries), len(models)
-        if query_embs is None:
-            query_embs = np.stack([q.embedding for q in queries])
-        sims, idx = self.retriever.retrieve(query_embs, self.k)
-
-        prompts: List[List[int]] = []
-        for qi, q in enumerate(queries):
-            for m in models:
-                fp = self.library.get(m)
-                meta = self.models_meta[m]
-                prompts.append(serialization.serialize_prompt(
-                    meta, self.model_indices.get(m, 0), self.library.anchor_set,
-                    fp, sims[qi], idx[qi], q))
-        preds = self.estimator.predict(prompts, rng=rng)
-
-        p_hat = np.zeros((Q, M))
-        y_hat = np.zeros((Q, M), int)
-        len_hat = np.zeros((Q, M))
-        cost_hat = np.zeros((Q, M))
-        wf = np.zeros((Q, M), bool)
-        overhead = np.zeros((Q, M))
-        for qi in range(Q):
-            for mi, m in enumerate(models):
-                pr: Prediction = preds[qi * M + mi]
-                meta = self.models_meta[m]
-                p_hat[qi, mi] = pr.p_conf if self.use_confidence else float(pr.y_hat)
-                y_hat[qi, mi] = pr.y_hat
-                lh = pr.len_hat if pr.well_formed else 512.0
-                len_hat[qi, mi] = lh
-                cost_hat[qi, mi] = (PROMPT_TOKENS_EST * meta.price_in
-                                    + lh * meta.price_out) / 1e6
-                wf[qi, mi] = pr.well_formed
-                overhead[qi, mi] = pr.pred_tokens
-        return PoolPredictions(models, p_hat, y_hat, len_hat, cost_hat, wf,
-                               overhead, sims, idx)
+        from repro.api import RouteRequest
+        return self.engine.predict(
+            RouteRequest(list(queries), models=list(models),
+                         query_embs=query_embs), rng=rng)
 
     # ------------------------------------------------------------------
     def utilities(self, pool: PoolPredictions, alpha: float,
                   *, with_calibration: bool = True) -> np.ndarray:
         """Final decision scores (Eq. 15) for each (query, model)."""
-        Q, M = pool.p_hat.shape
-        u_final = np.zeros((Q, M))
-        wc = utility.w_cal(alpha, w_base=self.w_base) if with_calibration else 0.0
-        fps = {m: self.library.get(m) for m in pool.models}
-        for qi in range(Q):
-            c_norm = utility.normalize_cost(pool.cost_hat[qi])
-            u_pred = utility.predicted_utility(
-                pool.p_hat[qi], c_norm, alpha,
-                gamma_base=self.gamma_base, beta=self.beta)
-            if with_calibration and wc > 0.0:
-                u_cal = calibration.calibration_utilities(
-                    fps, pool.models, pool.idx[qi], pool.sims[qi], alpha,
-                    gamma_base=self.gamma_base, beta=self.beta)
-            else:
-                u_cal = np.zeros(M)
-            u_final[qi] = (1.0 - wc) * u_pred + wc * u_cal
-        return u_final
+        return self.engine.utilities(pool, alpha,
+                                     with_calibration=with_calibration)
 
     def route(self, pool: PoolPredictions, alpha: float,
               *, with_calibration: bool = True) -> np.ndarray:
@@ -128,12 +97,6 @@ class ScopeRouter:
                           ) -> Tuple[float, np.ndarray, Dict]:
         """Appendix D: pick alpha* maximizing expected accuracy s.t. the
         set-level budget, via the Prop. D.1 finite breakpoint search."""
-        Q, M = pool.p_hat.shape
-        s_hat = np.zeros((Q, M))
-        for qi in range(Q):
-            c_norm = utility.normalize_cost(pool.cost_hat[qi])
-            s_hat[qi] = utility.cost_score(c_norm, 1.0,
-                                           gamma_base=self.gamma_base,
-                                           beta=0.0)
-        return alpha_search.budget_alpha(pool.p_hat, s_hat, pool.cost_hat,
-                                         budget)
+        from repro.api import SetBudgetPolicy
+        d = self.engine.decide(pool, SetBudgetPolicy(budget))
+        return float(d.alpha), d.choices, d.info

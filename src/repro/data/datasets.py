@@ -37,6 +37,20 @@ class ScopeData:
     def record(self, qid: int, model: str) -> Interaction:
         return self.records[(qid, model)]
 
+    def extend_models(self, names: Sequence[str], *, seed: int = 0) -> None:
+        """Sample interactions for newly onboarded models over the existing
+        query set — the world-sim analogue of serving them live."""
+        rng = np.random.default_rng(seed)
+        for name in names:
+            if name in self.models:
+                continue
+            m = self.world.models[name]
+            for q in self.queries:
+                y, tokens, cost = self.world.sample_interaction(m, q, rng)
+                self.records[(q.qid, name)] = Interaction(q.qid, name, y,
+                                                          tokens, cost)
+            self.models.append(name)
+
 
 def build_scope_data(world: World, *, n_queries: int = 2000,
                      models: Optional[Sequence[str]] = None,

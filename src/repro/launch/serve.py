@@ -1,11 +1,13 @@
-"""SCOPE routing service driver.
+"""SCOPE routing service driver on the ``repro.api`` surface.
 
-Loads (or quickly trains) an estimator, fingerprints the pool — including
-the unseen OOD models, which need NO retraining — and serves a batch of
-queries at a chosen alpha or under a set-level budget.
+Loads (or quickly trains) an estimator, assembles a ``ScopeEngine``,
+fingerprints the pool — including the unseen OOD models, which need NO
+retraining — and serves a batch of queries under a chosen routing policy.
 
   PYTHONPATH=src python -m repro.launch.serve --alpha 0.6
   PYTHONPATH=src python -m repro.launch.serve --budget 0.5 --ood
+  PYTHONPATH=src python -m repro.launch.serve --accuracy-floor 0.7
+  PYTHONPATH=src python -m repro.launch.serve --cost-ceiling 0.002
 """
 from __future__ import annotations
 
@@ -13,16 +15,28 @@ import argparse
 import json
 
 import jax
-import numpy as np
 
+from repro.api import (
+    AccuracyFloorPolicy, CostCeilingPolicy, EngineConfig, FixedAlphaPolicy,
+    ScopeEngine, SetBudgetPolicy)
 from repro.core.estimator import ReasoningEstimator
-from repro.core.router import ScopeRouter
 from repro.data.datasets import build_scope_data
 from repro.launch.train import build_world, estimator_config
 from repro.models import model as M
-from repro.serving.router_service import RouterService
 from repro.training import checkpoint
 from repro.training.sft import build_sft_dataset, train_sft
+
+
+def pick_policy(args):
+    if args.budget is not None:
+        return SetBudgetPolicy(args.budget)
+    if args.accuracy_floor is not None:
+        return AccuracyFloorPolicy(args.accuracy_floor)
+    if args.cost_ceiling is not None:
+        return CostCeilingPolicy(
+            args.cost_ceiling,
+            alpha=args.alpha if args.alpha is not None else 0.6)
+    return FixedAlphaPolicy(args.alpha if args.alpha is not None else 0.6)
 
 
 def main(argv=None):
@@ -30,14 +44,17 @@ def main(argv=None):
     ap.add_argument("--size", default="tiny")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--alpha", type=float, default=None)
-    ap.add_argument("--budget", type=float, default=None)
+    ap.add_argument("--budget", type=float, default=None,
+                    help="set-level $ budget (SetBudgetPolicy)")
+    ap.add_argument("--accuracy-floor", type=float, default=None,
+                    help="expected-accuracy floor (AccuracyFloorPolicy)")
+    ap.add_argument("--cost-ceiling", type=float, default=None,
+                    help="per-query $ cap (CostCeilingPolicy)")
     ap.add_argument("--ood", action="store_true",
                     help="route over the unseen (OOD) model pool")
     ap.add_argument("--queries", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.alpha is None and args.budget is None:
-        args.alpha = 0.6
 
     cfg = estimator_config(args.size)
     world, data, lib, retr = build_world(600, 250, args.seed)
@@ -50,29 +67,31 @@ def main(argv=None):
                                seed=args.seed)
         params, _ = train_sft(params, cfg, ds, steps=250, batch_size=64)
 
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(cfg, params), retriever=retr,
+        library=lib, models_meta={m: world.models[m] for m in data.models}))
+
     if args.ood:
         pool = [m.name for m in world.pool if not m.seen]
         # training-free onboarding: fingerprints only, no weight updates
         for m in pool:
-            if m not in lib:
-                lib.onboard(world, m, seed=args.seed + 99)
+            engine.onboard(world, m, seed=args.seed + 99)
         data = build_scope_data(world, n_queries=300, models=pool,
                                 seed=args.seed + 1, difficulty_shift=0.9)
     else:
         pool = data.models
 
-    est = ReasoningEstimator(cfg, params)
-    router = ScopeRouter(est, retr, lib, world.models,
-                         {m: i for i, m in enumerate(pool)})
-    service = RouterService(router, data, pool)
+    policy = pick_policy(args)
     qids = data.test_qids[: args.queries]
-    report = service.serve(qids, alpha=args.alpha, budget=args.budget)
+    report = engine.serve(data, qids, policy, models=pool)
     print(json.dumps({
+        "policy": report.policy,
         "alpha": report.alpha,
         "accuracy": report.accuracy,
         "total_cost_usd": round(report.total_cost, 4),
         "exec_tokens": report.exec_tokens,
         "prediction_overhead_tokens": report.overhead_tokens,
+        "cache": {"hits": report.cache_hits, "misses": report.cache_misses},
         "portfolio": {k: round(v, 3) for k, v in
                       report.per_model_share.items() if v > 0},
     }, indent=2))

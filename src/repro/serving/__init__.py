@@ -1,2 +1,6 @@
-"""Serving substrate: KV-cache sampler, batched engine, router service."""
-from repro.serving import engine, sampler  # noqa: F401
+"""Serving substrate: KV-cache sampler, batched engine, router service.
+
+The routing entry point is ``repro.api.ScopeEngine``; ``router_service``
+keeps the legacy ``RouterService`` shim on top of it.
+"""
+from repro.serving import engine, router_service, sampler  # noqa: F401

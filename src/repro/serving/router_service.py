@@ -1,19 +1,20 @@
 """End-to-end routing service: SCOPE decision + (simulated) execution.
 
-Routes each query with the SCOPE router, "executes" the chosen pool model
-against the world (standing in for the API call), and accounts tokens/$ —
-including the estimator's own prediction overhead (Eq. 24).
+``RouterService`` is a thin legacy shim over ``repro.api.ScopeEngine``: the
+``alpha`` / ``budget`` kwargs map onto ``FixedAlphaPolicy`` /
+``SetBudgetPolicy`` and execution/accounting live in ``ScopeEngine.execute``
+(Eq. 24 overhead included).  New code should call the engine directly and
+pass a ``RoutingPolicy``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.core.router import PoolPredictions, ScopeRouter
 from repro.data.datasets import ScopeData
-from repro.data.worldsim import Query
 
 
 @dataclasses.dataclass
@@ -26,6 +27,16 @@ class ServiceReport:
     overhead_tokens: int
     per_model_share: Dict[str, float]
 
+    @classmethod
+    def empty(cls, models: Sequence[str],
+              alpha: Optional[float] = None) -> "ServiceReport":
+        """Explicit zero-query report: no NaNs, no divisions by zero."""
+        return cls(choices=np.zeros(0, int),
+                   alpha=float(alpha) if alpha is not None else 0.0,
+                   accuracy=0.0, total_cost=0.0, exec_tokens=0,
+                   overhead_tokens=0,
+                   per_model_share={m: 0.0 for m in models})
+
 
 class RouterService:
     def __init__(self, router: ScopeRouter, data: ScopeData,
@@ -37,26 +48,24 @@ class RouterService:
     def serve(self, qids: Sequence[int], *, alpha: Optional[float] = None,
               budget: Optional[float] = None,
               pool: Optional[PoolPredictions] = None) -> ServiceReport:
-        queries = [self.data.queries[int(q)] for q in qids]
-        if pool is None:
-            pool = self.router.predict_pool(queries, self.models)
+        from repro.api import FixedAlphaPolicy, RouteRequest, SetBudgetPolicy
+        if len(qids) == 0:
+            return ServiceReport.empty(self.models, alpha)
         if budget is not None:
-            alpha, choices, _ = self.router.route_with_budget(pool, budget)
+            policy = SetBudgetPolicy(budget)
         else:
             assert alpha is not None
-            choices = self.router.route(pool, alpha)
-
-        accs, costs, tokens = [], [], 0
-        share = {m: 0 for m in self.models}
-        for q, c in zip(qids, choices):
-            rec = self.data.record(int(q), self.models[int(c)])
-            accs.append(rec.y)
-            costs.append(rec.cost)
-            tokens += rec.tokens
-            share[self.models[int(c)]] += 1
+            policy = FixedAlphaPolicy(alpha)
+        engine = self.router.engine
+        if pool is None:
+            queries = [self.data.queries[int(q)] for q in qids]
+            pool = engine.predict(RouteRequest(queries, models=self.models))
+        decision = engine.decide(pool, policy)
+        rep = engine.execute(self.data, qids, pool, decision, policy.name)
         return ServiceReport(
-            choices=choices, alpha=float(alpha),
-            accuracy=float(np.mean(accs)), total_cost=float(np.sum(costs)),
-            exec_tokens=tokens,
-            overhead_tokens=int(pool.pred_overhead.sum()),
-            per_model_share={m: v / len(qids) for m, v in share.items()})
+            choices=np.asarray(decision.choices, int),
+            alpha=float(decision.alpha),
+            accuracy=rep.accuracy, total_cost=rep.total_cost,
+            exec_tokens=rep.exec_tokens,
+            overhead_tokens=rep.overhead_tokens,
+            per_model_share=rep.per_model_share)

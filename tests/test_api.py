@@ -1,0 +1,327 @@
+"""The repro.api surface: engine facade, live registry, prediction cache,
+and pluggable routing policies.
+
+Uses a deterministic fake estimator so these tests exercise the API
+contract (cache accounting, onboarding, policy behavior) without paying for
+SFT; the trained-estimator path is covered by test_router_e2e.py.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AccuracyFloorPolicy, BatchReport, CostCeilingPolicy, EngineConfig,
+    FixedAlphaPolicy, PoolRegistry, PredictionCache, RouteRequest,
+    ScopeEngine, SetBudgetPolicy)
+from repro.api.cache import CachedPrediction
+from repro.core import serialization
+from repro.core.estimator import Prediction
+from repro.core.fingerprint import FingerprintLibrary
+from repro.core.router import ScopeRouter
+from repro.data.datasets import build_scope_data
+from repro.serving.router_service import RouterService, ServiceReport
+
+
+class CountingEstimator:
+    """Deterministic stand-in: prediction is a pure function of the prompt."""
+
+    def __init__(self):
+        self.pairs = 0          # total (query, model) prompts predicted
+
+    def predict(self, prompts, rng=None, **kw):
+        self.pairs += len(prompts)
+        out = []
+        for p in prompts:
+            h = sum(p) % 97
+            out.append(Prediction(
+                y_hat=h % 2, len_hat=64.0 + h, well_formed=True,
+                p_conf=0.25 + 0.5 * (h / 97.0), pred_tokens=6,
+                rationale_len=4))
+        return out
+
+
+@pytest.fixture()
+def engine_setup(world, library, retriever):
+    data = build_scope_data(world, n_queries=80, seed=5)
+    est = CountingEstimator()
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=est, retriever=retriever, library=library,
+        models_meta={m: world.models[m] for m in data.models}))
+    return engine, est, data
+
+
+def _queries(data, n=4):
+    qids = [int(q) for q in data.test_qids[:n]]
+    return qids, [data.queries[q] for q in qids]
+
+
+# ---------------------------------------------------------------------------
+# PredictionCache
+# ---------------------------------------------------------------------------
+def test_cache_hit_miss_and_eviction_accounting():
+    cache = PredictionCache(capacity=2)
+    entry = CachedPrediction(1, 64.0, True, 0.7, 6, 49)
+    assert cache.get(1, "a", "v0") is None
+    cache.put(1, "a", "v0", entry)
+    assert cache.get(1, "a", "v0") == entry
+    assert cache.get(1, "a", "v1") is None          # version is part of the key
+    cache.put(1, "b", "v0", entry)
+    cache.put(1, "c", "v0", entry)                  # evicts the LRU entry
+    assert len(cache) == 2
+    s = cache.stats
+    assert (s.hits, s.misses, s.evictions) == (1, 2, 1)
+    assert cache.invalidate_model("b") == 1
+    assert len(cache) == 1
+
+
+def test_engine_predict_runs_estimator_only_on_misses(engine_setup):
+    engine, est, data = engine_setup
+    _, queries = _queries(data)
+    M = len(data.models)
+    pool = engine.predict(RouteRequest(queries))
+    assert (pool.cache_hits, pool.cache_misses) == (0, 4 * M)
+    assert est.pairs == 4 * M
+    warm = engine.predict(RouteRequest(queries))
+    assert (warm.cache_hits, warm.cache_misses) == (4 * M, 0)
+    assert est.pairs == 4 * M                       # estimator untouched
+    np.testing.assert_allclose(warm.p_hat, pool.p_hat)
+    np.testing.assert_allclose(warm.cost_hat, pool.cost_hat)
+    assert warm.pred_overhead.sum() == 0            # no new tokens spent
+    assert pool.pred_overhead.sum() > 0
+
+
+def test_estimator_version_bump_invalidates(engine_setup):
+    engine, est, data = engine_setup
+    _, queries = _queries(data, n=2)
+    engine.predict(RouteRequest(queries))
+    before = est.pairs
+    engine.set_estimator(est, "v1")
+    pool = engine.predict(RouteRequest(queries))
+    assert pool.cache_misses == 2 * len(data.models)
+    assert est.pairs == 2 * before
+
+
+def test_refresh_onboard_invalidates_cache(world, anchor_set, retriever):
+    # private library: refresh overwrites fingerprints, so don't share the
+    # session fixture
+    lib = FingerprintLibrary(anchor_set)
+    data = build_scope_data(world, n_queries=40, seed=6)
+    for m in data.models:
+        lib.onboard(world, m, seed=3)
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=CountingEstimator(), retriever=retriever, library=lib,
+        models_meta={m: world.models[m] for m in data.models}))
+    _, queries = _queries(data, n=2)
+    engine.predict(RouteRequest(queries))
+    drifted = data.models[0]
+    engine.onboard(world, drifted, seed=123, refresh=True)
+    pool = engine.predict(RouteRequest(queries))
+    assert pool.cache_misses == 2                   # only the drifted model
+
+
+def test_short_estimator_output_raises(engine_setup):
+    engine, est, data = engine_setup
+    _, queries = _queries(data, n=2)
+
+    class TruncatingEstimator:
+        def predict(self, prompts, rng=None, **kw):
+            return est.predict(prompts[:-1])
+
+    engine.set_estimator(TruncatingEstimator(), "v-short")
+    with pytest.raises(RuntimeError, match="predictions"):
+        engine.predict(RouteRequest(queries))
+
+
+def test_cost_hat_uses_actual_prompt_length(engine_setup, world, library,
+                                            retriever):
+    engine, est, data = engine_setup
+    _, queries = _queries(data, n=1)
+    m = data.models[0]
+    pool = engine.predict(RouteRequest(queries, models=[m]))
+    sims, idx = retriever.retrieve(queries[0].embedding[None], engine.config.k)
+    prompt = serialization.serialize_prompt(
+        world.models[m], engine.registry.index(m), library.anchor_set,
+        library.get(m), sims[0], idx[0], queries[0])
+    meta = world.models[m]
+    expect = (len(prompt) * meta.price_in
+              + pool.len_hat[0, 0] * meta.price_out) / 1e6
+    assert pool.cost_hat[0, 0] == pytest.approx(expect)
+
+
+# ---------------------------------------------------------------------------
+# PoolRegistry
+# ---------------------------------------------------------------------------
+def test_registry_onboards_unseen_model_mid_session(engine_setup, world):
+    engine, est, data = engine_setup
+    _, queries = _queries(data)
+    engine.predict(RouteRequest(queries))
+    pairs_before = est.pairs
+
+    unseen = "claude-sonnet-4.5"
+    assert unseen not in engine.registry
+    fp = engine.onboard(world, unseen, seed=99)
+    assert len(fp.y) == len(engine.library.anchor_set)
+    assert unseen in engine.registry
+    assert engine.registry.models()[-1] == unseen
+
+    # re-predicting the same queries runs the estimator ONLY for new pairs
+    pool = engine.predict(RouteRequest(queries))
+    assert pool.cache_misses == len(queries)
+    assert est.pairs == pairs_before + len(queries)
+    assert pool.p_hat.shape == (len(queries), len(data.models) + 1)
+
+
+def test_registry_add_remove_keeps_indices_stable(world, library):
+    reg = PoolRegistry(library,
+                       {m.name: m for m in world.pool if m.seen})
+    first = reg.models()[0]
+    idx_keep = reg.index(reg.models()[1])
+    reg.remove_model(first)
+    assert first not in reg
+    assert reg.index(reg.models()[0]) == idx_keep   # others unmoved
+    n = len(reg)
+    reg.add_model(world.models[first])              # re-register
+    assert len(reg) == n + 1
+    with pytest.raises(KeyError):
+        reg.remove_model("not-a-model")
+
+
+def test_engine_removal_invalidates_cache(engine_setup, world):
+    engine, est, data = engine_setup
+    _, queries = _queries(data, n=2)
+    engine.predict(RouteRequest(queries))
+    gone = data.models[0]
+    engine.remove_model(gone)
+    assert gone not in engine.registry
+    pool = engine.predict(RouteRequest(queries))
+    assert gone not in pool.models
+    assert pool.cache_misses == 0                   # survivors still cached
+
+
+# ---------------------------------------------------------------------------
+# RoutingPolicy implementations
+# ---------------------------------------------------------------------------
+def test_fixed_alpha_policy_tracks_router_math(engine_setup):
+    engine, _, data = engine_setup
+    _, queries = _queries(data)
+    pool = engine.predict(RouteRequest(queries))
+    d = engine.decide(pool, FixedAlphaPolicy(0.6))
+    expect = np.argmax(engine.utilities(pool, 0.6), axis=1)
+    np.testing.assert_array_equal(d.choices, expect)
+    with pytest.raises(ValueError):
+        FixedAlphaPolicy(1.5)
+
+
+def test_set_budget_policy_edges(engine_setup):
+    engine, _, data = engine_setup
+    _, queries = _queries(data)
+    pool = engine.predict(RouteRequest(queries))
+    cheapest = float(pool.cost_hat.min(axis=1).sum())
+    dearest = float(pool.cost_hat.max(axis=1).sum())
+
+    # budget below the cheapest possible routing: infeasible, conservative
+    d_lo = engine.decide(pool, SetBudgetPolicy(cheapest * 0.5))
+    assert d_lo.info["feasible"] is False
+    rows = np.arange(len(queries))
+    lo_cost = float(pool.cost_hat[rows, d_lo.choices].sum())
+    assert lo_cost <= cheapest * (1 + 1e-9)
+
+    # budget above the most expensive routing: feasible, max expected acc
+    d_hi = engine.decide(pool, SetBudgetPolicy(dearest * 2.0))
+    assert d_hi.info["feasible"] is True
+    assert d_hi.info["expected_cost"] <= dearest * 2.0 + 1e-12
+    assert (pool.p_hat[rows, d_hi.choices].sum()
+            >= pool.p_hat[rows, d_lo.choices].sum() - 1e-12)
+
+
+def test_accuracy_floor_policy(engine_setup):
+    engine, _, data = engine_setup
+    _, queries = _queries(data)
+    pool = engine.predict(RouteRequest(queries))
+    reachable = float(np.mean(pool.p_hat.max(axis=1)))
+
+    d = engine.decide(pool, AccuracyFloorPolicy(reachable * 0.5))
+    assert d.info["feasible"] is True
+    assert d.info["expected_acc"] >= reachable * 0.5 - 1e-12
+
+    d_inf = engine.decide(pool, AccuracyFloorPolicy(1.0))
+    assert d_inf.info["feasible"] is False          # fake conf never hits 1.0
+    assert d_inf.info["expected_acc"] == pytest.approx(reachable, abs=1e-6)
+
+
+def test_cost_ceiling_policy(engine_setup):
+    engine, _, data = engine_setup
+    _, queries = _queries(data)
+    pool = engine.predict(RouteRequest(queries))
+    rows = np.arange(len(queries))
+
+    ceiling = float(np.median(pool.cost_hat))
+    d = engine.decide(pool, CostCeilingPolicy(ceiling, alpha=0.7))
+    assert np.all(pool.cost_hat[rows, d.choices] <= ceiling + 1e-12)
+
+    # ceiling below every model: per-query fallback to the cheapest
+    d_fb = engine.decide(pool, CostCeilingPolicy(float(pool.cost_hat.min())
+                                                 * 0.5))
+    assert d_fb.info["fallback_queries"] == len(queries)
+    np.testing.assert_array_equal(d_fb.choices,
+                                  np.argmin(pool.cost_hat, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Serving through the facade and the legacy shims
+# ---------------------------------------------------------------------------
+def test_engine_serve_and_policy_sweep_without_estimator(engine_setup):
+    engine, est, data = engine_setup
+    qids, _ = _queries(data)
+    rep = engine.serve(data, qids, FixedAlphaPolicy(0.7))
+    assert rep.executed and rep.n_queries == len(qids)
+    assert abs(sum(rep.per_model_share.values()) - 1.0) < 1e-9
+    pairs = est.pairs
+    budget = rep.total_cost
+    for policy in (FixedAlphaPolicy(0.2), SetBudgetPolicy(budget),
+                   AccuracyFloorPolicy(0.4)):
+        r = engine.serve(data, qids, policy)
+        assert r.policy == policy.name
+        assert r.cache_misses == 0
+    assert est.pairs == pairs                       # sweep was estimator-free
+
+
+def test_engine_serve_empty_batch(engine_setup):
+    engine, _, data = engine_setup
+    rep = engine.serve(data, [], FixedAlphaPolicy(0.5))
+    assert isinstance(rep, BatchReport)
+    assert rep.n_queries == 0 and not rep.executed
+    assert rep.accuracy == 0.0 and rep.total_cost == 0.0
+
+
+def test_router_service_empty_qids_returns_explicit_report(
+        engine_setup, world, library, retriever):
+    _, est, data = engine_setup
+    router = ScopeRouter(est, retriever, library, world.models,
+                         {m: i for i, m in enumerate(data.models)})
+    service = RouterService(router, data, data.models)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")              # np.mean([]) would warn
+        rep = service.serve([], alpha=0.5)
+    assert isinstance(rep, ServiceReport)
+    assert rep.choices.shape == (0,)
+    assert rep.accuracy == 0.0 and rep.total_cost == 0.0
+    assert set(rep.per_model_share) == set(data.models)
+
+
+def test_legacy_shim_matches_engine(engine_setup, world, library, retriever):
+    engine, est, data = engine_setup
+    qids, queries = _queries(data)
+    router = ScopeRouter(est, retriever, library, world.models,
+                         {m: i for i, m in enumerate(data.models)})
+    pool_shim = router.predict_pool(queries, data.models)
+    pool_api = engine.predict(RouteRequest(queries, models=data.models),
+                              use_cache=False)
+    np.testing.assert_allclose(pool_shim.p_hat, pool_api.p_hat)
+    np.testing.assert_allclose(pool_shim.cost_hat, pool_api.cost_hat)
+    np.testing.assert_array_equal(router.route(pool_shim, 0.6),
+                                  np.argmax(engine.utilities(pool_api, 0.6),
+                                            axis=1))
+    alpha, choices, info = router.route_with_budget(pool_shim, 1e9)
+    assert info["feasible"] and 0.0 <= alpha <= 1.0

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import alpha_search, rewards, utility
 from repro.data import tokenizer as tok
