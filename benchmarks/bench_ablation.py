@@ -6,7 +6,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import Bundle, pool_predictions_cached
+from benchmarks.common import Bundle, pool_predictions_cached, route_alpha
 from repro.core.baselines import chebyshev_choices, highest_cost_choices
 from repro.core.evaluation import evaluate_choices
 
@@ -24,14 +24,14 @@ def _curve_area(pts):
 
 def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
     rows = []
-    router, pool, qids, data, models = pool_predictions_cached(bundle,
+    engine, pool, qids, data, models = pool_predictions_cached(bundle,
                                                                ood=False)
     alphas = np.linspace(0, 1, 9)
 
     # --- utility-rule comparison (Fig. 7 left) ---------------------------
     curves = {"scope_dynamic": [], "chebyshev": [], "highest_cost": []}
     for a in alphas:
-        ch = router.route(pool, float(a))
+        ch = route_alpha(engine, pool, float(a))
         ev = evaluate_choices(data, qids, models, ch)
         curves["scope_dynamic"].append((ev.total_cost, ev.avg_acc))
 
@@ -50,10 +50,10 @@ def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
 
     # --- calibration weight sweep (Fig. 7 right) -------------------------
     for w_base in (0.0, 0.2, 0.5, 1.0):
-        r2 = bundle.router(models, w_base=w_base)
+        e2 = bundle.engine(models, w_base=w_base)
         pts = []
         for a in alphas:
-            ch = r2.route(pool, float(a))
+            ch = route_alpha(e2, pool, float(a))
             ev = evaluate_choices(data, qids, models, ch)
             pts.append((ev.total_cost, ev.avg_acc))
         costs = sorted(p[0] for p in pts)

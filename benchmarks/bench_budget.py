@@ -9,19 +9,21 @@ from typing import List, Tuple
 import numpy as np
 
 from benchmarks.common import Bundle, pool_predictions_cached
+from repro.api import SetBudgetPolicy
 from repro.core.evaluation import evaluate_choices
 
 
 def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
     rows = []
-    router, pool, qids, data, models = pool_predictions_cached(bundle,
+    engine, pool, qids, data, models = pool_predictions_cached(bundle,
                                                                ood=False)
     min_cost = float(pool.cost_hat.min(axis=1).sum())
     max_cost = float(pool.cost_hat.max(axis=1).sum())
     budgets = np.geomspace(max(min_cost * 1.05, 1e-4), max_cost, 6)
     for b in budgets:
         t0 = time.perf_counter()
-        alpha, choices, info = router.route_with_budget(pool, float(b))
+        d = engine.decide(pool, SetBudgetPolicy(float(b)))
+        alpha, choices, info = d.alpha, d.choices, d.info
         dt_us = (time.perf_counter() - t0) * 1e6
         ev = evaluate_choices(data, qids, models, choices)
         ok = info["expected_cost"] <= b + 1e-9

@@ -7,18 +7,18 @@ from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import Bundle, pool_predictions_cached
+from benchmarks.common import Bundle, pool_predictions_cached, route_alpha
 from repro.core.evaluation import evaluate_choices
 
 ALPHAS = np.linspace(0.0, 1.0, 11)
 
 
 def frontier(bundle: Bundle, *, ood: bool):
-    router, pool, qids, data, models = pool_predictions_cached(bundle,
+    engine, pool, qids, data, models = pool_predictions_cached(bundle,
                                                                ood=ood)
     pts = []
     for a in ALPHAS:
-        ch = router.route(pool, float(a))
+        ch = route_alpha(engine, pool, float(a))
         ev = evaluate_choices(data, qids, models, ch)
         pts.append((float(a), ev.avg_acc, ev.total_cost))
     singles = {}

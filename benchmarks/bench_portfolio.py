@@ -5,7 +5,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import Bundle, pool_predictions_cached
+from benchmarks.common import Bundle, pool_predictions_cached, route_alpha
 from repro.core.evaluation import evaluate_choices
 
 
@@ -13,17 +13,17 @@ def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
     rows = []
     for ood in (False, True):
         tag = "ood" if ood else "test"
-        router, pool, qids, data, models = pool_predictions_cached(
+        engine, pool, qids, data, models = pool_predictions_cached(
             bundle, ood=ood)
         for a in (0.0, 0.5, 1.0):
-            ch = router.route(pool, a)
+            ch = route_alpha(engine, pool, a)
             ev = evaluate_choices(data, qids, models, ch)
             top = sorted(ev.per_model_share.items(), key=lambda kv: -kv[1])
             desc = ";".join(f"{m}={v:.2f}" for m, v in top[:3] if v > 0)
             rows.append((f"portfolio/{tag}/alpha{a:g}", 0.0, desc))
         # cheap-model dominance at alpha=0, diversification at alpha=1
-        ch0 = router.route(pool, 0.0)
-        ch1 = router.route(pool, 1.0)
+        ch0 = route_alpha(engine, pool, 0.0)
+        ch1 = route_alpha(engine, pool, 1.0)
         ev0 = evaluate_choices(data, qids, models, ch0)
         ev1 = evaluate_choices(data, qids, models, ch1)
         ent = lambda sh: float(-sum(v * np.log(v + 1e-12)

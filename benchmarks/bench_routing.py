@@ -7,7 +7,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import Bundle, pool_predictions_cached
+from benchmarks.common import Bundle, pool_predictions_cached, route_alpha
 from repro.core.baselines import (
     KNNRouter, LinearSVMRouter, MLPRouter, oracle_labels, random_choices)
 from repro.core.evaluation import evaluate_choices
@@ -30,7 +30,7 @@ def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
     rows = []
     for ood in (False, True):
         tag = "ood" if ood else "test"
-        router, pool, qids, data, models = pool_predictions_cached(
+        engine, pool, qids, data, models = pool_predictions_cached(
             bundle, ood=ood)
         world = bundle.world
         Q = len(qids)
@@ -65,21 +65,21 @@ def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
         # SCOPE at the paper's three alphas
         for alpha in (0.0, 0.6, 1.0):
             t0 = time.perf_counter()
-            ch = router.route(pool, alpha)
+            ch = route_alpha(engine, pool, alpha)
             dt = (time.perf_counter() - t0) / Q * 1e6
             emit(f"scope_alpha{alpha:g}", ch, dt)
 
         # prediction-cache hot path: cold vs warm predict_pool through the
         # repro.api engine (warm run never touches the estimator)
         from repro.api import RouteRequest
-        engine = bundle.engine(models)
+        cache_engine = bundle.engine(models)
         queries = [data.queries[int(q)] for q in qids]
         req = RouteRequest(queries)
         t0 = time.perf_counter()
-        cold = engine.predict(req)
+        cold = cache_engine.predict(req)
         t_cold = time.perf_counter() - t0
         t0 = time.perf_counter()
-        warm = engine.predict(req)
+        warm = cache_engine.predict(req)
         t_warm = time.perf_counter() - t0
         assert warm.cache_misses == 0 and warm.cache_hits == cold.cache_misses
         rows.append((f"routing/{tag}/predict_cache",

@@ -9,16 +9,16 @@ from typing import List, Tuple
 
 import numpy as np
 
-from benchmarks.common import Bundle, pool_predictions_cached
+from benchmarks.common import Bundle, pool_predictions_cached, route_alpha
 from repro.core.baselines import tts_outcome
 from repro.core.evaluation import evaluate_choices
 
 
 def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
     rows = []
-    router, pool, qids, data, models = pool_predictions_cached(bundle,
+    engine, pool, qids, data, models = pool_predictions_cached(bundle,
                                                                ood=False)
-    ch = router.route(pool, 0.9)
+    ch = route_alpha(engine, pool, 0.9)
     ev = evaluate_choices(data, qids, models, ch)
     scope_exec = ev.exec_tokens
     scope_pred = int(pool.pred_overhead.sum())

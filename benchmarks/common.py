@@ -15,7 +15,6 @@ from repro.configs.scope_estimator import TINY
 from repro.core.estimator import ReasoningEstimator
 from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
 from repro.core.retrieval import AnchorRetriever
-from repro.core.router import ScopeRouter
 from repro.data.datasets import ScopeData, build_scope_data, stratified_anchors
 from repro.data.worldsim import World
 from repro.models import model as M
@@ -51,12 +50,6 @@ class Bundle:
         p = {"scope": self.params, "nocot": self.params_nocot,
              "untrained": self.params_untrained}[which]
         return ReasoningEstimator(self.cfg, p, cot=(which != "nocot"))
-
-    def router(self, models: List[str], which: str = "scope",
-               **kw) -> ScopeRouter:
-        return ScopeRouter(self.estimator(which), self.retriever,
-                           self.library, self.world.models,
-                           {m: i for i, m in enumerate(models)}, **kw)
 
     def engine(self, models: List[str], which: str = "scope", **kw):
         """A cache-enabled ScopeEngine over the given pool."""
@@ -124,7 +117,9 @@ def get_bundle() -> Bundle:
 
 def pool_predictions_cached(bundle: Bundle, *, ood: bool, which: str = "scope",
                             n_queries: int = 110):
-    """Pool-wide predictions for the eval split (computed once per run)."""
+    """Pool-wide predictions for the eval split (computed once per run),
+    served through a cache-enabled ``repro.api.ScopeEngine``."""
+    from repro.api import RouteRequest
     key = (ood, which, n_queries)
     cache = getattr(bundle, "_pp_cache", None)
     if cache is None:
@@ -136,7 +131,12 @@ def pool_predictions_cached(bundle: Bundle, *, ood: bool, which: str = "scope",
     models = bundle.unseen if ood else bundle.seen
     qids = data.test_qids[:n_queries]
     queries = [data.queries[int(q)] for q in qids]
-    router = bundle.router(models, which)
-    pool = router.predict_pool(queries, models)
-    cache[key] = (router, pool, qids, data, models)
+    engine = bundle.engine(models, which)
+    pool = engine.predict(RouteRequest(queries))
+    cache[key] = (engine, pool, qids, data, models)
     return cache[key]
+
+
+def route_alpha(engine, pool, alpha: float, **kw) -> np.ndarray:
+    """argmax-utility choices at a fixed alpha (Eq. 15) via the engine."""
+    return np.argmax(engine.utilities(pool, float(alpha), **kw), axis=1)

@@ -16,7 +16,7 @@ import traceback
 from benchmarks import (
     bench_ablation, bench_adaptation, bench_budget, bench_kernels,
     bench_pareto, bench_portfolio, bench_predictive, bench_roofline,
-    bench_routing, bench_tokens)
+    bench_routing, bench_serve_latency, bench_tokens)
 
 BENCHES = {
     "routing": bench_routing,          # Table 1
@@ -29,10 +29,11 @@ BENCHES = {
     "adaptation": bench_adaptation,    # App. F
     "kernels": bench_kernels,          # kernel latency
     "roofline": bench_roofline,        # §Roofline (from dry-run artifacts)
+    "serve_latency": bench_serve_latency,  # serve-path p50/p95 + transfer
 }
 
 NEEDS_BUNDLE = {"routing", "predictive", "pareto", "portfolio", "ablation",
-                "budget", "tokens", "adaptation"}
+                "budget", "tokens", "adaptation", "serve_latency"}
 
 
 def main(argv=None) -> int:

@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import zlib
 from collections import OrderedDict
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +37,22 @@ class CachedPrediction:
     p_conf: float
     pred_tokens: int            # overhead spent when this entry was computed
     prompt_tokens: int          # serialized prompt length (cost accounting)
+
+
+@dataclasses.dataclass
+class CachedBatch:
+    """Columnar result of a batched cache probe (one model, Q queries).
+
+    ``mask[i]`` says whether query i hit; field rows where ``mask`` is False
+    are zero-filled and must be ignored by the caller.
+    """
+    mask: np.ndarray            # (Q,) bool
+    y_hat: np.ndarray           # (Q,) int
+    len_hat: np.ndarray         # (Q,) float
+    well_formed: np.ndarray     # (Q,) bool
+    p_conf: np.ndarray          # (Q,) float
+    pred_tokens: np.ndarray     # (Q,) int
+    prompt_tokens: np.ndarray   # (Q,) int
 
 
 @dataclasses.dataclass
@@ -93,6 +109,55 @@ class PredictionCache:
         if self.capacity is not None:
             while len(self._store) > self.capacity:
                 self._store.popitem(last=False)
+                self.stats.evictions += 1
+
+    # -- batched probes (the serve hot path) ---------------------------
+    def get_many(self, query_ids: Sequence[int], model: str, version: str
+                 ) -> CachedBatch:
+        """Probe Q keys for one model in a single pass.
+
+        Counts one hit/miss per key and refreshes LRU recency of hits, like
+        Q ``get`` calls, but returns columnar arrays so the caller never
+        touches per-entry objects.
+        """
+        n = len(query_ids)
+        out = CachedBatch(
+            mask=np.zeros(n, bool), y_hat=np.zeros(n, int),
+            len_hat=np.zeros(n, np.float64), well_formed=np.zeros(n, bool),
+            p_conf=np.zeros(n, np.float64), pred_tokens=np.zeros(n, int),
+            prompt_tokens=np.zeros(n, int))
+        store = self._store
+        hits = 0
+        for i, qid in enumerate(query_ids):
+            key = (qid, model, version)
+            e = store.get(key)
+            if e is None:
+                continue
+            store.move_to_end(key)
+            hits += 1
+            out.mask[i] = True
+            out.y_hat[i] = e.y_hat
+            out.len_hat[i] = e.len_hat
+            out.well_formed[i] = e.well_formed
+            out.p_conf[i] = e.p_conf
+            out.pred_tokens[i] = e.pred_tokens
+            out.prompt_tokens[i] = e.prompt_tokens
+        self.stats.hits += hits
+        self.stats.misses += n - hits
+        return out
+
+    def put_many(self, keys: Sequence[Tuple[int, str, str]],
+                 preds: Sequence[CachedPrediction]) -> None:
+        """Insert many entries in one pass; eviction runs once at the end."""
+        if len(keys) != len(preds):
+            raise ValueError(f"{len(keys)} keys for {len(preds)} entries")
+        store = self._store
+        for key, pred in zip(keys, preds):
+            store[key] = pred
+            store.move_to_end(key)
+        if self.capacity is not None:
+            while len(store) > self.capacity:
+                store.popitem(last=False)
                 self.stats.evictions += 1
 
     def invalidate_model(self, model: str) -> int:

@@ -22,7 +22,7 @@ import jax
 import numpy as np
 
 from repro.api.cache import (
-    CachedPrediction, CacheStats, PredictionCache, query_key)
+    CachedBatch, CachedPrediction, CacheStats, PredictionCache, query_key)
 from repro.api.policy import PolicyDecision, RoutingPolicy
 from repro.api.registry import PoolRegistry
 from repro.api.types import (
@@ -133,19 +133,28 @@ class ScopeEngine:
             embs = np.stack([q.embedding for q in queries])
         sims, idx = self.retriever.retrieve(embs, cfg.k)
 
+        # -- batched cache probe: one pass per model column ------------
         version = cfg.estimator_version
         qkeys = [query_key(q) for q in queries]
-        entries: Dict[Tuple[int, int], CachedPrediction] = {}
-        missing: List[Tuple[int, int]] = []
         before = self.cache.stats.snapshot()
-        for qi in range(Q):
+        hit = np.zeros((Q, M), bool)
+        y_hat = np.zeros((Q, M), int)
+        len_hat = np.zeros((Q, M))
+        wf = np.zeros((Q, M), bool)
+        p_conf = np.zeros((Q, M))
+        prompt_tok = np.zeros((Q, M))
+        if use_cache:
             for mi, m in enumerate(models):
-                e = self.cache.get(qkeys[qi], m, version) if use_cache else None
-                if e is None:
-                    missing.append((qi, mi))
-                else:
-                    entries[(qi, mi)] = e
+                col: CachedBatch = self.cache.get_many(qkeys, m, version)
+                hit[:, mi] = col.mask
+                y_hat[:, mi] = col.y_hat
+                len_hat[:, mi] = col.len_hat
+                wf[:, mi] = col.well_formed
+                p_conf[:, mi] = col.p_conf
+                prompt_tok[:, mi] = col.prompt_tokens
 
+        # -- estimator pass for the missing pairs ----------------------
+        missing = np.argwhere(~hit)                     # (n, 2) row-major
         prompts: List[List[int]] = []
         for qi, mi in missing:
             m = models[mi]
@@ -153,81 +162,96 @@ class ScopeEngine:
                 self.registry.meta(m), self.registry.index(m),
                 self.library.anchor_set, self.library.get(m),
                 sims[qi], idx[qi], queries[qi]))
-        preds = self.estimator.predict(prompts, rng=rng) if prompts else []
-        if len(preds) != len(prompts):
+        batch = self._run_estimator(prompts, rng)
+        if len(batch) != len(prompts):
             raise RuntimeError(
-                f"estimator returned {len(preds)} predictions for "
+                f"estimator returned {len(batch)} predictions for "
                 f"{len(prompts)} prompts")
-        for (qi, mi), prompt, pr in zip(missing, prompts, preds):
-            entry = CachedPrediction(
-                y_hat=int(pr.y_hat), len_hat=float(pr.len_hat),
-                well_formed=bool(pr.well_formed), p_conf=float(pr.p_conf),
-                pred_tokens=int(pr.pred_tokens), prompt_tokens=len(prompt))
-            entries[(qi, mi)] = entry
-            if use_cache:
-                self.cache.put(qkeys[qi], models[mi], version, entry)
 
-        p_hat = np.zeros((Q, M))
-        y_hat = np.zeros((Q, M), int)
-        len_hat = np.zeros((Q, M))
-        cost_hat = np.zeros((Q, M))
-        wf = np.zeros((Q, M), bool)
+        # -- columnar assembly: scatter fresh rows, no per-pair loops --
         overhead = np.zeros((Q, M))
-        fresh = set(missing)
-        for (qi, mi), e in entries.items():
-            meta = self.registry.meta(models[mi])
-            lh = e.len_hat if e.well_formed else FALLBACK_LEN_HAT
-            p_hat[qi, mi] = e.p_conf if cfg.use_confidence else float(e.y_hat)
-            y_hat[qi, mi] = e.y_hat
-            len_hat[qi, mi] = lh
-            # actual serialized prompt length, not a flat constant (Eq. 24)
-            cost_hat[qi, mi] = (e.prompt_tokens * meta.price_in
-                                + lh * meta.price_out) / 1e6
-            wf[qi, mi] = e.well_formed
+        if len(missing):
+            mq, mm = missing[:, 0], missing[:, 1]
+            plens = np.fromiter((len(p) for p in prompts), int,
+                                count=len(prompts))
+            y_hat[mq, mm] = batch.y_hat
+            len_hat[mq, mm] = batch.len_hat
+            wf[mq, mm] = batch.well_formed
+            p_conf[mq, mm] = batch.p_conf
+            prompt_tok[mq, mm] = plens
             # cached pairs spend no new estimator tokens on this call
-            overhead[qi, mi] = e.pred_tokens if (qi, mi) in fresh else 0.0
+            overhead[mq, mm] = batch.pred_tokens
+            if use_cache:
+                entries = [CachedPrediction(
+                    y_hat=int(batch.y_hat[i]),
+                    len_hat=float(batch.len_hat[i]),
+                    well_formed=bool(batch.well_formed[i]),
+                    p_conf=float(batch.p_conf[i]),
+                    pred_tokens=int(batch.pred_tokens[i]),
+                    prompt_tokens=int(plens[i]))
+                    for i in range(len(missing))]
+                self.cache.put_many(
+                    [(qkeys[qi], models[mi], version) for qi, mi in missing],
+                    entries)
+
+        lh = np.where(wf, len_hat, FALLBACK_LEN_HAT)
+        price_in = np.asarray([self.registry.meta(m).price_in
+                               for m in models])
+        price_out = np.asarray([self.registry.meta(m).price_out
+                                for m in models])
+        # actual serialized prompt length, not a flat constant (Eq. 24)
+        cost_hat = (prompt_tok * price_in[None] + lh * price_out[None]) / 1e6
+        p_hat = p_conf if cfg.use_confidence else y_hat.astype(float)
         if use_cache:
             delta = self.cache.stats.delta(before)
         else:
             delta = CacheStats(misses=len(missing))
-        return PoolPredictions(models, p_hat, y_hat, len_hat, cost_hat, wf,
+        return PoolPredictions(models, p_hat, y_hat, lh, cost_hat, wf,
                                overhead, sims, idx,
                                cache_hits=delta.hits,
                                cache_misses=delta.misses)
+
+    def _run_estimator(self, prompts: List[List[int]],
+                       rng: Optional[jax.Array]):
+        """Columnar estimator call; object-list estimators (duck-typed
+        stand-ins) are adapted through ``ParsedBatch.from_predictions``."""
+        from repro.core.estimator import ParsedBatch
+        if not prompts:
+            return ParsedBatch.empty()
+        predict_batch = getattr(self.estimator, "predict_batch", None)
+        if predict_batch is not None:
+            return predict_batch(prompts, rng=rng)
+        return ParsedBatch.from_predictions(
+            self.estimator.predict(prompts, rng=rng))
 
     # -- decision math (Eq. 15, shared by policies) --------------------
     def utilities(self, pool: PoolPredictions, alpha: float, *,
                   with_calibration: bool = True) -> np.ndarray:
         """Final decision scores (Eq. 15) for each (query, model)."""
         cfg = self.config
-        Q, M = pool.p_hat.shape
-        u_final = np.zeros((Q, M))
         wc = (utility.w_cal(alpha, w_base=cfg.w_base)
               if with_calibration else 0.0)
-        fps = {m: self.library.get(m) for m in pool.models}
-        for qi in range(Q):
-            c_norm = utility.normalize_cost(pool.cost_hat[qi])
-            u_pred = utility.predicted_utility(
-                pool.p_hat[qi], c_norm, alpha,
+        # per-query (row-wise) cost bounds, whole batch at once
+        c_norm = utility.normalize_cost(pool.cost_hat, axis=1)
+        u_pred = utility.predicted_utility(
+            pool.p_hat, c_norm, alpha, gamma_base=cfg.gamma_base,
+            beta=cfg.beta)
+        if with_calibration and wc > 0.0:
+            fps = {m: self.library.get(m) for m in pool.models}
+            u_cal = calibration.calibration_utilities_batch(
+                fps, pool.models, pool.idx, pool.sims, alpha,
                 gamma_base=cfg.gamma_base, beta=cfg.beta)
-            if with_calibration and wc > 0.0:
-                u_cal = calibration.calibration_utilities(
-                    fps, pool.models, pool.idx[qi], pool.sims[qi], alpha,
-                    gamma_base=cfg.gamma_base, beta=cfg.beta)
-            else:
-                u_cal = np.zeros(M)
-            u_final[qi] = (1.0 - wc) * u_pred + wc * u_cal
-        return u_final
+        else:
+            u_cal = np.zeros_like(u_pred)
+        return (1.0 - wc) * u_pred + wc * u_cal
 
     def affine_scores(self, pool: PoolPredictions
                       ) -> Tuple[np.ndarray, np.ndarray]:
         """(p_hat, s_hat) for the affine Prop. D.1 search (Eq. 17)."""
-        Q, M = pool.p_hat.shape
-        s_hat = np.zeros((Q, M))
-        for qi in range(Q):
-            c_norm = utility.normalize_cost(pool.cost_hat[qi])
-            s_hat[qi] = utility.cost_score(
-                c_norm, 1.0, gamma_base=self.config.gamma_base, beta=0.0)
+        c_norm = utility.normalize_cost(pool.cost_hat, axis=1)
+        s_hat = utility.cost_score(c_norm, 1.0,
+                                   gamma_base=self.config.gamma_base,
+                                   beta=0.0)
         return pool.p_hat, s_hat
 
     def decide(self, pool: PoolPredictions, policy: RoutingPolicy

@@ -37,3 +37,25 @@ def calibration_utilities(fps: Dict[str, Fingerprint], models: Sequence[str],
     c_norm = normalize_cost(c_cal)
     return predicted_utility(p_cal, c_norm, alpha,
                              gamma_base=gamma_base, beta=beta)
+
+
+def calibration_utilities_batch(fps: Dict[str, Fingerprint],
+                                models: Sequence[str], idx: np.ndarray,
+                                sims: np.ndarray, alpha: float, *,
+                                gamma_base: float = 1.0, beta: float = 2.0
+                                ) -> np.ndarray:
+    """U_cal for a whole batch: idx/sims (Q, K) -> utilities (Q, M).
+
+    Vectorizes ``calibration_utilities`` over queries — one gather per
+    anchor statistic instead of a per-query Python loop on the serve path.
+    """
+    idx = np.asarray(idx, int)
+    w = np.clip(np.asarray(sims, np.float64), 0.0, None) + 1e-6
+    w = w / w.sum(axis=-1, keepdims=True)               # (Q, K)
+    Y = np.stack([fps[m].y for m in models]).astype(np.float64)     # (M, A)
+    C = np.stack([fps[m].cost for m in models]).astype(np.float64)  # (M, A)
+    p_cal = np.einsum("qk,mqk->qm", w, Y[:, idx])
+    c_cal = np.einsum("qk,mqk->qm", w, C[:, idx])
+    c_norm = normalize_cost(c_cal, axis=-1)             # per-cluster bounds
+    return predicted_utility(p_cal, c_norm, alpha,
+                             gamma_base=gamma_base, beta=beta)

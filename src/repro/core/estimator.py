@@ -5,11 +5,15 @@ prompt it generates a rationale z then the structured tuple (y_hat, l_hat).
 Besides the parsed binary label we expose the correctness *confidence*
 p(YES)/(p(YES)+p(NO)) at the decision token — Appendix D's p_hat(x, M) in
 [0, 1] used by the budget-controlled alpha search.
+
+Parsing is a single batched numpy pass over the whole generation matrix
+(``parse_generations``); ``_parse_one`` remains as the scalar reference the
+parity tests pin the batched parse against.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -29,6 +33,101 @@ class Prediction:
     rationale_len: int
 
 
+@dataclasses.dataclass
+class ParsedBatch:
+    """Columnar predictions for N generations (the serve-path layout)."""
+    y_hat: np.ndarray           # (N,) int
+    len_hat: np.ndarray         # (N,) float
+    well_formed: np.ndarray     # (N,) bool
+    p_conf: np.ndarray          # (N,) float
+    pred_tokens: np.ndarray     # (N,) int
+    rationale_len: np.ndarray   # (N,) int
+
+    def __len__(self) -> int:
+        return len(self.y_hat)
+
+    def to_predictions(self) -> List[Prediction]:
+        return [Prediction(int(self.y_hat[i]), float(self.len_hat[i]),
+                           bool(self.well_formed[i]), float(self.p_conf[i]),
+                           int(self.pred_tokens[i]),
+                           int(self.rationale_len[i]))
+                for i in range(len(self))]
+
+    @classmethod
+    def from_predictions(cls, preds: Sequence[Prediction]) -> "ParsedBatch":
+        return cls(
+            y_hat=np.asarray([p.y_hat for p in preds], int),
+            len_hat=np.asarray([p.len_hat for p in preds], np.float64),
+            well_formed=np.asarray([p.well_formed for p in preds], bool),
+            p_conf=np.asarray([p.p_conf for p in preds], np.float64),
+            pred_tokens=np.asarray([p.pred_tokens for p in preds], int),
+            rationale_len=np.asarray([p.rationale_len for p in preds], int))
+
+    @classmethod
+    def empty(cls) -> "ParsedBatch":
+        return cls.from_predictions([])
+
+
+def parse_generations(gen: np.ndarray, dec_logits: np.ndarray) -> ParsedBatch:
+    """Batched parse of (N, T) generations + (N, T, 2) YES/NO logit pairs.
+
+    Vectorizes ``_parse_one`` (decision-token location, confidence, format
+    gate, rationale length) over the whole generation matrix — no per-sample
+    or per-token Python loops.
+    """
+    g = np.asarray(gen)
+    if g.ndim != 2:
+        raise ValueError(f"gen must be (N, T), got {g.shape}")
+    N, T = g.shape
+    if N == 0:
+        return ParsedBatch.empty()
+    dec_logits = np.asarray(dec_logits, np.float64)
+    rows = np.arange(N)
+    cols = np.arange(T)[None, :]
+
+    is_think = g == tok.THINK
+    is_tend = g == tok.THINK_END
+    has_think = is_think.any(axis=1)
+    has_tend = is_tend.any(axis=1)
+    cot = has_think & has_tend
+    first_think = np.argmax(is_think, axis=1)
+    first_tend = np.argmax(is_tend, axis=1)
+
+    # --- format gate (tok.parse_prediction): strip the CoT span, drop PADs,
+    # require body == (YES|NO) LEN_b EOS ... -----------------------------
+    body_start = np.where(cot, first_tend + 1, 0)
+    body_mask = (cols >= body_start[:, None]) & (g != tok.PAD)
+    n_body = body_mask.sum(axis=1)
+    # stable argsort floats body positions to the front, original order kept
+    order = np.argsort(~body_mask, axis=1, kind="stable")
+    first3 = order[:, :3] if T >= 3 else np.zeros((N, 3), int)
+    b0, b1, b2 = (g[rows, first3[:, j]] for j in range(3))
+    wf = ((~has_think | has_tend) & (n_body >= 3)
+          & ((b0 == tok.YES) | (b0 == tok.NO))
+          & (b1 >= tok.LEN_BASE) & (b1 < tok.LEN_BASE + tok.NUM_LEN_BUCKETS)
+          & (b2 == tok.EOS))
+    y_hat = np.where(wf, (b0 == tok.YES).astype(int), 0)
+    len_hat = np.where(
+        wf, tok.LEN_CENTERS[np.clip(b1 - tok.LEN_BASE, 0,
+                                    tok.NUM_LEN_BUCKETS - 1)], 0.0)
+
+    # --- decision step: first YES/NO after THINK_END (CoT) or from 0 ----
+    dec_search = ((g == tok.YES) | (g == tok.NO)) & (
+        cols >= np.where(cot, first_tend + 1, 0)[:, None])
+    has_dec = dec_search.any(axis=1)
+    dec_pos = np.argmax(dec_search, axis=1)
+    d = dec_logits[rows, dec_pos]                       # (N, 2) = (YES, NO)
+    m = d.max(axis=1)
+    py = np.exp(d[:, 0] - m)
+    pn = np.exp(d[:, 1] - m)
+    conf = np.where(has_dec, py / (py + pn), 0.5)
+
+    return ParsedBatch(
+        y_hat=y_hat, len_hat=len_hat, well_formed=wf, p_conf=conf,
+        pred_tokens=(g != tok.PAD).sum(axis=1),
+        rationale_len=np.where(cot, first_tend - first_think + 1, 0))
+
+
 class ReasoningEstimator:
     def __init__(self, cfg: ModelConfig, params, *, cot: bool = True,
                  max_new_tokens: int = 12, batch_size: int = 256):
@@ -39,28 +138,40 @@ class ReasoningEstimator:
         self.batch_size = batch_size
 
     # ------------------------------------------------------------------
-    def predict(self, prompts: List[List[int]], *,
-                temperature: float = 0.0,
-                rng: Optional[jax.Array] = None) -> List[Prediction]:
+    def predict_batch(self, prompts: List[List[int]], *,
+                      temperature: float = 0.0,
+                      rng: Optional[jax.Array] = None) -> ParsedBatch:
+        """Columnar predictions — the serve hot path (no per-pair objects)."""
         if not prompts:
-            return []
+            return ParsedBatch.empty()
         lens = {len(p) for p in prompts}
         assert len(lens) == 1, "structured prompts must be constant-length"
         arr = np.asarray(prompts, np.int32)
-        out: List[Prediction] = []
+        gens, decs = [], []
         key = rng if rng is not None else jax.random.PRNGKey(0)
         for i in range(0, len(arr), self.batch_size):
             key, sub = jax.random.split(key)
-            gen, lg = sampler.generate(
+            gen, dec = sampler.generate(
                 self.params, self.cfg, arr[i: i + self.batch_size],
                 max_new_tokens=self.max_new_tokens, temperature=temperature,
                 rng=sub)
-            for g, l in zip(gen, lg):
-                out.append(self._parse_one(g, l))
-        return out
+            gens.append(gen)
+            decs.append(dec)
+        return parse_generations(np.concatenate(gens, axis=0),
+                                 np.concatenate(decs, axis=0))
+
+    def predict(self, prompts: List[List[int]], *,
+                temperature: float = 0.0,
+                rng: Optional[jax.Array] = None) -> List[Prediction]:
+        return self.predict_batch(prompts, temperature=temperature,
+                                  rng=rng).to_predictions()
 
     # ------------------------------------------------------------------
-    def _parse_one(self, gen: np.ndarray, logits: np.ndarray) -> Prediction:
+    @staticmethod
+    def _parse_one(gen: np.ndarray, dec_logits: np.ndarray) -> Prediction:
+        """Scalar reference parse for one generation; ``dec_logits`` is the
+        (T, 2) YES/NO logit pair per step.  Kept as the parity oracle for
+        ``parse_generations``."""
         toks = [int(t) for t in gen]
         parsed = tok.parse_prediction(toks)
         # locate the decision step: first YES/NO after THINK_END (CoT) or at 0
@@ -73,10 +184,10 @@ class ReasoningEstimator:
                 dec_pos = j
                 break
         if dec_pos is not None:
-            row = logits[dec_pos].astype(np.float64)
-            m = max(row[tok.YES], row[tok.NO])
-            py = np.exp(row[tok.YES] - m)
-            pn = np.exp(row[tok.NO] - m)
+            row = np.asarray(dec_logits[dec_pos], np.float64)
+            m = max(row[0], row[1])
+            py = np.exp(row[0] - m)
+            pn = np.exp(row[1] - m)
             conf = float(py / (py + pn))
         else:
             conf = 0.5

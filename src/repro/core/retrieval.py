@@ -3,11 +3,18 @@
 Cosine similarity between query and anchor embeddings; the hot path is the
 Pallas ``topk_retrieval`` kernel (``impl="pallas"``), with the XLA twin as
 default on CPU.
+
+Serve-ready: the retriever pre-normalizes and caches the anchor matrix at
+construction (the anchor set is fixed for the retriever's lifetime, so
+re-normalizing it per call is pure waste) and memoizes one jitted dispatch
+per ``k``, so repeated ``retrieve`` calls hit a compiled executable instead
+of retracing or running op-by-op.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable, Dict, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -19,12 +26,30 @@ class AnchorRetriever:
     def __init__(self, anchor_set: AnchorSet, *, impl: str = "xla"):
         self.anchor_set = anchor_set
         self.impl = impl
-        self._anchor_embs = jnp.asarray(anchor_set.embeddings)
+        embs = jnp.asarray(anchor_set.embeddings, jnp.float32)
+        self._anchor_embs = embs
+        # unit rows, same epsilon as the kernels' in-call normalization
+        self._anchors_norm = embs / (
+            jnp.linalg.norm(embs, axis=-1, keepdims=True) + 1e-8)
+        self._dispatch: Dict[int, Callable] = {}
+
+    def _fn(self, k: int) -> Callable:
+        """One compiled (queries, anchors) -> top-k executable per k."""
+        fn = self._dispatch.get(k)
+        if fn is None:
+            impl = self.impl
+
+            def call(q, a):
+                return ops.topk_retrieval(q, a, k, impl=impl,
+                                          anchors_prenormalized=True)
+
+            fn = jax.jit(call)
+            self._dispatch[k] = fn
+        return fn
 
     def retrieve(self, query_embs: np.ndarray, k: int
                  ) -> Tuple[np.ndarray, np.ndarray]:
         """query_embs: (Q, d) or (d,).  Returns (sims (Q, k), idx (Q, k))."""
         q = np.atleast_2d(np.asarray(query_embs, np.float32))
-        scores, idx = ops.topk_retrieval(jnp.asarray(q), self._anchor_embs,
-                                         k, impl=self.impl)
+        scores, idx = self._fn(int(k))(jnp.asarray(q), self._anchors_norm)
         return np.asarray(scores), np.asarray(idx)

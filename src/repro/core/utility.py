@@ -14,10 +14,27 @@ EPS = 1e-6
 
 
 def normalize_cost(costs: np.ndarray, *, c_min: Optional[float] = None,
-                   c_max: Optional[float] = None) -> np.ndarray:
+                   c_max: Optional[float] = None,
+                   axis: Optional[int] = None) -> np.ndarray:
     """Log min-max normalization (Eq. 11); bounds default to the given set
-    (per-query predicted costs online, per-cluster costs in calibration)."""
+    (per-query predicted costs online, per-cluster costs in calibration).
+
+    ``axis`` takes bounds per slice along that axis — e.g. ``axis=1`` on a
+    (Q, M) cost matrix normalizes each query row independently, matching a
+    per-row loop of the scalar form.  Explicit ``c_min``/``c_max`` bounds
+    are incompatible with ``axis``.
+    """
     c = np.asarray(costs, np.float64)
+    if axis is not None:
+        if c_min is not None or c_max is not None:
+            raise ValueError("pass either axis or explicit bounds, not both")
+        lo = np.log(c.min(axis=axis, keepdims=True) + EPS)
+        hi = np.log(c.max(axis=axis, keepdims=True) + EPS)
+        span = hi - lo
+        degenerate = span < 1e-12
+        out = (np.log(c + EPS) - lo) / np.where(degenerate, 1.0, span)
+        out = np.where(degenerate, 0.0, out)
+        return np.clip(out, 0.0, 1.0)
     lo = np.log((c_min if c_min is not None else c.min()) + EPS)
     hi = np.log((c_max if c_max is not None else c.max()) + EPS)
     if hi - lo < 1e-12:

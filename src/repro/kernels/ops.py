@@ -28,14 +28,10 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import topk_retrieval as _topk
 
-_ON_CPU = None
-
-
 def _interpret() -> bool:
-    global _ON_CPU
-    if _ON_CPU is None:
-        _ON_CPU = jax.default_backend() == "cpu"
-    return _ON_CPU
+    # single source of truth for backend detection (shared with direct
+    # kernel callers)
+    return _topk.default_interpret()
 
 
 # ---------------------------------------------------------------------------
@@ -254,9 +250,12 @@ ssd_decode_step = ref.ssd_decode_step
 # ---------------------------------------------------------------------------
 # Retrieval
 # ---------------------------------------------------------------------------
-def topk_retrieval(queries, anchors, k: int, *, impl: str = "xla"
+def topk_retrieval(queries, anchors, k: int, *, impl: str = "xla",
+                   anchors_prenormalized: bool = False
                    ) -> Tuple[jax.Array, jax.Array]:
     if impl == "pallas":
-        return _topk.topk_retrieval(queries, anchors, k,
-                                    interpret=_interpret())
-    return ref.topk_retrieval(queries, anchors, k)
+        return _topk.topk_retrieval(
+            queries, anchors, k, interpret=_interpret(),
+            anchors_prenormalized=anchors_prenormalized)
+    return ref.topk_retrieval(queries, anchors, k,
+                              anchors_prenormalized=anchors_prenormalized)

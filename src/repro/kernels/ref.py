@@ -154,13 +154,19 @@ def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
 # ---------------------------------------------------------------------------
 # Top-k cosine retrieval
 # ---------------------------------------------------------------------------
-def topk_retrieval(queries: jax.Array, anchors: jax.Array, k: int
+def topk_retrieval(queries: jax.Array, anchors: jax.Array, k: int, *,
+                   anchors_prenormalized: bool = False
                    ) -> Tuple[jax.Array, jax.Array]:
     """Cosine-similarity top-k.
 
     queries: (q, d); anchors: (n, d).  Returns (scores (q, k), idx (q, k)).
+    ``anchors_prenormalized`` skips anchor normalization (cached unit rows).
     """
     qn = queries / (jnp.linalg.norm(queries, axis=-1, keepdims=True) + 1e-8)
-    an = anchors / (jnp.linalg.norm(anchors, axis=-1, keepdims=True) + 1e-8)
+    if anchors_prenormalized:
+        an = anchors
+    else:
+        an = anchors / (jnp.linalg.norm(anchors, axis=-1, keepdims=True)
+                        + 1e-8)
     sims = qn @ an.T
     return jax.lax.top_k(sims, k)

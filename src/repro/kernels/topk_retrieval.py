@@ -11,7 +11,7 @@ Validated against ``ref.topk_retrieval`` in interpret mode.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +19,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG = -2.0  # below min cosine similarity
+
+_ON_CPU = None
+
+
+def default_interpret() -> bool:
+    """Interpret only off-TPU (``ops._interpret`` delegates here) so direct
+    callers don't silently run the kernel in interpreter mode on hardware."""
+    global _ON_CPU
+    if _ON_CPU is None:
+        _ON_CPU = jax.default_backend() == "cpu"
+    return _ON_CPU
 
 
 def _topk_kernel(q_ref, a_ref, sc_out_ref, ix_out_ref, sc_ref, ix_ref, *,
@@ -56,14 +67,25 @@ def _topk_kernel(q_ref, a_ref, sc_out_ref, ix_out_ref, sc_ref, ix_ref, *,
 
 def topk_retrieval(queries: jax.Array, anchors: jax.Array, k: int, *,
                    block_q: int = 128, block_n: int = 256,
-                   interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
-    """queries (q, d), anchors (n, d) -> (scores (q, k), indices (q, k))."""
+                   interpret: Optional[bool] = None,
+                   anchors_prenormalized: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """queries (q, d), anchors (n, d) -> (scores (q, k), indices (q, k)).
+
+    ``anchors_prenormalized`` skips the per-call anchor normalization for
+    callers (``AnchorRetriever``) that cache the unit-norm anchor matrix.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     nq, d = queries.shape
     na = anchors.shape[0]
     qn = (queries / (jnp.linalg.norm(queries, axis=-1, keepdims=True) + 1e-8)
           ).astype(jnp.float32)
-    an = (anchors / (jnp.linalg.norm(anchors, axis=-1, keepdims=True) + 1e-8)
-          ).astype(jnp.float32)
+    if anchors_prenormalized:
+        an = anchors.astype(jnp.float32)
+    else:
+        an = (anchors / (jnp.linalg.norm(anchors, axis=-1, keepdims=True)
+                         + 1e-8)).astype(jnp.float32)
 
     block_q = min(block_q, nq)
     block_n = min(block_n, na)

@@ -28,7 +28,7 @@ class Request:
 class Result:
     rid: int
     tokens: np.ndarray           # (T,) generated
-    logits: np.ndarray           # (T, V) per-step logits
+    decision_logits: np.ndarray  # (T, 2) per-step (YES, NO) logit pair
 
 
 class ServingEngine:

@@ -1,29 +1,29 @@
-"""KV-cache generation loop: prefill + jitted single-token decode steps.
+"""KV-cache generation: batch prefill + one fused jitted decode scan.
 
 Prompts in SCOPE's structured serialization have constant length, so the
-batch prefisll is a single full forward; decode steps are jitted with donated
-caches.  Supports greedy and temperature sampling (GRPO rollouts) and
-returns per-step logits (the estimator reads its correctness confidence off
-the decision token's distribution).
+batch prefill is a single full forward.  Decode is a single jitted
+``jax.lax.scan`` over the new-token axis: sampling (greedy or temperature,
+for GRPO rollouts) happens on device, an EOS done-mask is carried across
+steps, and only what the estimator consumes crosses back to the host —
+generated token ids plus the YES/NO logit pair at each step.  The full
+``(b, T, V)`` logits stack never leaves the device (~V/2x less host
+transfer than the legacy per-token dispatch loop).
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.tokenizer import EOS, PAD
+from repro.data.tokenizer import EOS, NO, PAD, YES
 from repro.models import model as M
 
-
-@functools.partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
-def _decode_step(params, cfg: ModelConfig, token, caches, pos):
-    logits, caches = M.decode_step(params, cfg, token, caches, pos)
-    return logits[:, 0], caches
+# decision-logit channel order: [:, :, 0] = YES, [:, :, 1] = NO
+DECISION_TOKENS = (YES, NO)
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -33,9 +33,6 @@ def _prefill(params, cfg: ModelConfig, tokens):
 
 def _pad_caches(caches, max_len: int, prompt_len: int):
     """Grow prefill caches (seq = prompt_len) to decode capacity."""
-    def pad(path_leaf):
-        return path_leaf
-
     def grow(leaf):
         # KV leaves have a seq axis == prompt_len somewhere; mamba states don't.
         shape = leaf.shape
@@ -49,12 +46,52 @@ def _pad_caches(caches, max_len: int, prompt_len: int):
     return jax.tree.map(grow, caches)
 
 
+# no donate_argnums on the caches: XLA reports the KV buffers as unusable
+# donations for a scan carry (they are not jit outputs), so donating would
+# only emit a warning per call without saving the copy
+@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7))
+def _scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
+                 max_new_tokens: int, temperature: float, stop_at_eos: bool,
+                 prompt_len):
+    """One fused decode: sample -> emit (token, YES/NO logits) -> step.
+
+    Carries (last_logits, caches, done, key) across ``max_new_tokens`` scan
+    steps; per-step outputs are the sampled token ids (b,) and the decision
+    logit pair (b, 2).  Nothing of size V escapes the scan.
+    """
+    b = last_logits.shape[0]
+    dec_ix = jnp.asarray(DECISION_TOKENS, jnp.int32)
+
+    def step(carry, t):
+        logits, kv, done, k = carry
+        if temperature > 0.0:
+            k, sub = jax.random.split(k)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = jnp.where(done, PAD, nxt).astype(jnp.int32)
+        dec = logits[:, dec_ix]                          # (b, 2)
+        if stop_at_eos:
+            done = done | (nxt == EOS)
+        new_logits, kv = M.decode_step(params, cfg, nxt[:, None], kv,
+                                       prompt_len + t)
+        new_logits = new_logits[:, 0].astype(jnp.float32)
+        return (new_logits, kv, done, k), (nxt, dec)
+
+    init = (last_logits, caches, jnp.zeros((b,), bool), key)
+    _, (gen, dec_logits) = jax.lax.scan(step, init,
+                                        jnp.arange(max_new_tokens))
+    return gen.T, dec_logits.transpose(1, 0, 2)          # (b, T), (b, T, 2)
+
+
 def generate(params, cfg: ModelConfig, prompts: np.ndarray, *,
              max_new_tokens: int = 12, temperature: float = 0.0,
              rng: Optional[jax.Array] = None, stop_at_eos: bool = True
              ) -> Tuple[np.ndarray, np.ndarray]:
     """prompts: (b, Lp) int32, constant length.  Returns
-    (generated (b, T) int32, step_logits (b, T, V) float32)."""
+    (generated (b, T) int32, decision_logits (b, T, 2) float32) where the
+    last axis is the (YES, NO) logit pair at each step — the only slice of
+    the vocab distribution the estimator reads."""
     prompts = jnp.asarray(prompts, jnp.int32)
     b, lp = prompts.shape
     max_len = lp + max_new_tokens
@@ -63,23 +100,8 @@ def generate(params, cfg: ModelConfig, prompts: np.ndarray, *,
     caches = _pad_caches(caches, max_len, lp)
     last_logits = logits[:, -1].astype(jnp.float32)
 
-    outs, step_logits = [], []
-    done = jnp.zeros((b,), bool)
     key = rng if rng is not None else jax.random.PRNGKey(0)
-    for t in range(max_new_tokens):
-        if temperature > 0.0:
-            key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(sub, last_logits / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(last_logits, axis=-1)
-        nxt = jnp.where(done, PAD, nxt).astype(jnp.int32)
-        outs.append(nxt)
-        step_logits.append(last_logits)
-        if stop_at_eos:
-            done = done | (nxt == EOS)
-        last_logits, caches = _decode_step(params, cfg, nxt[:, None], caches,
-                                           lp + t)
-        last_logits = last_logits.astype(jnp.float32)
-    gen = np.asarray(jnp.stack(outs, axis=1))
-    lg = np.asarray(jnp.stack(step_logits, axis=1))
-    return gen, lg
+    gen, dec = _scan_decode(params, cfg, last_logits, caches, key,
+                            int(max_new_tokens), float(temperature),
+                            bool(stop_at_eos), lp)
+    return np.asarray(gen), np.asarray(dec)

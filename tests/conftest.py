@@ -4,6 +4,8 @@ import sys
 # tests must see the single real CPU device (the dry-run flag is only ever
 # set inside repro.launch.dryrun / subprocesses)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, for the pinned legacy references under benchmarks/
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

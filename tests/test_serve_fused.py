@@ -1,0 +1,219 @@
+"""Parity tests pinning the fused serve path against the legacy behavior:
+scan-decode vs the per-token dispatch loop, batched parse vs the scalar
+reference, batched cache probes vs per-key accounting, and the vectorized
+utility/calibration math vs the per-query loops."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api.cache import CachedPrediction, PredictionCache
+from repro.configs.scope_estimator import TINY
+from repro.core import calibration, utility
+from repro.core.estimator import ReasoningEstimator, parse_generations
+from repro.data import tokenizer as tok
+from repro.models import model as M
+from repro.serving import sampler
+
+# the single pinned copy of the pre-fusion decode loop (also the benchmark
+# baseline) lives in the benchmark module
+from benchmarks.bench_serve_latency import legacy_generate
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return M.init_params(jax.random.PRNGKey(11), TINY)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return np.random.default_rng(3).integers(
+        3, 100, size=(4, 18)).astype(np.int32)
+
+
+def _assert_decode_parity(params, prompts, **kw):
+    g_old, full = legacy_generate(params, TINY, prompts, **kw)
+    g_new, dec = sampler.generate(params, TINY, prompts, **kw)
+    np.testing.assert_array_equal(g_old, g_new)
+    np.testing.assert_allclose(
+        full[:, :, list(sampler.DECISION_TOKENS)], dec,
+        atol=1e-5, rtol=1e-5)
+    return g_new
+
+
+def test_scan_decode_matches_loop_greedy(tiny_params, prompts):
+    _assert_decode_parity(tiny_params, prompts, max_new_tokens=8)
+
+
+def test_scan_decode_matches_loop_temperature(tiny_params, prompts):
+    _assert_decode_parity(tiny_params, prompts, max_new_tokens=8,
+                          temperature=0.7, rng=jax.random.PRNGKey(42))
+
+
+def test_scan_decode_matches_loop_eos_early_stop(tiny_params, prompts):
+    # bias the (tied) output embedding so EOS becomes argmax within a few
+    # steps — exercises the carried done-mask, not just the no-EOS path
+    biased = dict(tiny_params)
+    biased["embed"] = tiny_params["embed"].at[tok.EOS].mul(40.0)
+    gen = _assert_decode_parity(biased, prompts, max_new_tokens=10)
+    assert (gen == tok.EOS).any(), "EOS path was not exercised"
+    for row in gen:
+        row = list(row)
+        if tok.EOS in row:
+            after = row[row.index(tok.EOS) + 1:]
+            assert all(t == tok.PAD for t in after)
+
+
+def test_scan_decode_no_eos_stop_when_disabled(tiny_params, prompts):
+    biased = dict(tiny_params)
+    biased["embed"] = tiny_params["embed"].at[tok.EOS].mul(40.0)
+    _assert_decode_parity(biased, prompts, max_new_tokens=6,
+                          stop_at_eos=False)
+
+
+# ---------------------------------------------------------------------------
+# Batched parse vs the scalar reference
+# ---------------------------------------------------------------------------
+def test_parse_batch_matches_parse_one_on_edge_cases():
+    L = tok.LEN_BASE
+    rows = [
+        # well-formed CoT
+        [tok.THINK, 50, 51, tok.THINK_END, tok.YES, L + 3, tok.EOS, tok.PAD],
+        # well-formed NoCoT
+        [tok.NO, L + 1, tok.EOS, tok.PAD, tok.PAD, tok.PAD, tok.PAD, tok.PAD],
+        # THINK without THINK_END -> malformed, decision searched from 0
+        [tok.THINK, tok.YES, L + 2, tok.EOS, 55, 56, 57, 58],
+        # no decision token at all
+        [50, 51, 52, 53, 54, 55, 56, 57],
+        # YES inside the CoT span is skipped; NO after THINK_END decides
+        [tok.THINK, tok.YES, tok.THINK_END, tok.NO, L + 2, tok.EOS,
+         tok.PAD, tok.PAD],
+        # bad length bucket
+        [tok.YES, 500, tok.EOS, tok.PAD, tok.PAD, tok.PAD, tok.PAD, tok.PAD],
+        # missing EOS in third body slot
+        [tok.YES, L + 4, 77, tok.PAD, tok.PAD, tok.PAD, tok.PAD, tok.PAD],
+        # PAD interleaved before the decision (stripped by the body filter)
+        [tok.PAD, tok.YES, tok.PAD, L + 5, tok.EOS, tok.PAD, tok.PAD,
+         tok.PAD],
+        # THINK_END before THINK (degenerate rationale length)
+        [tok.THINK_END, tok.THINK, tok.NO, L + 1, tok.EOS, tok.PAD, tok.PAD,
+         tok.PAD],
+        # all PAD
+        [tok.PAD] * 8,
+    ]
+    gen = np.asarray(rows, np.int32)
+    dec = np.random.default_rng(5).normal(size=(len(rows), 8, 2))
+    batch = parse_generations(gen, dec)
+    for i in range(len(rows)):
+        ref = ReasoningEstimator._parse_one(gen[i], dec[i])
+        assert int(batch.y_hat[i]) == ref.y_hat, i
+        assert float(batch.len_hat[i]) == pytest.approx(ref.len_hat), i
+        assert bool(batch.well_formed[i]) == ref.well_formed, i
+        assert float(batch.p_conf[i]) == pytest.approx(ref.p_conf), i
+        assert int(batch.pred_tokens[i]) == ref.pred_tokens, i
+        assert int(batch.rationale_len[i]) == ref.rationale_len, i
+
+
+def test_parse_batch_matches_parse_one_fuzz():
+    rng = np.random.default_rng(17)
+    # dense over the special-token range so CoT / decision / EOS collisions
+    # are frequent
+    gen = rng.integers(0, 16, size=(200, 12)).astype(np.int32)
+    gen[rng.random(gen.shape) < 0.2] = tok.LEN_BASE + rng.integers(
+        0, tok.NUM_LEN_BUCKETS)
+    dec = rng.normal(size=(200, 12, 2))
+    batch = parse_generations(gen, dec)
+    for i in range(len(gen)):
+        ref = ReasoningEstimator._parse_one(gen[i], dec[i])
+        got = (int(batch.y_hat[i]), bool(batch.well_formed[i]),
+               int(batch.pred_tokens[i]), int(batch.rationale_len[i]))
+        assert got == (ref.y_hat, ref.well_formed, ref.pred_tokens,
+                       ref.rationale_len), i
+        assert float(batch.p_conf[i]) == pytest.approx(ref.p_conf), i
+        assert float(batch.len_hat[i]) == pytest.approx(ref.len_hat), i
+
+
+def test_parse_batch_empty():
+    batch = parse_generations(np.zeros((0, 12), np.int32),
+                              np.zeros((0, 12, 2)))
+    assert len(batch) == 0 and batch.to_predictions() == []
+
+
+# ---------------------------------------------------------------------------
+# Batched cache probes
+# ---------------------------------------------------------------------------
+def _entry(i):
+    return CachedPrediction(y_hat=i % 2, len_hat=32.0 + i, well_formed=True,
+                            p_conf=0.1 + 0.01 * i, pred_tokens=5 + i,
+                            prompt_tokens=40 + i)
+
+
+def test_cache_get_many_hit_miss_accounting():
+    cache = PredictionCache()
+    cache.put_many([(q, "m", "v0") for q in (1, 3)], [_entry(1), _entry(3)])
+    col = cache.get_many([1, 2, 3, 4], "m", "v0")
+    np.testing.assert_array_equal(col.mask, [True, False, True, False])
+    assert (cache.stats.hits, cache.stats.misses) == (2, 2)
+    np.testing.assert_allclose(col.len_hat, [33.0, 0.0, 35.0, 0.0])
+    np.testing.assert_allclose(col.p_conf[col.mask], [0.11, 0.13])
+    assert col.pred_tokens[2] == 8 and col.prompt_tokens[0] == 41
+    # version and model are part of the key
+    assert not cache.get_many([1, 3], "m", "v1").mask.any()
+    assert not cache.get_many([1, 3], "other", "v0").mask.any()
+    assert (cache.stats.hits, cache.stats.misses) == (2, 6)
+
+
+def test_cache_get_many_matches_scalar_get_and_lru():
+    a, b = PredictionCache(capacity=3), PredictionCache(capacity=3)
+    for c in (a, b):
+        c.put_many([(q, "m", "v") for q in (1, 2, 3)],
+                   [_entry(q) for q in (1, 2, 3)])
+    # same probe through both APIs -> same stats and same LRU order
+    for q in (2, 9):
+        a.get(q, "m", "v")
+    b.get_many([2, 9], "m", "v")
+    assert (a.stats.hits, a.stats.misses) == (b.stats.hits, b.stats.misses)
+    # probing q=2 refreshed it; inserting one more must evict q=1
+    for c in (a, b):
+        c.put_many([(4, "m", "v")], [_entry(4)])
+        assert c.get(1, "m", "v") is None
+        assert c.get(2, "m", "v") is not None
+        assert c.stats.evictions == 1
+
+
+def test_put_many_eviction_and_length_mismatch():
+    cache = PredictionCache(capacity=2)
+    cache.put_many([(q, "m", "v") for q in range(5)],
+                   [_entry(q) for q in range(5)])
+    assert len(cache) == 2 and cache.stats.evictions == 3
+    with pytest.raises(ValueError):
+        cache.put_many([(0, "m", "v")], [])
+
+
+# ---------------------------------------------------------------------------
+# Vectorized decision math vs the per-query reference
+# ---------------------------------------------------------------------------
+def test_normalize_cost_axis_matches_per_row_loop():
+    rng = np.random.default_rng(0)
+    c = rng.uniform(1e-5, 2e-3, size=(6, 5))
+    c[2] = 7e-4                                        # degenerate row
+    got = utility.normalize_cost(c, axis=1)
+    ref = np.stack([utility.normalize_cost(row) for row in c])
+    np.testing.assert_allclose(got, ref, atol=1e-12)
+    with pytest.raises(ValueError):
+        utility.normalize_cost(c, axis=1, c_min=0.0)
+
+
+def test_calibration_batch_matches_per_query_loop(library, retriever, world):
+    models = [m.name for m in world.pool if m.seen][:4]
+    fps = {m: library.get(m) for m in models}
+    rng = np.random.default_rng(1)
+    Q, K = 7, 5
+    embs = rng.normal(size=(Q, 32)).astype(np.float32)   # EMBED_DIM
+    sims, idx = retriever.retrieve(embs, K)
+    got = calibration.calibration_utilities_batch(fps, models, idx, sims,
+                                                  0.6)
+    ref = np.stack([
+        calibration.calibration_utilities(fps, models, idx[q], sims[q], 0.6)
+        for q in range(Q)])
+    np.testing.assert_allclose(got, ref, atol=1e-12)

@@ -12,9 +12,10 @@ def test_generate_shapes_and_determinism(tiny_trained):
     cfg, params, _ = tiny_trained
     prompts = np.random.default_rng(0).integers(
         3, 100, size=(4, 20)).astype(np.int32)
-    g1, l1 = generate(params, cfg, prompts, max_new_tokens=6)
+    g1, d1 = generate(params, cfg, prompts, max_new_tokens=6)
     g2, _ = generate(params, cfg, prompts, max_new_tokens=6)
-    assert g1.shape == (4, 6) and l1.shape == (4, 6, cfg.vocab_size)
+    # only the (YES, NO) decision pair crosses to the host, never (b, T, V)
+    assert g1.shape == (4, 6) and d1.shape == (4, 6, 2)
     np.testing.assert_array_equal(g1, g2)          # greedy is deterministic
 
 
