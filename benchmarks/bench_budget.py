@@ -10,7 +10,79 @@ import numpy as np
 
 from benchmarks.common import Bundle, pool_predictions_cached
 from repro.api import SetBudgetPolicy
+from repro.core import alpha_search
 from repro.core.evaluation import evaluate_choices
+
+
+# ---------------------------------------------------------------------------
+# Pre-vectorization reference (pinned here for the scaling comparison and
+# imported by tests/test_core_scope.py as the parity oracle): the pure-Python
+# O(Q*M^2) breakpoint triple loop + per-candidate routing loop that
+# SetBudgetPolicy/AccuracyFloorPolicy used to run per serve batch.
+# ---------------------------------------------------------------------------
+def _breakpoints_loop(p_hat, s_hat):
+    Q, M = p_hat.shape
+    slopes = p_hat - s_hat
+    pts = []
+    for q in range(Q):
+        for i in range(M):
+            di = slopes[q, i]
+            for j in range(i + 1, M):
+                dj = slopes[q, j]
+                if abs(di - dj) < 1e-12:
+                    continue
+                a = (s_hat[q, j] - s_hat[q, i]) / (di - dj)
+                if 0.0 < a < 1.0:
+                    pts.append(a)
+    return np.asarray(sorted(set(pts)))
+
+
+def _budget_alpha_loop(p_hat, s_hat, c_hat, budget):
+    bps = _breakpoints_loop(p_hat, s_hat)
+    grid = np.concatenate([[0.0], bps, [1.0]])
+    cands = np.unique(np.concatenate([grid, (grid[:-1] + grid[1:]) / 2.0]))
+    best = cheapest = None
+    for a in cands:
+        choice = alpha_search.route_for_alpha(p_hat, s_hat, a)
+        rows = np.arange(len(choice))
+        cost = float(np.sum(c_hat[rows, choice]))
+        perf = float(np.sum(p_hat[rows, choice]))
+        if cheapest is None or cost < cheapest[1]:
+            cheapest = (a, cost, perf, choice)
+        if cost <= budget and (best is None or perf > best[2]
+                               or (perf == best[2] and cost < best[1])):
+            best = (a, cost, perf, choice)
+    return best if best is not None else cheapest
+
+
+def _bench_alpha_scaling(pool, repeats: int = 3) -> List[Tuple[str, float, str]]:
+    """Policy-path scaling: vectorized vs loop budget search at growing Q."""
+    rows = []
+    rng = np.random.default_rng(0)
+    Qs = (32, 128, 512)
+    for Q in Qs:
+        take = rng.integers(0, pool.p_hat.shape[0], size=Q)
+        p, c = pool.p_hat[take], pool.cost_hat[take]
+        s = 1.0 - c / max(c.max(), 1e-12)
+        budget = float(c.min(axis=1).sum() * 1.5)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            a_vec, _, info = alpha_search.budget_alpha(p, s, c, budget)
+        t_vec = (time.perf_counter() - t0) / repeats * 1e6
+        if Q <= 128:                       # the loop is why this PR exists
+            t0 = time.perf_counter()
+            a_loop, _, perf_loop, _ = _budget_alpha_loop(p, s, c, budget)
+            t_loop = (time.perf_counter() - t0) * 1e6
+            extra = (f";loop_us={t_loop:.0f}"
+                     f";speedup={t_loop / max(t_vec, 1e-9):.1f}"
+                     f";alpha_delta={abs(a_vec - a_loop):.2e}"
+                     f";perf_delta={abs(info['expected_perf'] - perf_loop):.2e}")
+        else:
+            extra = ";loop_us=skipped"
+        rows.append((f"budget/alpha_search_Q{Q}", t_vec,
+                     f"candidates={info['num_candidates']}"
+                     f";feasible={info['feasible']}{extra}"))
+    return rows
 
 
 def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
@@ -31,4 +103,5 @@ def run(bundle: Bundle) -> List[Tuple[str, float, str]]:
                      f"alpha={alpha:.3f};pred_cost={info['expected_cost']:.4f};"
                      f"within_budget={ok};realized_cost={ev.total_cost:.4f};"
                      f"acc={ev.avg_acc:.3f}"))
+    rows += _bench_alpha_scaling(pool)
     return rows

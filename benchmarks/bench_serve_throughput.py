@@ -1,0 +1,279 @@
+"""Streaming serve throughput: queries/sec and recompile counts for the
+bucketed microbatch scheduler vs naive ragged dispatch, across bucket
+configs and device counts.
+
+Sections:
+
+  stream_bucketed — ``ScopeEngine.predict_stream`` over ragged traffic
+                    ticks through a ``MicrobatchScheduler``; after the
+                    bucket warmup, varying per-tick batch sizes must add
+                    **zero** new executables (asserted in --smoke)
+  stream_naive    — ``predict`` called per ragged tick (the pre-scheduler
+                    behavior): every distinct tick size compiles a fresh
+                    (batch, len) executable
+  batch_oracle    — one big ``predict`` over all queries (the throughput
+                    ceiling a scheduler can approach); --smoke also
+                    asserts the stream results are bit-identical to it
+  sharded         — bucketed stream with the estimator sharded over the
+                    serve mesh (only when >1 device is visible; multiply
+                    CPU devices with
+                    XLA_FLAGS=--xla_force_host_platform_device_count=N or
+                    the --devices flag, which sets it before jax loads)
+
+Rows go to stdout CSV (via ``benchmarks.run``) and to
+``benchmarks/BENCH_serve_throughput.json``.  Standalone:
+
+  PYTHONPATH=src python benchmarks/bench_serve_throughput.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__),
+                          "BENCH_serve_throughput.json")
+
+
+def _tick_sizes(n_queries: int, seed: int = 0, max_tick: int = 8) -> List[int]:
+    """Deterministic ragged traffic: tick sizes in [1, max_tick]."""
+    rng = np.random.default_rng(seed)
+    sizes, left = [], n_queries
+    while left > 0:
+        s = int(rng.integers(1, max_tick + 1))
+        sizes.append(min(s, left))
+        left -= sizes[-1]
+    return sizes
+
+
+def _as_ticks(queries, sizes):
+    out, i = [], 0
+    for s in sizes:
+        out.append(queries[i: i + s])
+        i += s
+    return out
+
+
+def _compile_delta(before: Dict[str, int], after: Dict[str, int]) -> int:
+    return sum(after[k] - before[k] for k in after)
+
+
+# ---------------------------------------------------------------------------
+# Sections
+# ---------------------------------------------------------------------------
+def bench_stream(engine, queries, *, bucket_sizes, repeats: int = 3,
+                 max_tick: int = 8, smoke: bool = False) -> List[Dict]:
+    from repro.api import RouteRequest
+    from repro.serving.scheduler import (
+        BucketConfig, MicrobatchScheduler, decode_compile_counts)
+
+    sizes = _tick_sizes(len(queries), max_tick=max_tick)
+    ticks = _as_ticks(queries, sizes)
+    n_models = len(engine.registry.routable())
+
+    # -- bucketed stream: warm the bucket executables, then measure ----
+    cfg = BucketConfig(batch_sizes=bucket_sizes)
+    warm_sched = MicrobatchScheduler(cfg)
+    list(engine.predict_stream((RouteRequest(t) for t in ticks),
+                               scheduler=warm_sched, use_cache=False))
+    warmed = decode_compile_counts()
+
+    times, sched = [], None
+    for _ in range(repeats):
+        sched = MicrobatchScheduler(cfg)
+        t0 = time.perf_counter()
+        stream_pools = list(engine.predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            use_cache=False))
+        times.append(time.perf_counter() - t0)
+    after = decode_compile_counts()
+    bucketed_recompiles = _compile_delta(warmed, after)
+    qps_bucketed = len(queries) / min(times)
+
+    # -- naive ragged dispatch: one predict per tick -------------------
+    before = decode_compile_counts()
+    t0 = time.perf_counter()
+    naive_pools = [engine.predict(RouteRequest(t), use_cache=False)
+                   for t in ticks]
+    t_naive = time.perf_counter() - t0
+    naive_recompiles = _compile_delta(before, decode_compile_counts())
+    qps_naive = len(queries) / t_naive
+
+    # -- batch oracle: the whole query set in one predict (warm shape) -
+    engine.predict(RouteRequest(list(queries)), use_cache=False)
+    t0 = time.perf_counter()
+    batch_pool = engine.predict(RouteRequest(list(queries)), use_cache=False)
+    t_batch = time.perf_counter() - t0
+    qps_batch = len(queries) / t_batch
+
+    stream_p = np.concatenate([p.p_hat for p in stream_pools])
+    naive_p = np.concatenate([p.p_hat for p in naive_pools])
+    identical_stream = bool(np.array_equal(stream_p, batch_pool.p_hat))
+    identical_naive = bool(np.array_equal(naive_p, batch_pool.p_hat))
+    if smoke:
+        assert bucketed_recompiles == 0, (
+            f"bucketed stream recompiled {bucketed_recompiles} executables "
+            f"after warmup — each (bucket, shape) must compile exactly once")
+        assert identical_stream, "stream p_hat != batch predict p_hat"
+
+    st = sched.stats.as_dict()
+    return [
+        {"name": "serve_throughput/stream_bucketed", "qps": qps_bucketed,
+         "detail": {"ticks": len(ticks), "queries": len(queries),
+                    "models": n_models, "buckets": st["buckets"],
+                    "pad_fraction": st["pad_fraction"],
+                    "microbatches": st["microbatches"],
+                    "recompiles_after_warmup": bucketed_recompiles,
+                    "identical_to_batch": identical_stream}},
+        {"name": "serve_throughput/stream_naive", "qps": qps_naive,
+         "detail": {"ticks": len(ticks),
+                    "distinct_tick_sizes": len(set(sizes)),
+                    "recompiles": naive_recompiles,
+                    "identical_to_batch": identical_naive}},
+        {"name": "serve_throughput/batch_oracle", "qps": qps_batch,
+         "detail": {"queries": len(queries),
+                    "speedup_stream_vs_naive":
+                        round(qps_bucketed / max(qps_naive, 1e-9), 2)}},
+    ]
+
+
+def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
+    """Bucketed stream with the estimator placed on the serve mesh."""
+    import jax
+
+    from repro.api import RouteRequest
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+
+    n_dev = jax.local_device_count()
+    if n_dev < 2:
+        return []
+    mesh = make_serve_mesh()
+    engine.estimator.shard(mesh)
+    ticks = _as_ticks(queries, _tick_sizes(len(queries)))
+    cfg = BucketConfig(batch_sizes=bucket_sizes)
+    run = lambda: list(engine.predict_stream(                  # noqa: E731
+        (RouteRequest(t) for t in ticks),
+        scheduler=MicrobatchScheduler(cfg), use_cache=False))
+    run()                                   # compile sharded executables
+    t0 = time.perf_counter()
+    run()
+    dt = time.perf_counter() - t0
+    return [{"name": "serve_throughput/stream_sharded",
+             "qps": len(queries) / dt,
+             "detail": {"devices": n_dev,
+                        "mesh": dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))}}]
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+def _emit(rows: List[Dict], *, smoke: bool) -> None:
+    import jax
+    payload = {"bench": "serve_throughput", "smoke": smoke,
+               "unix_time": int(time.time()),
+               "devices": jax.local_device_count(), "rows": rows}
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {BENCH_PATH}")
+
+
+def _as_csv_rows(rows: List[Dict]) -> List[Tuple[str, float, str]]:
+    out = []
+    for r in rows:
+        detail = ";".join(f"{k}={v}" for k, v in r["detail"].items())
+        out.append((r["name"], 1e6 / max(r["qps"], 1e-9),
+                    f"qps={r['qps']:.1f};{detail}"))
+    return out
+
+
+BUCKETS = (1, 2, 4, 8, 16)
+
+
+def run(bundle) -> List[Tuple[str, float, str]]:
+    """benchmarks.run entry point: trained estimator, seen pool."""
+    engine = bundle.engine(bundle.seen)
+    queries = [bundle.data.queries[int(q)]
+               for q in bundle.data.test_qids[:48]]
+    rows = bench_stream(engine, queries, bucket_sizes=BUCKETS)
+    rows += bench_sharded(bundle.engine(bundle.seen), queries,
+                          bucket_sizes=BUCKETS)
+    _emit(rows, smoke=False)
+    return _as_csv_rows(rows)
+
+
+def _smoke_setup():
+    """Tiny untrained world — shapes and scheduling only, CI-sized."""
+    import jax
+
+    from repro.api import EngineConfig, ScopeEngine
+    from repro.configs.scope_estimator import TINY
+    from repro.core.estimator import ReasoningEstimator
+    from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
+    from repro.core.retrieval import AnchorRetriever
+    from repro.data.datasets import build_scope_data, stratified_anchors
+    from repro.data.worldsim import World
+    from repro.models import model as M
+
+    world = World(seed=0)
+    data = build_scope_data(world, n_queries=240, seed=0)
+    aset = build_anchor_set(world, stratified_anchors(world, n=60, seed=7))
+    library = FingerprintLibrary(aset)
+    for m in data.models:
+        library.onboard(world, m, seed=3)
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(TINY, params),
+        retriever=AnchorRetriever(aset), library=library,
+        models_meta={m: world.models[m] for m in data.models}))
+    queries = [data.queries[int(q)] for q in data.test_qids[:10]]
+    return engine, queries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny untrained setup (CI gate), asserts "
+                         "one-compile-per-bucket + stream==batch")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host CPU devices (before jax loads)")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    if args.smoke:
+        engine, queries = _smoke_setup()
+        rows = bench_stream(engine, queries, bucket_sizes=(1, 2, 4, 8),
+                            repeats=args.repeats or 2, max_tick=3,
+                            smoke=True)
+        rows += bench_sharded(engine, queries, bucket_sizes=(1, 2, 4, 8))
+        _emit(rows, smoke=True)
+        print("# smoke asserts passed: zero recompiles after warmup, "
+              "stream bit-identical to batch predict")
+    else:
+        from benchmarks.common import get_bundle
+        rows_csv = run(get_bundle())
+        for name, us, derived in rows_csv:
+            print(f"{name},{us:.2f},{derived}")
+        return 0
+    print("name,us_per_query,derived")
+    for name, us, derived in _as_csv_rows(rows):
+        print(f"{name},{us:.2f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    raise SystemExit(main())

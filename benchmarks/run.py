@@ -16,7 +16,7 @@ import traceback
 from benchmarks import (
     bench_ablation, bench_adaptation, bench_budget, bench_kernels,
     bench_pareto, bench_portfolio, bench_predictive, bench_roofline,
-    bench_routing, bench_serve_latency, bench_tokens)
+    bench_routing, bench_serve_latency, bench_serve_throughput, bench_tokens)
 
 BENCHES = {
     "routing": bench_routing,          # Table 1
@@ -30,10 +30,12 @@ BENCHES = {
     "kernels": bench_kernels,          # kernel latency
     "roofline": bench_roofline,        # §Roofline (from dry-run artifacts)
     "serve_latency": bench_serve_latency,  # serve-path p50/p95 + transfer
+    "serve_throughput": bench_serve_throughput,  # streaming q/s + recompiles
 }
 
 NEEDS_BUNDLE = {"routing", "predictive", "pareto", "portfolio", "ablation",
-                "budget", "tokens", "adaptation", "serve_latency"}
+                "budget", "tokens", "adaptation", "serve_latency",
+                "serve_throughput"}
 
 
 def main(argv=None) -> int:

@@ -6,9 +6,10 @@
   RoutingPolicy    — pluggable decision policies (subclass to extend)
   PredictionCache  — (query_id, model, estimator_version) -> estimate
 
-Legacy callers keep working through the ``ScopeRouter`` / ``RouterService``
-shims in ``repro.core.router`` / ``repro.serving.router_service``; new code
-should enter through this package.
+Streaming traffic enters through ``ScopeEngine.predict_stream`` /
+``serve_stream``, backed by ``repro.serving.scheduler``.  (The legacy
+``ScopeRouter`` / ``RouterService`` shims are gone — every caller now goes
+through this package.)
 """
 from repro.api.cache import CachedPrediction, CacheStats, PredictionCache
 from repro.api.engine import ScopeEngine

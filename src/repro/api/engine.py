@@ -9,6 +9,13 @@ exposes the routing surface as four verbs:
   serve    — route + execute against a ``ScopeData`` world, report realized
   onboard  — training-free pool growth (fingerprint pass, §3.1)
 
+plus their streaming duals for continuous traffic:
+
+  predict_stream — drain an iterator of requests through the bucketed
+                   microbatch scheduler (``serving.scheduler``); results
+                   are bit-identical to ``predict`` under greedy decoding
+  serve_stream   — predict_stream + per-tick policy decision + execution
+
 ``predict`` consults the ``PredictionCache`` keyed by
 ``(query_id, model, estimator_version)`` and runs the estimator only for the
 missing (query, model) pairs, so onboarding a model onto an already-served
@@ -16,13 +23,17 @@ query set costs O(Q) new estimator calls instead of an O(Q x M) recompute.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from collections import deque
+from typing import (
+    TYPE_CHECKING, Deque, Dict, Iterable, Iterator, List, Optional, Sequence,
+    Tuple)
 
 import jax
 import numpy as np
 
 from repro.api.cache import (
-    CachedBatch, CachedPrediction, CacheStats, PredictionCache, query_key)
+    CachedBatch, CachedPrediction, PredictionCache, query_key)
 from repro.api.policy import PolicyDecision, RoutingPolicy
 from repro.api.registry import PoolRegistry
 from repro.api.types import (
@@ -33,7 +44,61 @@ from repro.core.router import PoolPredictions
 from repro.data.datasets import ScopeData
 from repro.data.worldsim import PoolModel, World
 
+if TYPE_CHECKING:
+    from repro.serving.scheduler import MicrobatchScheduler
+
 FALLBACK_LEN_HAT = 512.0    # tokens charged when the estimate is malformed
+
+
+@dataclasses.dataclass
+class _PredictState:
+    """Per-request prediction state between cache probe and assembly."""
+    models: List[str]
+    queries: List
+    qkeys: List[int]
+    sims: np.ndarray            # (Q, K)
+    idx: np.ndarray             # (Q, K)
+    hit: np.ndarray             # (Q, M) bool — cache probe result
+    y_hat: np.ndarray
+    len_hat: np.ndarray
+    wf: np.ndarray
+    p_conf: np.ndarray
+    prompt_tok: np.ndarray
+    missing: np.ndarray         # (n, 2) row-major (query, model) misses
+    prompts: List[List[int]]    # serialized prompt per missing pair
+    use_cache: bool
+
+
+class _StreamEntry:
+    """One in-flight stream request: collects estimator rows as the
+    scheduler's microbatches land, in ``missing``-pair order."""
+
+    def __init__(self, state: _PredictState):
+        self.state = state
+        n = len(state.prompts)
+        self.remaining = n
+        self.y_hat = np.zeros(n, int)
+        self.len_hat = np.zeros(n, np.float64)
+        self.well_formed = np.zeros(n, bool)
+        self.p_conf = np.zeros(n, np.float64)
+        self.pred_tokens = np.zeros(n, int)
+        self.rationale_len = np.zeros(n, int)
+
+    def fill(self, i: int, batch, row: int, *, shared: bool = False) -> None:
+        """``shared=True`` marks a pair that rode an in-flight duplicate's
+        generation: it copies the estimate but spends no new tokens."""
+        self.y_hat[i] = batch.y_hat[row]
+        self.len_hat[i] = batch.len_hat[row]
+        self.well_formed[i] = batch.well_formed[row]
+        self.p_conf[i] = batch.p_conf[row]
+        self.pred_tokens[i] = 0 if shared else batch.pred_tokens[row]
+        self.rationale_len[i] = batch.rationale_len[row]
+        self.remaining -= 1
+
+    def parsed(self):
+        from repro.core.estimator import ParsedBatch
+        return ParsedBatch(self.y_hat, self.len_hat, self.well_formed,
+                           self.p_conf, self.pred_tokens, self.rationale_len)
 
 
 class ScopeEngine:
@@ -98,28 +163,30 @@ class ScopeEngine:
         self.cache.invalidate_model(name)
 
     # -- prediction ----------------------------------------------------
-    def predict(self, request: RouteRequest, *,
-                rng: Optional[jax.Array] = None,
-                use_cache: Optional[bool] = None) -> PoolPredictions:
-        """Pool-wide pre-hoc estimates; estimator runs on cache misses only.
+    def _empty_pool(self, models: List[str], Q: int) -> PoolPredictions:
+        M = len(models)
+        k = self.config.k
+        return PoolPredictions(
+            models, np.zeros((Q, M)), np.zeros((Q, M), int),
+            np.zeros((Q, M)), np.zeros((Q, M)), np.zeros((Q, M), bool),
+            np.zeros((Q, M)), np.zeros((Q, k)), np.zeros((Q, k), int))
 
-        The default pool is ``registry.routable()`` — a model staged with
-        ``add_model`` but not yet fingerprinted is excluded rather than
-        failing the whole batch; naming it in ``request.models`` raises.
-        """
+    def _prepare(self, request: RouteRequest, use_cache: bool
+                 ) -> "_PredictState":
+        """Everything before the estimator: retrieval, cache probe, and the
+        serialized prompts for the missing (query, model) pairs."""
         cfg = self.config
-        if use_cache is None:
-            use_cache = cfg.enable_cache
         models = (list(request.models) if request.models is not None
                   else self.registry.routable())
         queries = list(request.queries)
         Q, M = len(queries), len(models)
-        if Q == 0 or M == 0:
-            return PoolPredictions(
-                models, np.zeros((Q, M)), np.zeros((Q, M), int),
-                np.zeros((Q, M)), np.zeros((Q, M)), np.zeros((Q, M), bool),
-                np.zeros((Q, M)), np.zeros((Q, cfg.k)),
-                np.zeros((Q, cfg.k), int))
+        if Q == 0 or M == 0:            # empty before validation, as predict
+            return _PredictState(models, queries, [], np.zeros((Q, cfg.k)),
+                                 np.zeros((Q, cfg.k), int),
+                                 np.zeros((Q, M), bool), np.zeros((Q, M), int),
+                                 np.zeros((Q, M)), np.zeros((Q, M), bool),
+                                 np.zeros((Q, M)), np.zeros((Q, M)),
+                                 np.zeros((0, 2), int), [], use_cache)
         for m in models:
             if m not in self.registry:
                 raise KeyError(f"model {m!r} is not registered; "
@@ -136,7 +203,6 @@ class ScopeEngine:
         # -- batched cache probe: one pass per model column ------------
         version = cfg.estimator_version
         qkeys = [query_key(q) for q in queries]
-        before = self.cache.stats.snapshot()
         hit = np.zeros((Q, M), bool)
         y_hat = np.zeros((Q, M), int)
         len_hat = np.zeros((Q, M))
@@ -153,7 +219,6 @@ class ScopeEngine:
                 p_conf[:, mi] = col.p_conf
                 prompt_tok[:, mi] = col.prompt_tokens
 
-        # -- estimator pass for the missing pairs ----------------------
         missing = np.argwhere(~hit)                     # (n, 2) row-major
         prompts: List[List[int]] = []
         for qi, mi in missing:
@@ -162,18 +227,32 @@ class ScopeEngine:
                 self.registry.meta(m), self.registry.index(m),
                 self.library.anchor_set, self.library.get(m),
                 sims[qi], idx[qi], queries[qi]))
-        batch = self._run_estimator(prompts, rng)
-        if len(batch) != len(prompts):
+        return _PredictState(models, queries, qkeys, sims, idx, hit, y_hat,
+                             len_hat, wf, p_conf, prompt_tok, missing,
+                             prompts, use_cache)
+
+    def _finalize(self, st: "_PredictState", batch, *,
+                  put_cache: bool = True) -> PoolPredictions:
+        """Scatter fresh estimator rows over the cache-probe columns and
+        assemble the ``PoolPredictions`` (identical math for batch and
+        stream paths).  ``put_cache=False`` when the caller already wrote
+        the entries (the stream path puts per microbatch)."""
+        cfg = self.config
+        Q, M = len(st.queries), len(st.models)
+        if Q == 0 or M == 0:
+            return self._empty_pool(st.models, Q)
+        if len(batch) != len(st.prompts):
             raise RuntimeError(
                 f"estimator returned {len(batch)} predictions for "
-                f"{len(prompts)} prompts")
-
-        # -- columnar assembly: scatter fresh rows, no per-pair loops --
+                f"{len(st.prompts)} prompts")
+        missing = st.missing
+        y_hat, len_hat, wf = st.y_hat, st.len_hat, st.wf
+        p_conf, prompt_tok = st.p_conf, st.prompt_tok
         overhead = np.zeros((Q, M))
         if len(missing):
             mq, mm = missing[:, 0], missing[:, 1]
-            plens = np.fromiter((len(p) for p in prompts), int,
-                                count=len(prompts))
+            plens = np.fromiter((len(p) for p in st.prompts), int,
+                                count=len(st.prompts))
             y_hat[mq, mm] = batch.y_hat
             len_hat[mq, mm] = batch.len_hat
             wf[mq, mm] = batch.well_formed
@@ -181,7 +260,7 @@ class ScopeEngine:
             prompt_tok[mq, mm] = plens
             # cached pairs spend no new estimator tokens on this call
             overhead[mq, mm] = batch.pred_tokens
-            if use_cache:
+            if st.use_cache and put_cache:
                 entries = [CachedPrediction(
                     y_hat=int(batch.y_hat[i]),
                     len_hat=float(batch.len_hat[i]),
@@ -191,32 +270,166 @@ class ScopeEngine:
                     prompt_tokens=int(plens[i]))
                     for i in range(len(missing))]
                 self.cache.put_many(
-                    [(qkeys[qi], models[mi], version) for qi, mi in missing],
-                    entries)
+                    [(st.qkeys[qi], st.models[mi], cfg.estimator_version)
+                     for qi, mi in missing], entries)
 
         lh = np.where(wf, len_hat, FALLBACK_LEN_HAT)
         price_in = np.asarray([self.registry.meta(m).price_in
-                               for m in models])
+                               for m in st.models])
         price_out = np.asarray([self.registry.meta(m).price_out
-                                for m in models])
+                                for m in st.models])
         # actual serialized prompt length, not a flat constant (Eq. 24)
         cost_hat = (prompt_tok * price_in[None] + lh * price_out[None]) / 1e6
         p_hat = p_conf if cfg.use_confidence else y_hat.astype(float)
-        if use_cache:
-            delta = self.cache.stats.delta(before)
-        else:
-            delta = CacheStats(misses=len(missing))
-        return PoolPredictions(models, p_hat, y_hat, lh, cost_hat, wf,
-                               overhead, sims, idx,
-                               cache_hits=delta.hits,
-                               cache_misses=delta.misses)
+        return PoolPredictions(st.models, p_hat, y_hat, lh, cost_hat, wf,
+                               overhead, st.sims, st.idx,
+                               cache_hits=int(st.hit.sum()),
+                               cache_misses=len(missing))
 
-    def _run_estimator(self, prompts: List[List[int]],
-                       rng: Optional[jax.Array]):
-        """Columnar estimator call; object-list estimators (duck-typed
-        stand-ins) are adapted through ``ParsedBatch.from_predictions``."""
+    def predict(self, request: RouteRequest, *,
+                rng: Optional[jax.Array] = None,
+                use_cache: Optional[bool] = None) -> PoolPredictions:
+        """Pool-wide pre-hoc estimates; estimator runs on cache misses only.
+
+        The default pool is ``registry.routable()`` — a model staged with
+        ``add_model`` but not yet fingerprinted is excluded rather than
+        failing the whole batch; naming it in ``request.models`` raises.
+        """
+        if use_cache is None:
+            use_cache = self.config.enable_cache
+        st = self._prepare(request, use_cache)
+        batch = self._run_estimator(st.prompts, rng)
+        return self._finalize(st, batch)
+
+    # -- streaming prediction ------------------------------------------
+    def predict_stream(self, requests: Iterable[RouteRequest], *,
+                       scheduler: Optional["MicrobatchScheduler"] = None,
+                       rng: Optional[jax.Array] = None,
+                       use_cache: Optional[bool] = None
+                       ) -> Iterator[PoolPredictions]:
+        """Drain an iterator of requests through the microbatch scheduler.
+
+        Yields one ``PoolPredictions`` per request, in arrival order, with
+        the exact semantics of ``predict``: per-request ``get_many`` cache
+        probes, estimator work for the misses only, per-request
+        ``put_many`` on completion.  The difference is *how* the estimator
+        runs: miss prompts from all in-flight requests are assembled into
+        fixed-shape bucket microbatches (see ``serving.scheduler``), so
+        ragged traffic reuses a handful of compiled executables and small
+        ticks ride along with large ones.  Under greedy decoding the
+        yielded predictions are bit-identical to ``predict`` on the same
+        queries.
+
+        A request is emitted once all its missing pairs are resolved;
+        partially-filled buckets are flushed when the input iterator is
+        exhausted, so every submitted request is always answered.  A pair
+        whose (query, model) duplicates one still in flight (a hot query
+        repeated across ticks, probed before the first tick's microbatch
+        landed and populated the cache) is not scheduled again: it shares
+        the in-flight generation and, like a cache hit, spends no new
+        estimator tokens.  Cache writes happen per microbatch — the moment
+        a bucket's generations are parsed — so later requests hit entries
+        from microbatches that completed before they arrived, even while
+        the owning request is still FIFO-blocked from emitting.
+        """
+        from repro.serving.scheduler import MicrobatchScheduler
+        if use_cache is None:
+            use_cache = self.config.enable_cache
+        sched = scheduler if scheduler is not None else MicrobatchScheduler()
+        pending: Deque[_StreamEntry] = deque()
+        # (query_key, model, version) -> waiters; the first waiter's prompt
+        # is the one scheduled, later duplicates ride along
+        inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
+        version = self.config.estimator_version
+        serial = 0                          # unique keys for uncached pairs
+
+        def run_microbatches(batches):
+            for mb in batches:
+                batch = self._run_estimator(mb.tokens, rng)
+                keys, entries = [], []
+                for row, key in enumerate(mb.tags):
+                    waiters = inflight.pop(key)
+                    for j, (entry, miss_i) in enumerate(waiters):
+                        entry.fill(miss_i, batch, row, shared=j > 0)
+                    if use_cache:
+                        owner, miss_i = waiters[0]      # true token spend
+                        keys.append(key)
+                        entries.append(CachedPrediction(
+                            y_hat=int(batch.y_hat[row]),
+                            len_hat=float(batch.len_hat[row]),
+                            well_formed=bool(batch.well_formed[row]),
+                            p_conf=float(batch.p_conf[row]),
+                            pred_tokens=int(batch.pred_tokens[row]),
+                            prompt_tokens=len(owner.state.prompts[miss_i])))
+                if keys:
+                    self.cache.put_many(keys, entries)
+
+        def drain_completed():
+            while pending and pending[0].remaining == 0:
+                entry = pending.popleft()
+                yield self._finalize(entry.state, entry.parsed(),
+                                     put_cache=False)
+
+        for request in requests:
+            st = self._prepare(request, use_cache)
+            entry = _StreamEntry(st)
+            pending.append(entry)
+            for miss_i, prompt in enumerate(st.prompts):
+                qi, mi = st.missing[miss_i]
+                key = (st.qkeys[qi], st.models[mi], version)
+                if use_cache and key in inflight:
+                    inflight[key].append((entry, miss_i))
+                    continue
+                if not use_cache:           # uncached: never share work
+                    key, serial = ("uncached", serial), serial + 1
+                inflight[key] = [(entry, miss_i)]
+                sched.submit(key, prompt)
+            run_microbatches(sched.ready())
+            yield from drain_completed()
+        run_microbatches(sched.flush())
+        yield from drain_completed()
+        assert not pending, "stream ended with unresolved requests"
+
+    def serve_stream(self, data: ScopeData, qid_stream: Iterable[Sequence[int]],
+                     policy: RoutingPolicy, *,
+                     models: Optional[Sequence[str]] = None,
+                     scheduler: Optional["MicrobatchScheduler"] = None,
+                     rng: Optional[jax.Array] = None,
+                     use_cache: Optional[bool] = None
+                     ) -> Iterator[BatchReport]:
+        """Streaming ``serve``: one executed ``BatchReport`` per qid tick.
+
+        ``qid_stream`` yields batches of query ids (one traffic tick each);
+        prediction flows through ``predict_stream``'s bucketed scheduler,
+        then each tick is decided by ``policy`` and executed against the
+        world exactly like ``serve``.
+        """
+        pool_models = (list(models) if models is not None
+                       else self.registry.routable())
+        ticks: Deque[List[int]] = deque()
+
+        def as_requests():
+            for qids in qid_stream:
+                tick = [int(q) for q in qids]
+                ticks.append(tick)
+                yield RouteRequest([data.queries[q] for q in tick],
+                                   models=pool_models)
+
+        for pool in self.predict_stream(as_requests(), scheduler=scheduler,
+                                        rng=rng, use_cache=use_cache):
+            qids = ticks.popleft()
+            if not qids:
+                yield BatchReport.empty(policy.name, pool_models)
+                continue
+            decision = policy.decide(pool, self)
+            yield self.execute(data, qids, pool, decision, policy.name)
+
+    def _run_estimator(self, prompts, rng: Optional[jax.Array]):
+        """Columnar estimator call on token lists or a (b, L) int array;
+        object-list estimators (duck-typed stand-ins) are adapted through
+        ``ParsedBatch.from_predictions``."""
         from repro.core.estimator import ParsedBatch
-        if not prompts:
+        if len(prompts) == 0:
             return ParsedBatch.empty()
         predict_batch = getattr(self.estimator, "predict_batch", None)
         if predict_batch is not None:

@@ -104,26 +104,25 @@ class AccuracyFloorPolicy(RoutingPolicy):
                ) -> PolicyDecision:
         p_hat, s_hat = engine.affine_scores(pool)
         rows = np.arange(p_hat.shape[0])
-        best = None          # (cost, -acc, alpha, choices) among feasible
-        fallback = None      # (-acc, cost, alpha, choices) overall
-        for a in alpha_search.candidate_alphas(p_hat, s_hat):
-            choices = alpha_search.route_for_alpha(p_hat, s_hat, a)
-            acc = float(np.mean(p_hat[rows, choices]))
-            cost = float(np.sum(pool.cost_hat[rows, choices]))
-            if fallback is None or (-acc, cost) < fallback[:2]:
-                fallback = (-acc, cost, a, choices)
-            if acc >= self.floor and (best is None
-                                      or (cost, -acc) < best[:2]):
-                best = (cost, -acc, a, choices)
-        feasible = best is not None
-        if best is not None:
-            cost, neg_acc, alpha, choices = best
+        cands = alpha_search.candidate_alphas(p_hat, s_hat)
+        all_choices = alpha_search.route_for_alphas(p_hat, s_hat, cands)
+        accs = p_hat[rows[None], all_choices].mean(axis=1)
+        costs = pool.cost_hat[rows[None], all_choices].sum(axis=1)
+        feas = np.flatnonzero(accs >= self.floor)
+        feasible = bool(len(feas))
+        if feasible:
+            # cheapest feasible; ties by higher acc, then smallest alpha
+            order = np.lexsort((np.arange(len(feas)), -accs[feas],
+                                costs[feas]))
+            i = int(feas[order[0]])
         else:
-            neg_acc, cost, alpha, choices = fallback
-        return PolicyDecision(float(alpha), choices,
+            # most accurate overall; ties by lower cost, then smallest alpha
+            order = np.lexsort((np.arange(len(cands)), costs, -accs))
+            i = int(order[0])
+        return PolicyDecision(float(cands[i]), all_choices[i],
                               {"floor": self.floor, "feasible": feasible,
-                               "expected_acc": -neg_acc,
-                               "expected_cost": cost})
+                               "expected_acc": float(accs[i]),
+                               "expected_cost": float(costs[i])})
 
 
 class CostCeilingPolicy(RoutingPolicy):

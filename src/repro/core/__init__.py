@@ -8,7 +8,7 @@
   utility       — log-min-max cost norm + dynamic-gamma utility (Eq. 11-13)
   calibration   — anchor-calibrated prior (Eq. 14-15)
   alpha_search  — budget-controlled alpha (App. D, Prop. D.1)
-  router        — legacy ScopeRouter shim (canonical: repro.api.ScopeEngine)
+  router        — PoolPredictions container (decision math: repro.api)
   baselines     — Table 1 / Fig. 7 comparison systems
   evaluation    — PGR / Avg-A / Cost metrics
 """

@@ -136,13 +136,47 @@ class ReasoningEstimator:
         self.cot = cot
         self.max_new_tokens = max_new_tokens
         self.batch_size = batch_size
+        self.mesh = None            # set by shard(): data-parallel serving
+
+    # ------------------------------------------------------------------
+    def shard(self, mesh) -> "ReasoningEstimator":
+        """Place the estimator on a device mesh for data-parallel serving.
+
+        Params are placed per ``distributed.sharding.param_specs`` (FSDP on
+        ``data``, TP on ``model`` where divisible) and every subsequent
+        ``predict_batch`` shards its token batch across ``data`` via
+        ``batch_specs`` — prefill and the decode scan then run SPMD over
+        the whole mesh.  Returns self.
+        """
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import sharding as shd
+        pspecs = shd.param_specs(mesh, self.params)
+        self.params = jax.tree.map(
+            lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+            self.params, pspecs, is_leaf=lambda x: isinstance(x, P))
+        self.mesh = mesh
+        return self
+
+    def _place_batch(self, arr: np.ndarray):
+        """Shard a (b, L) token batch across the mesh's data axis."""
+        if self.mesh is None:
+            return arr
+        from jax.sharding import NamedSharding
+        from repro.distributed import sharding as shd
+        spec = shd.batch_specs(self.mesh, {"tokens": arr})["tokens"]
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
 
     # ------------------------------------------------------------------
     def predict_batch(self, prompts: List[List[int]], *,
                       temperature: float = 0.0,
                       rng: Optional[jax.Array] = None) -> ParsedBatch:
-        """Columnar predictions — the serve hot path (no per-pair objects)."""
-        if not prompts:
+        """Columnar predictions — the serve hot path (no per-pair objects).
+
+        ``prompts`` may be a list of constant-length token lists or an
+        already-assembled (b, L) int array (the scheduler's microbatches).
+        """
+        if len(prompts) == 0:
             return ParsedBatch.empty()
         lens = {len(p) for p in prompts}
         assert len(lens) == 1, "structured prompts must be constant-length"
@@ -152,7 +186,7 @@ class ReasoningEstimator:
         for i in range(0, len(arr), self.batch_size):
             key, sub = jax.random.split(key)
             gen, dec = sampler.generate(
-                self.params, self.cfg, arr[i: i + self.batch_size],
+                self.params, self.cfg, self._place_batch(arr[i: i + self.batch_size]),
                 max_new_tokens=self.max_new_tokens, temperature=temperature,
                 rng=sub)
             gens.append(gen)

@@ -1,20 +1,18 @@
-"""The SCOPE router: fingerprint retrieval -> pre-hoc estimation ->
-calibrated, budget-aware decision (SCOPE §5, Eq. 15/16/20).
+"""Pool-wide prediction container for SCOPE routing.
 
-``ScopeRouter`` is now a thin legacy shim over ``repro.api.ScopeEngine``
-(see ``repro/api/engine.py`` for the canonical implementation); it keeps the
-frozen-dict constructor signature for existing callers.  New code should
-build a ``ScopeEngine`` directly.
+``PoolPredictions`` is the alpha-independent product of the pre-hoc
+estimation pass (SCOPE §5, Eq. 15/16/20): everything a ``RoutingPolicy``
+needs to decide, for every (query, model) pair.  The decision math and the
+serving verbs live on ``repro.api.ScopeEngine`` — the legacy ``ScopeRouter``
+/ ``RouterService`` shims were removed once every caller migrated to the
+engine + policy surface.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List
 
-import jax
 import numpy as np
-
-from repro.data.worldsim import PoolModel, Query
 
 
 @dataclasses.dataclass
@@ -31,72 +29,3 @@ class PoolPredictions:
     idx: np.ndarray             # (Q, K) retrieved anchor ids
     cache_hits: int = 0         # pairs served from the PredictionCache
     cache_misses: int = 0       # pairs that ran the estimator
-
-
-class ScopeRouter:
-    """Legacy facade: frozen model dicts in, engine-backed routing out.
-
-    The shim runs uncached (every ``predict_pool`` call hits the estimator),
-    matching the pre-engine behavior; use ``repro.api.ScopeEngine`` for the
-    prediction cache and pluggable policies.
-    """
-
-    def __init__(self, estimator, retriever, library,
-                 models_meta: Dict[str, PoolModel],
-                 model_indices: Dict[str, int], *, k: int = 5,
-                 gamma_base: float = 1.0, beta: float = 2.0,
-                 w_base: float = 0.2, use_confidence: bool = True):
-        self.estimator = estimator
-        self.retriever = retriever
-        self.library = library
-        self.models_meta = models_meta
-        self.model_indices = model_indices
-        self.k = k
-        self.gamma_base = gamma_base
-        self.beta = beta
-        self.w_base = w_base
-        self.use_confidence = use_confidence
-        # deferred import: repro.api depends on this module for the
-        # PoolPredictions type, so the shim resolves the engine lazily
-        from repro.api import EngineConfig, PoolRegistry, ScopeEngine
-        registry = PoolRegistry(library, models_meta, indices=model_indices)
-        self.engine = ScopeEngine.build(EngineConfig(
-            estimator=estimator, retriever=retriever, library=library,
-            registry=registry, k=k, gamma_base=gamma_base, beta=beta,
-            w_base=w_base, use_confidence=use_confidence,
-            enable_cache=False))
-
-    # ------------------------------------------------------------------
-    def predict_pool(self, queries: Sequence[Query],
-                     models: Sequence[str],
-                     query_embs: Optional[np.ndarray] = None,
-                     rng: Optional[jax.Array] = None) -> PoolPredictions:
-        """Run the estimator for every (query, model) pair — Eq. 24's
-        prediction overhead term; one batched engine pass."""
-        from repro.api import RouteRequest
-        return self.engine.predict(
-            RouteRequest(list(queries), models=list(models),
-                         query_embs=query_embs), rng=rng)
-
-    # ------------------------------------------------------------------
-    def utilities(self, pool: PoolPredictions, alpha: float,
-                  *, with_calibration: bool = True) -> np.ndarray:
-        """Final decision scores (Eq. 15) for each (query, model)."""
-        return self.engine.utilities(pool, alpha,
-                                     with_calibration=with_calibration)
-
-    def route(self, pool: PoolPredictions, alpha: float,
-              *, with_calibration: bool = True) -> np.ndarray:
-        """argmax model index per query (Eq. 15)."""
-        return np.argmax(self.utilities(pool, alpha,
-                                        with_calibration=with_calibration),
-                         axis=1)
-
-    # ------------------------------------------------------------------
-    def route_with_budget(self, pool: PoolPredictions, budget: float
-                          ) -> Tuple[float, np.ndarray, Dict]:
-        """Appendix D: pick alpha* maximizing expected accuracy s.t. the
-        set-level budget, via the Prop. D.1 finite breakpoint search."""
-        from repro.api import SetBudgetPolicy
-        d = self.engine.decide(pool, SetBudgetPolicy(budget))
-        return float(d.alpha), d.choices, d.info

@@ -23,3 +23,17 @@ def make_host_mesh():
     """Degenerate 1x1 mesh over the real local device (tests/examples)."""
     n = jax.local_device_count()
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_serve_mesh(n_data: int = 0, n_model: int = 1):
+    """Serve-time mesh: data-parallel by default, TP optional.
+
+    The streaming serve path shards request microbatches (and FSDP-shards
+    estimator params) across ``data``; the estimator is small enough that
+    ``model`` usually stays 1.  ``n_data=0`` takes every local device —
+    on CPU, tests and benchmarks multiply devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    the first jax import).
+    """
+    n = n_data or max(1, jax.local_device_count() // n_model)
+    return jax.make_mesh((n, n_model), ("data", "model"))

@@ -8,6 +8,7 @@ retraining — and serves a batch of queries under a chosen routing policy.
   PYTHONPATH=src python -m repro.launch.serve --budget 0.5 --ood
   PYTHONPATH=src python -m repro.launch.serve --accuracy-floor 0.7
   PYTHONPATH=src python -m repro.launch.serve --cost-ceiling 0.002
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 6 --mesh
 """
 from __future__ import annotations
 
@@ -15,6 +16,7 @@ import argparse
 import json
 
 import jax
+import numpy as np
 
 from repro.api import (
     AccuracyFloorPolicy, CostCeilingPolicy, EngineConfig, FixedAlphaPolicy,
@@ -53,6 +55,13 @@ def main(argv=None):
     ap.add_argument("--ood", action="store_true",
                     help="route over the unseen (OOD) model pool")
     ap.add_argument("--queries", type=int, default=48)
+    ap.add_argument("--stream-ticks", type=int, default=0,
+                    help="serve as N streaming traffic ticks through the "
+                         "bucketed microbatch scheduler (0 = one batch)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the estimator over the local serve mesh "
+                         "(multiply CPU devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -81,8 +90,37 @@ def main(argv=None):
     else:
         pool = data.models
 
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh()
+        engine.estimator.shard(mesh)
+        print(f"# estimator sharded over "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
     policy = pick_policy(args)
-    qids = data.test_qids[: args.queries]
+    qids = [int(q) for q in data.test_qids[: args.queries]]
+
+    if args.stream_ticks > 0:
+        from repro.serving.scheduler import MicrobatchScheduler
+        sched = MicrobatchScheduler()
+        chunks = [[int(q) for q in c]
+                  for c in np.array_split(qids, args.stream_ticks)]
+        reports = list(engine.serve_stream(data, chunks, policy,
+                                           models=pool, scheduler=sched))
+        n = sum(r.n_queries for r in reports)
+        print(json.dumps({
+            "policy": policy.name,
+            "ticks": [{"queries": r.n_queries,
+                       "accuracy": round(r.accuracy, 3),
+                       "cost_usd": round(r.total_cost, 4)}
+                      for r in reports],
+            "accuracy": sum(r.accuracy * r.n_queries
+                            for r in reports) / max(n, 1),
+            "total_cost_usd": round(sum(r.total_cost for r in reports), 4),
+            "scheduler": sched.stats.as_dict(),
+        }, indent=2))
+        return 0
+
     report = engine.serve(data, qids, policy, models=pool)
     print(json.dumps({
         "policy": report.policy,

@@ -1,6 +1,7 @@
-"""Serving substrate: KV-cache sampler, batched engine, router service.
+"""Serving substrate: KV-cache sampler, batched engine, microbatch scheduler.
 
-The routing entry point is ``repro.api.ScopeEngine``; ``router_service``
-keeps the legacy ``RouterService`` shim on top of it.
+The routing entry point is ``repro.api.ScopeEngine``; ``scheduler`` turns
+ragged request streams into fixed-shape bucket microbatches for the fused
+serve hot path.
 """
-from repro.serving import engine, router_service, sampler  # noqa: F401
+from repro.serving import engine, sampler, scheduler  # noqa: F401

@@ -31,19 +31,45 @@ def _prefill(params, cfg: ModelConfig, tokens):
     return M.prefill(params, cfg, {"tokens": tokens})
 
 
-def _pad_caches(caches, max_len: int, prompt_len: int):
-    """Grow prefill caches (seq = prompt_len) to decode capacity."""
-    def grow(leaf):
-        # KV leaves have a seq axis == prompt_len somewhere; mamba states don't.
-        shape = leaf.shape
-        for ax, n in enumerate(shape):
-            if n == prompt_len and ax >= 2:      # (count, b, ..., S, ...)
-                widths = [(0, 0)] * leaf.ndim
-                widths[ax] = (0, max_len - prompt_len)
-                return jnp.pad(leaf, widths)
-        return leaf
+# Explicit seq-axis contract for decode caches, keyed by leaf name.  The
+# axis index includes the leading layer-stack dim the segment scan adds:
+#   k / v  : (L, b, kv_heads, S, head_dim)  -> axis 3
+#   c_kv   : (L, b, S, kv_lora_rank)        -> axis 2
+#   k_rope : (L, b, S, qk_rope_head_dim)    -> axis 2
+# Everything else (mamba conv/ssm states, ck/cv encoder cross caches) has no
+# decode-time sequence axis and must never be grown, whatever its shape.
+CACHE_SEQ_AXIS = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 2}
 
-    return jax.tree.map(grow, caches)
+
+def _leaf_name(path) -> str:
+    entry = path[-1]
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    return str(entry)
+
+
+def _pad_caches(caches, max_len: int, prompt_len: int):
+    """Grow prefill caches (seq = prompt_len) to decode capacity.
+
+    The sequence axis comes from the cache *structure* (leaf name ->
+    ``CACHE_SEQ_AXIS``), never from sniffing shapes: a head count, conv
+    width, or SSM state dim that happens to equal ``prompt_len`` must not
+    be padded — growing the wrong axis silently corrupts decode.
+    """
+    def grow(path, leaf):
+        ax = CACHE_SEQ_AXIS.get(_leaf_name(path))
+        if ax is None:
+            return leaf
+        if leaf.shape[ax] != prompt_len:
+            raise ValueError(
+                f"cache leaf {_leaf_name(path)!r} has seq axis "
+                f"{leaf.shape[ax]} != prompt_len {prompt_len} "
+                f"(shape {leaf.shape})")
+        widths = [(0, 0)] * leaf.ndim
+        widths[ax] = (0, max_len - prompt_len)
+        return jnp.pad(leaf, widths)
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
 
 
 # no donate_argnums on the caches: XLA reports the KV buffers as unusable

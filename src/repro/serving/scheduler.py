@@ -1,0 +1,223 @@
+"""Streaming microbatch scheduler: ragged traffic -> fixed-shape batches.
+
+The fused serve hot path (``sampler._prefill`` / ``sampler._scan_decode``)
+compiles one XLA executable per input shape.  Live traffic is ragged — per
+tick the number of (query, model) prompts varies — so feeding raw request
+batches to the estimator recompiles constantly.  ``MicrobatchScheduler``
+quantizes the traffic onto a small fixed grid of (batch, prompt-len)
+shapes:
+
+  * the **batch axis** is padded up to a configured set of bucket sizes
+    with all-PAD rows.  Prefill and the decode scan are row-independent
+    (attention, sampling, and the EOS mask never mix rows), so under
+    greedy decoding the real rows are **bit-identical** to an unpadded
+    run — pad rows are simply dropped on the way out;
+  * the **prompt-len axis** is exact-fit by default (SCOPE's structured
+    serialization produces constant-length prompts per pool, so each
+    distinct length is its own bucket).  A fixed ``prompt_lens`` grid may
+    be configured to cap executable count under genuinely ragged lengths:
+    prompts are then right-padded with PAD up to the bucket boundary,
+    which matches the ``ServingEngine`` padding semantic (decode continues
+    from the padded position; sub-bucket rows are no longer bit-identical
+    to an unpadded run, so keep exact-fit where parity matters).
+
+``ready()`` pops full microbatches eagerly at the largest batch bucket;
+``flush()`` drains the remainder into a greedy largest-fit bucket
+decomposition.  ``SchedulerStats`` tracks bucket occupancy, pad waste, and
+the compiled-executable counts of the fused decode path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import PAD
+
+
+def decode_compile_counts() -> Dict[str, int]:
+    """Compiled-executable counts of the fused serve path.
+
+    Reads the jit caches of ``sampler._prefill`` / ``sampler._scan_decode``
+    — one entry per (shape, sharding) the serve path has compiled.  The
+    counters are process-global and monotonic; callers interested in the
+    cost of a traffic window should diff two snapshots.
+    """
+    from repro.serving import sampler
+    out = {}
+    for name, fn in (("prefill", sampler._prefill),
+                     ("scan_decode", sampler._scan_decode)):
+        try:
+            out[name] = int(fn._cache_size())
+        except Exception:           # jit internals moved — degrade gracefully
+            out[name] = -1
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketConfig:
+    """The fixed (batch, prompt-len) shape grid.
+
+    ``batch_sizes`` must be sorted ascending; traffic is assembled into the
+    largest size and flushed into a greedy largest-fit decomposition.
+    ``prompt_lens`` empty means exact-fit: every distinct arriving length is
+    its own bucket (no length padding, bit-identical results).
+    """
+    batch_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32)
+    prompt_lens: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.batch_sizes:
+            raise ValueError("batch_sizes must be non-empty")
+        bs = tuple(sorted(set(int(b) for b in self.batch_sizes)))
+        if bs[0] <= 0:
+            raise ValueError(f"batch sizes must be positive, got {bs}")
+        object.__setattr__(self, "batch_sizes", bs)
+        object.__setattr__(self, "prompt_lens",
+                           tuple(sorted(set(int(x) for x in self.prompt_lens))))
+
+    @property
+    def max_batch(self) -> int:
+        return self.batch_sizes[-1]
+
+    def batch_bucket(self, n: int) -> int:
+        """Smallest configured batch size >= n (n must fit the grid)."""
+        for b in self.batch_sizes:
+            if b >= n:
+                return b
+        raise ValueError(f"batch {n} exceeds the largest bucket "
+                         f"{self.max_batch}")
+
+    def len_bucket(self, length: int) -> int:
+        """Smallest configured prompt-len >= length; exact-fit otherwise."""
+        for ell in self.prompt_lens:
+            if ell >= length:
+                return ell
+        return int(length)          # exact-fit (incl. overflow of the grid)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0              # real prompts accepted
+    emitted: int = 0                # real prompts shipped in microbatches
+    microbatches: int = 0
+    flushes: int = 0                # flush() calls that emitted something
+    pad_rows: int = 0               # all-PAD filler rows
+    pad_tokens: int = 0             # PAD tokens added (rows + length padding)
+    real_tokens: int = 0
+    occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
+        default_factory=dict)       # (batch, len) bucket -> microbatch count
+
+    @property
+    def pad_fraction(self) -> float:
+        total = self.real_tokens + self.pad_tokens
+        return self.pad_tokens / total if total else 0.0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"submitted": self.submitted, "emitted": self.emitted,
+                "microbatches": self.microbatches, "flushes": self.flushes,
+                "pad_rows": self.pad_rows,
+                "pad_fraction": round(self.pad_fraction, 4),
+                "buckets": {f"{b}x{l}": c
+                            for (b, l), c in sorted(self.occupancy.items())},
+                "compile_counts": decode_compile_counts()}
+
+
+@dataclasses.dataclass
+class Microbatch:
+    """One fixed-shape unit of work: (bucket_batch, bucket_len) tokens.
+
+    Rows [0, n_real) carry real prompts (right-padded to ``bucket[1]`` when
+    a length grid is configured); rows [n_real, bucket[0]) are all-PAD
+    filler.  ``tags`` parallels the real rows.
+    """
+    tokens: np.ndarray              # (bucket_batch, bucket_len) int32
+    tags: List[Any]
+    bucket: Tuple[int, int]
+
+    @property
+    def n_real(self) -> int:
+        return len(self.tags)
+
+
+@dataclasses.dataclass
+class _Pending:
+    tag: Any
+    prompt: List[int]
+
+
+class MicrobatchScheduler:
+    """Request queue + microbatch assembler over a ``BucketConfig`` grid.
+
+    ``submit`` enqueues one prompt under an opaque tag; ``ready`` pops
+    full largest-bucket microbatches; ``flush`` drains everything left.
+    The scheduler is shape bookkeeping only — executing a ``Microbatch``
+    (and discarding its pad rows) is the caller's job.
+    """
+
+    def __init__(self, config: Optional[BucketConfig] = None):
+        self.config = config or BucketConfig()
+        self.stats = SchedulerStats()
+        # per len-bucket FIFO; OrderedDict keeps drain order deterministic
+        self._queues: "OrderedDict[int, List[_Pending]]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def submit(self, tag: Any, prompt: Sequence[int]) -> None:
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        ell = self.config.len_bucket(len(prompt))
+        self._queues.setdefault(ell, []).append(_Pending(tag, prompt))
+        self.stats.submitted += 1
+
+    # -- assembly ------------------------------------------------------
+    def _emit(self, ell: int, items: List[_Pending]) -> Microbatch:
+        bb = self.config.batch_bucket(len(items))
+        tokens = np.full((bb, ell), PAD, np.int32)
+        for i, it in enumerate(items):
+            tokens[i, : len(it.prompt)] = it.prompt
+        st = self.stats
+        st.emitted += len(items)
+        st.microbatches += 1
+        st.pad_rows += bb - len(items)
+        real = sum(len(it.prompt) for it in items)
+        st.real_tokens += real
+        st.pad_tokens += bb * ell - real
+        key = (bb, ell)
+        st.occupancy[key] = st.occupancy.get(key, 0) + 1
+        return Microbatch(tokens, [it.tag for it in items], key)
+
+    def ready(self) -> List[Microbatch]:
+        """Pop every full largest-bucket microbatch currently assembled."""
+        out = []
+        full = self.config.max_batch
+        for ell, q in self._queues.items():
+            while len(q) >= full:
+                out.append(self._emit(ell, q[:full]))
+                del q[:full]
+        return out
+
+    def flush(self) -> List[Microbatch]:
+        """Drain the remainder: greedy largest-fit bucket decomposition."""
+        out = self.ready()
+        for ell, q in self._queues.items():
+            while q:
+                take = len(q)
+                for b in reversed(self.config.batch_sizes):
+                    if b <= len(q):
+                        take = b
+                        break
+                out.append(self._emit(ell, q[:take]))
+                del q[:take]
+        self._queues.clear()
+        if out:
+            self.stats.flushes += 1
+        return out
+
+    def drain(self) -> Iterator[Microbatch]:
+        """ready() + flush() as one iterator (single-shot workloads)."""
+        yield from self.flush()

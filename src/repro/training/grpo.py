@@ -155,10 +155,12 @@ class GRPOTrainer:
         tokens = np.concatenate([tiled, gen], axis=1)
         gen_mask = np.zeros((B, L), np.float32)
         rewards = np.zeros(B, np.float32)
+        well_formed = np.zeros(B, bool)
         for i in range(B):
             y_gt, len_gt = gts[i // g]
             toks = [int(t) for t in gen[i]]
             parsed = tok.parse_prediction(toks)
+            well_formed[i] = bool(parsed.get("well_formed", False))
             rewards[i] = rw.grpo_reward(parsed, y_gt, len_gt)
             # mask: generated positions up to & including EOS (or all)
             upto = toks.index(tok.EOS) + 1 if tok.EOS in toks else len(toks)
@@ -184,9 +186,11 @@ class GRPOTrainer:
                 self.gcfg.clip_eps, self.gcfg.kl_coef)
         mean_r = float(rewards.mean())
         self.reward_history.append(mean_r)
+        # the actual gate pass rate — NOT np.mean(rewards > 0), which
+        # miscounts well-formed rollouts whose composite reward is zero
         return {"reward": mean_r, "loss": float(loss),
                 "kl": float(metrics["kl"]),
-                "format_rate": float(np.mean(rewards > 0))}
+                "format_rate": float(np.mean(well_formed))}
 
     def train(self, steps: int, *, verbose: bool = False,
               log_every: int = 10) -> List[float]:

@@ -18,9 +18,7 @@ from repro.api.cache import CachedPrediction
 from repro.core import serialization
 from repro.core.estimator import Prediction
 from repro.core.fingerprint import FingerprintLibrary
-from repro.core.router import ScopeRouter
 from repro.data.datasets import build_scope_data
-from repro.serving.router_service import RouterService, ServiceReport
 
 
 class CountingEstimator:
@@ -269,7 +267,7 @@ def test_cost_ceiling_policy(engine_setup):
 
 
 # ---------------------------------------------------------------------------
-# Serving through the facade and the legacy shims
+# Serving through the facade
 # ---------------------------------------------------------------------------
 def test_engine_serve_and_policy_sweep_without_estimator(engine_setup):
     engine, est, data = engine_setup
@@ -295,33 +293,43 @@ def test_engine_serve_empty_batch(engine_setup):
     assert rep.accuracy == 0.0 and rep.total_cost == 0.0
 
 
-def test_router_service_empty_qids_returns_explicit_report(
-        engine_setup, world, library, retriever):
-    _, est, data = engine_setup
-    router = ScopeRouter(est, retriever, library, world.models,
-                         {m: i for i, m in enumerate(data.models)})
-    service = RouterService(router, data, data.models)
+def test_engine_serve_empty_is_warning_free(engine_setup):
+    # ported from the removed RouterService shim contract: a zero-query
+    # serve must produce an explicit report, never a np.mean([]) warning
+    engine, _, data = engine_setup
     with warnings.catch_warnings():
-        warnings.simplefilter("error")              # np.mean([]) would warn
-        rep = service.serve([], alpha=0.5)
-    assert isinstance(rep, ServiceReport)
-    assert rep.choices.shape == (0,)
+        warnings.simplefilter("error")
+        rep = engine.serve(data, [], FixedAlphaPolicy(0.5))
+    assert rep.n_queries == 0
     assert rep.accuracy == 0.0 and rep.total_cost == 0.0
     assert set(rep.per_model_share) == set(data.models)
 
 
-def test_legacy_shim_matches_engine(engine_setup, world, library, retriever):
+def test_uncached_predict_matches_cached_values(engine_setup):
+    # ported from the removed ScopeRouter shim-parity test: the uncached
+    # path (the shim's behavior) and the cached path agree on every value
     engine, est, data = engine_setup
-    qids, queries = _queries(data)
-    router = ScopeRouter(est, retriever, library, world.models,
-                         {m: i for i, m in enumerate(data.models)})
-    pool_shim = router.predict_pool(queries, data.models)
-    pool_api = engine.predict(RouteRequest(queries, models=data.models),
+    _, queries = _queries(data)
+    pool_raw = engine.predict(RouteRequest(queries, models=data.models),
                               use_cache=False)
-    np.testing.assert_allclose(pool_shim.p_hat, pool_api.p_hat)
-    np.testing.assert_allclose(pool_shim.cost_hat, pool_api.cost_hat)
-    np.testing.assert_array_equal(router.route(pool_shim, 0.6),
-                                  np.argmax(engine.utilities(pool_api, 0.6),
-                                            axis=1))
-    alpha, choices, info = router.route_with_budget(pool_shim, 1e9)
-    assert info["feasible"] and 0.0 <= alpha <= 1.0
+    assert (pool_raw.cache_hits, pool_raw.cache_misses) == \
+        (0, len(queries) * len(data.models))
+    pool = engine.predict(RouteRequest(queries, models=data.models))
+    np.testing.assert_allclose(pool_raw.p_hat, pool.p_hat)
+    np.testing.assert_allclose(pool_raw.cost_hat, pool.cost_hat)
+    # decision math: policy decide == raw argmax over utilities
+    d = engine.decide(pool_raw, FixedAlphaPolicy(0.6))
+    np.testing.assert_array_equal(
+        d.choices, np.argmax(engine.utilities(pool_raw, 0.6), axis=1))
+    d_budget = engine.decide(pool_raw, SetBudgetPolicy(1e9))
+    assert d_budget.info["feasible"] and 0.0 <= d_budget.alpha <= 1.0
+
+
+def test_policy_selection_is_explicit():
+    # the shim's silent budget-over-alpha kwarg precedence is retired: the
+    # engine takes exactly one policy object, and each is validated
+    with pytest.raises(ValueError):
+        FixedAlphaPolicy(-0.1)
+    with pytest.raises(ValueError):
+        SetBudgetPolicy(-1.0)
+    assert SetBudgetPolicy(0.5).name != FixedAlphaPolicy(0.5).name

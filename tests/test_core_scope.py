@@ -124,3 +124,82 @@ def test_decision_rule_baselines_shapes():
     for q in range(6):
         if (c[q] <= 0.005).any():
             assert c[q, hc[q]] <= 0.005
+
+
+# ---------------------------------------------------------------------------
+# alpha_search: vectorized breakpoint/budget math vs the loop reference
+# (the pre-vectorization oracle is pinned once, in benchmarks.bench_budget)
+# ---------------------------------------------------------------------------
+from benchmarks.bench_budget import _breakpoints_loop  # noqa: E402
+
+
+def test_breakpoints_match_loop_reference():
+    from repro.core import alpha_search
+    rng = np.random.default_rng(7)
+    for Q, M in ((1, 2), (5, 3), (12, 6), (3, 1)):
+        p = rng.random((Q, M))
+        s = rng.random((Q, M))
+        vec = alpha_search.breakpoints(p, s)
+        loop = _breakpoints_loop(p, s)
+        # every loop breakpoint is represented within the dedup tolerance
+        if len(loop) == 0:
+            assert len(vec) == 0
+            continue
+        assert len(vec) <= len(loop)
+        dist = np.abs(loop[:, None] - vec[None, :]).min(axis=1)
+        assert dist.max() <= alpha_search.TIE_TOL
+
+
+def test_route_for_alphas_matches_scalar():
+    from repro.core import alpha_search
+    rng = np.random.default_rng(3)
+    p, s = rng.random((9, 5)), rng.random((9, 5))
+    alphas = alpha_search.candidate_alphas(p, s)
+    block = alpha_search.route_for_alphas(p, s, alphas, block=4)
+    for i, a in enumerate(alphas):
+        np.testing.assert_array_equal(
+            block[i], alpha_search.route_for_alpha(p, s, float(a)))
+
+
+def test_budget_alpha_tiebreak_is_tolerant():
+    from repro.core import alpha_search
+    # two candidate regimes with performances equal up to float noise but
+    # different costs: the cheaper one must win (exact == used to be brittle)
+    p = np.array([[0.6, 0.6 + 1e-12]])
+    s = np.array([[1.0, 0.0]])
+    c = np.array([[1.0, 5.0]])
+    alpha, choice, info = alpha_search.budget_alpha(p, s, c, budget=10.0)
+    assert info["feasible"]
+    assert choice[0] == 0                   # same perf within tol, cheaper
+    assert info["expected_cost"] == 1.0
+
+
+def test_budget_alpha_matches_loop_on_random_pools():
+    from repro.core import alpha_search
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        Q, M = int(rng.integers(2, 8)), int(rng.integers(2, 5))
+        p = rng.random((Q, M))
+        c = rng.random((Q, M)) * 0.01 + 1e-4
+        s = 1.0 - c / c.max()
+        budget = float(np.sort(c.min(axis=1)).sum() * rng.uniform(0.8, 2.0))
+        a, choice, info = alpha_search.budget_alpha(p, s, c, budget)
+        rows = np.arange(Q)
+        cost = c[rows, choice].sum()
+        perf = p[rows, choice].sum()
+        # cross-check against the candidate set built from the LOOP
+        # breakpoints (the pre-vectorization enumeration)
+        grid = np.concatenate([[0.0], _breakpoints_loop(p, s), [1.0]])
+        loop_cands = np.unique(np.concatenate(
+            [grid, (grid[:-1] + grid[1:]) / 2.0]))
+        loop_routes = [alpha_search.route_for_alpha(p, s, cand)
+                       for cand in loop_cands]
+        if info["feasible"]:
+            assert cost <= budget + 1e-9
+            # no loop-enumerated alpha does strictly better within budget
+            for ch in loop_routes:
+                if c[rows, ch].sum() <= budget:
+                    assert p[rows, ch].sum() <= perf + alpha_search.TIE_TOL
+        else:
+            cheap = min(c[rows, ch].sum() for ch in loop_routes)
+            assert cost <= cheap + 1e-9

@@ -1,11 +1,17 @@
-"""End-to-end SCOPE routing behaviour on the trained tiny estimator."""
+"""End-to-end SCOPE routing behaviour on the trained tiny estimator,
+through the ``repro.api`` engine + policy surface."""
 import numpy as np
 import pytest
 
+from repro.api import (
+    EngineConfig, FixedAlphaPolicy, RouteRequest, ScopeEngine,
+    SetBudgetPolicy)
 from repro.core.estimator import ReasoningEstimator
 from repro.core.evaluation import evaluate_choices
-from repro.core.router import ScopeRouter
-from repro.serving.router_service import RouterService
+
+
+def _route(engine, pool, alpha):
+    return np.argmax(engine.utilities(pool, alpha), axis=1)
 
 
 @pytest.fixture(scope="module")
@@ -13,16 +19,17 @@ def router_setup(tiny_trained, scope_data, library, retriever):
     cfg, params, _ = tiny_trained
     est = ReasoningEstimator(cfg, params)
     world = scope_data.world
-    router = ScopeRouter(est, retriever, library, world.models,
-                         {m: i for i, m in enumerate(scope_data.models)})
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=est, retriever=retriever, library=library,
+        models_meta={m: world.models[m] for m in scope_data.models}))
     qids = scope_data.test_qids[:10]
     queries = [scope_data.queries[int(q)] for q in qids]
-    pool = router.predict_pool(queries, scope_data.models)
-    return router, pool, qids
+    pool = engine.predict(RouteRequest(queries, models=scope_data.models))
+    return engine, pool, qids
 
 
 def test_pool_predictions_shapes(router_setup, scope_data):
-    router, pool, qids = router_setup
+    engine, pool, qids = router_setup
     Q, M = len(qids), len(scope_data.models)
     assert pool.p_hat.shape == (Q, M)
     assert np.all((pool.p_hat >= 0) & (pool.p_hat <= 1))
@@ -31,36 +38,36 @@ def test_pool_predictions_shapes(router_setup, scope_data):
 
 
 def test_alpha_zero_is_cheaper_than_alpha_one(router_setup, scope_data):
-    router, pool, qids = router_setup
-    ch0 = router.route(pool, alpha=0.0)
-    ch1 = router.route(pool, alpha=1.0)
+    engine, pool, qids = router_setup
+    ch0 = _route(engine, pool, 0.0)
+    ch1 = _route(engine, pool, 1.0)
     ev0 = evaluate_choices(scope_data, qids, scope_data.models, ch0)
     ev1 = evaluate_choices(scope_data, qids, scope_data.models, ch1)
     assert ev0.total_cost <= ev1.total_cost + 1e-9
 
 
-def test_budget_alpha_respects_budget(router_setup, scope_data):
-    router, pool, qids = router_setup
+def test_budget_policy_respects_budget(router_setup, scope_data):
+    engine, pool, qids = router_setup
     tight = float(np.sort(pool.cost_hat.min(axis=1)).sum() * 1.5)
-    alpha, choices, info = router.route_with_budget(pool, tight)
-    if info["feasible"]:
-        assert info["expected_cost"] <= tight + 1e-9
-    assert 0.0 <= alpha <= 1.0
-    assert choices.shape == (len(qids),)
+    d = engine.decide(pool, SetBudgetPolicy(tight))
+    if d.info["feasible"]:
+        assert d.info["expected_cost"] <= tight + 1e-9
+    assert 0.0 <= d.alpha <= 1.0
+    assert d.choices.shape == (len(qids),)
 
 
 def test_calibration_changes_decisions_smoothly(router_setup):
-    router, pool, _ = router_setup
-    u_with = router.utilities(pool, 0.5, with_calibration=True)
-    u_without = router.utilities(pool, 0.5, with_calibration=False)
+    engine, pool, _ = router_setup
+    u_with = engine.utilities(pool, 0.5, with_calibration=True)
+    u_without = engine.utilities(pool, 0.5, with_calibration=False)
     assert u_with.shape == u_without.shape
     assert not np.allclose(u_with, u_without)       # prior has an effect
 
 
-def test_router_service_report(router_setup, scope_data):
-    router, pool, qids = router_setup
-    service = RouterService(router, scope_data, scope_data.models)
-    rep = service.serve(qids, alpha=0.7, pool=pool)
+def test_engine_serve_report(router_setup, scope_data):
+    engine, pool, qids = router_setup
+    d = engine.decide(pool, FixedAlphaPolicy(0.7))
+    rep = engine.execute(scope_data, qids, pool, d, "fixed_alpha")
     assert 0.0 <= rep.accuracy <= 1.0
     assert abs(sum(rep.per_model_share.values()) - 1.0) < 1e-9
     assert rep.overhead_tokens > 0
@@ -76,11 +83,12 @@ def test_unseen_model_routable_without_retraining(tiny_trained, scope_data,
         library.onboard(world, unseen, seed=99)
     est = ReasoningEstimator(cfg, params)
     models = scope_data.models + [unseen]
-    router = ScopeRouter(est, retriever, library, world.models,
-                         {m: i for i, m in enumerate(models)})
+    engine = ScopeEngine.build(EngineConfig(
+        estimator=est, retriever=retriever, library=library,
+        models_meta={m: world.models[m] for m in models}))
     queries = [scope_data.queries[int(q)] for q in scope_data.test_qids[:6]]
-    pool = router.predict_pool(queries, models)
+    pool = engine.predict(RouteRequest(queries, models=models))
     assert pool.p_hat.shape == (6, len(models))
     # at alpha=1 the strongest (unseen) model should attract some traffic
-    ch1 = router.route(pool, alpha=1.0)
+    ch1 = _route(engine, pool, 1.0)
     assert np.all(ch1 >= 0)

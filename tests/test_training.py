@@ -76,3 +76,43 @@ def test_checkpoint_roundtrip(tmp_path):
     restored = checkpoint.load(path, zeros)
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grpo_format_rate_reports_gate_pass_rate(scope_data, library,
+                                                retriever, tiny_trained):
+    """format_rate must be the parse-gate pass rate, not mean(rewards > 0):
+    a well-formed rollout with zero composite reward (wrong label, far-off
+    length) passes the gate but earns nothing."""
+    import pytest
+    from repro.core import rewards as rw
+    from repro.data import tokenizer as tok
+    from repro.serving import sampler
+    from repro.training.grpo import GRPOConfig, GRPOTrainer
+
+    cfg, params, _ = tiny_trained
+    gcfg = GRPOConfig(group_size=2, tasks_per_step=6, temperature=1.0)
+    t1 = GRPOTrainer(cfg, params, scope_data, library, retriever,
+                     gcfg=gcfg, seed=3)
+    t2 = GRPOTrainer(cfg, params, scope_data, library, retriever,
+                     gcfg=gcfg, seed=3)
+    # _build_prompts draws embedding noise from the world's shared rng;
+    # rewind it so the twin replay sees the identical stream
+    world_rng_state = scope_data.world.rng.bit_generator.state
+    info = t1.rollout_step()
+    scope_data.world.rng.bit_generator.state = world_rng_state
+
+    # replay the identical rollout with the twin trainer's rng stream
+    tasks = t2._sample_tasks(gcfg.tasks_per_step)
+    prompts, gts = t2._build_prompts(tasks)
+    tiled = np.repeat(np.asarray(prompts, np.int32), gcfg.group_size, axis=0)
+    _, sub = jax.random.split(t2.key)
+    gen, _ = sampler.generate(t2.params, cfg, tiled,
+                              max_new_tokens=gcfg.max_new_tokens,
+                              temperature=gcfg.temperature, rng=sub)
+    parsed = [tok.parse_prediction([int(x) for x in g]) for g in gen]
+    gate = float(np.mean([p.get("well_formed", False) for p in parsed]))
+    rewards = np.asarray(
+        [rw.grpo_reward(p, *gts[i // gcfg.group_size])
+         for i, p in enumerate(parsed)])
+    assert info["format_rate"] == pytest.approx(gate)
+    assert info["reward"] == pytest.approx(float(rewards.mean()), abs=1e-6)
