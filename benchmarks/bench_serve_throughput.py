@@ -1,13 +1,21 @@
-"""Streaming serve throughput: queries/sec and recompile counts for the
-bucketed microbatch scheduler vs naive ragged dispatch, across bucket
-configs and device counts.
+"""Streaming serve throughput: queries/sec, time-to-first-decision, and
+recompile counts for the continuous-batching serve runtime vs naive ragged
+dispatch, across bucket configs and device counts.
 
 Sections:
 
-  stream_bucketed — ``ScopeEngine.predict_stream`` over ragged traffic
-                    ticks through a ``MicrobatchScheduler``; after the
+  stream_overlap  — ``ScopeEngine.predict_stream`` over ragged traffic
+                    ticks with double-buffered dispatch (microbatch N+1's
+                    host assembly overlaps N's device decode); after the
                     bucket warmup, varying per-tick batch sizes must add
                     **zero** new executables (asserted in --smoke)
+  stream_sync     — the same stream with ``overlap=False`` (the pre-runtime
+                    synchronous loop); the overlap row's qps / ttfd gains
+                    are reported against this
+  deadline_flush  — paced single-query traffic against an under-filled
+                    bucket with ``max_queue_age`` set: partially-filled
+                    buckets ship when the latency budget expires, keeping
+                    queue age bounded (asserted in --smoke)
   stream_naive    — ``predict`` called per ragged tick (the pre-scheduler
                     behavior): every distinct tick size compiles a fresh
                     (batch, len) executable
@@ -65,11 +73,25 @@ def _compile_delta(before: Dict[str, int], after: Dict[str, int]) -> int:
 # ---------------------------------------------------------------------------
 # Sections
 # ---------------------------------------------------------------------------
+def _stream_once(engine, ticks, cfg, *, overlap: bool):
+    """One full stream pass; returns (pools, total_s, ttfd_s, scheduler)."""
+    from repro.api import RouteRequest
+    from repro.serving.scheduler import MicrobatchScheduler
+    sched = MicrobatchScheduler(cfg)
+    t0 = time.perf_counter()
+    it = engine.predict_stream((RouteRequest(t) for t in ticks),
+                               scheduler=sched, use_cache=False,
+                               overlap=overlap)
+    first = next(it)
+    ttfd = time.perf_counter() - t0
+    pools = [first] + list(it)
+    return pools, time.perf_counter() - t0, ttfd, sched
+
+
 def bench_stream(engine, queries, *, bucket_sizes, repeats: int = 3,
                  max_tick: int = 8, smoke: bool = False) -> List[Dict]:
     from repro.api import RouteRequest
-    from repro.serving.scheduler import (
-        BucketConfig, MicrobatchScheduler, decode_compile_counts)
+    from repro.serving.scheduler import BucketConfig, decode_compile_counts
 
     sizes = _tick_sizes(len(queries), max_tick=max_tick)
     ticks = _as_ticks(queries, sizes)
@@ -77,22 +99,22 @@ def bench_stream(engine, queries, *, bucket_sizes, repeats: int = 3,
 
     # -- bucketed stream: warm the bucket executables, then measure ----
     cfg = BucketConfig(batch_sizes=bucket_sizes)
-    warm_sched = MicrobatchScheduler(cfg)
-    list(engine.predict_stream((RouteRequest(t) for t in ticks),
-                               scheduler=warm_sched, use_cache=False))
+    _stream_once(engine, ticks, cfg, overlap=True)
     warmed = decode_compile_counts()
 
-    times, sched = [], None
-    for _ in range(repeats):
-        sched = MicrobatchScheduler(cfg)
-        t0 = time.perf_counter()
-        stream_pools = list(engine.predict_stream(
-            (RouteRequest(t) for t in ticks), scheduler=sched,
-            use_cache=False))
-        times.append(time.perf_counter() - t0)
-    after = decode_compile_counts()
-    bucketed_recompiles = _compile_delta(warmed, after)
-    qps_bucketed = len(queries) / min(times)
+    def measure(overlap):
+        times, ttfds, pools, sched = [], [], None, None
+        for _ in range(repeats):
+            pools, dt, ttfd, sched = _stream_once(engine, ticks, cfg,
+                                                  overlap=overlap)
+            times.append(dt)
+            ttfds.append(ttfd)
+        return pools, len(queries) / min(times), min(ttfds), sched
+
+    # sync first so progressive warming cannot flatter the overlap row
+    sync_pools, qps_sync, ttfd_sync, _ = measure(False)
+    overlap_pools, qps_overlap, ttfd_overlap, sched = measure(True)
+    recompiles = _compile_delta(warmed, decode_compile_counts())
 
     # -- naive ragged dispatch: one predict per tick -------------------
     before = decode_compile_counts()
@@ -110,25 +132,36 @@ def bench_stream(engine, queries, *, bucket_sizes, repeats: int = 3,
     t_batch = time.perf_counter() - t0
     qps_batch = len(queries) / t_batch
 
-    stream_p = np.concatenate([p.p_hat for p in stream_pools])
+    overlap_p = np.concatenate([p.p_hat for p in overlap_pools])
+    sync_p = np.concatenate([p.p_hat for p in sync_pools])
     naive_p = np.concatenate([p.p_hat for p in naive_pools])
-    identical_stream = bool(np.array_equal(stream_p, batch_pool.p_hat))
+    identical_stream = bool(np.array_equal(overlap_p, batch_pool.p_hat))
+    identical_sync = bool(np.array_equal(sync_p, batch_pool.p_hat))
     identical_naive = bool(np.array_equal(naive_p, batch_pool.p_hat))
     if smoke:
-        assert bucketed_recompiles == 0, (
-            f"bucketed stream recompiled {bucketed_recompiles} executables "
-            f"after warmup — each (bucket, shape) must compile exactly once")
-        assert identical_stream, "stream p_hat != batch predict p_hat"
+        assert recompiles == 0, (
+            f"stream runtime recompiled {recompiles} executables after "
+            f"warmup — each (bucket, shape) must compile exactly once")
+        assert identical_stream, "overlap stream p_hat != batch predict"
+        assert identical_sync, "sync stream p_hat != batch predict"
 
     st = sched.stats.as_dict()
     return [
-        {"name": "serve_throughput/stream_bucketed", "qps": qps_bucketed,
+        {"name": "serve_throughput/stream_overlap", "qps": qps_overlap,
          "detail": {"ticks": len(ticks), "queries": len(queries),
                     "models": n_models, "buckets": st["buckets"],
                     "pad_fraction": st["pad_fraction"],
                     "microbatches": st["microbatches"],
-                    "recompiles_after_warmup": bucketed_recompiles,
+                    "ttfd_ms": round(ttfd_overlap * 1e3, 2),
+                    "queue_age_ms": st["queue_age_ms"],
+                    "recompiles_after_warmup": recompiles,
+                    "speedup_vs_sync":
+                        round(qps_overlap / max(qps_sync, 1e-9), 3),
                     "identical_to_batch": identical_stream}},
+        {"name": "serve_throughput/stream_sync", "qps": qps_sync,
+         "detail": {"ticks": len(ticks),
+                    "ttfd_ms": round(ttfd_sync * 1e3, 2),
+                    "identical_to_batch": identical_sync}},
         {"name": "serve_throughput/stream_naive", "qps": qps_naive,
          "detail": {"ticks": len(ticks),
                     "distinct_tick_sizes": len(set(sizes)),
@@ -137,8 +170,73 @@ def bench_stream(engine, queries, *, bucket_sizes, repeats: int = 3,
         {"name": "serve_throughput/batch_oracle", "qps": qps_batch,
          "detail": {"queries": len(queries),
                     "speedup_stream_vs_naive":
-                        round(qps_bucketed / max(qps_naive, 1e-9), 2)}},
+                        round(qps_overlap / max(qps_naive, 1e-9), 2)}},
     ]
+
+
+def bench_deadline(engine, queries, *, full_bucket: int = 16,
+                   max_queue_ms: float = 5.0, inter_arrival_ms: float = 1.0,
+                   smoke: bool = False) -> List[Dict]:
+    """Paced single-query traffic against an under-filled bucket.
+
+    Each tick contributes (1 query x M models) prompts — far short of the
+    ``full_bucket`` batch — so without a deadline nothing would ship until
+    stream end.  With ``max_queue_age`` set, ``tick()`` emits
+    partially-filled buckets the moment the oldest prompt ages out.  The
+    deadline is **tick-granular**: ticks fire on request arrival in the
+    single-threaded drain loop, so realized queue age is bounded by
+    ``max_queue_age`` plus the time to the next tick (including any
+    microbatch execution the loop blocks on) — the warmup pass below keeps
+    one-off XLA compiles out of the measured ages.
+    """
+    from repro.api import RouteRequest
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+
+    def paced():
+        for q in queries:
+            time.sleep(inter_arrival_ms / 1e3)
+            yield RouteRequest([q])
+
+    def run():
+        sched = MicrobatchScheduler(
+            BucketConfig(batch_sizes=(full_bucket,)),
+            max_queue_age=max_queue_ms / 1e3)
+        t0 = time.perf_counter()
+        pools = list(engine.predict_stream(paced(), scheduler=sched,
+                                           use_cache=False))
+        return pools, time.perf_counter() - t0, sched
+
+    run()                       # warm the (full/partial bucket) executables
+    pools, dt, sched = run()
+    st = sched.stats
+    ages = st.queue_age_percentiles()
+    # steady-state bound: deadline + a handful of warm microbatch
+    # executions the drain loop may block on before the next tick
+    exec_ms = dt * 1e3 / max(st.microbatches, 1)
+    bound_ms = max_queue_ms + 4 * exec_ms
+    if smoke:
+        assert st.deadline_flushes > 0, (
+            "deadline never fired: paced sub-bucket traffic must trigger "
+            "max_queue_age partial flushes")
+        assert st.partial_microbatches > 0, (
+            "no partially-filled buckets were emitted under the deadline")
+        assert len(pools) == len(queries)
+        assert ages["max"] * 1e3 <= bound_ms, (
+            f"warm queue age {ages['max'] * 1e3:.1f}ms exceeds the "
+            f"tick-granular bound {bound_ms:.1f}ms")
+    return [{
+        "name": "serve_throughput/deadline_flush",
+        "qps": len(queries) / dt,
+        "detail": {"max_queue_ms": max_queue_ms,
+                   "inter_arrival_ms": inter_arrival_ms,
+                   "full_bucket": full_bucket,
+                   "deadline_flushes": st.deadline_flushes,
+                   "partial_microbatches": st.partial_microbatches,
+                   "microbatches": st.microbatches,
+                   "pad_fraction": round(st.pad_fraction, 4),
+                   "age_bound_ms": round(bound_ms, 2),
+                   "queue_age_ms": {k: round(v * 1e3, 2)
+                                    for k, v in ages.items()}}}]
 
 
 def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
@@ -202,6 +300,7 @@ def run(bundle) -> List[Tuple[str, float, str]]:
     queries = [bundle.data.queries[int(q)]
                for q in bundle.data.test_qids[:48]]
     rows = bench_stream(engine, queries, bucket_sizes=BUCKETS)
+    rows += bench_deadline(engine, queries[:24])
     rows += bench_sharded(bundle.engine(bundle.seen), queries,
                           bucket_sizes=BUCKETS)
     _emit(rows, smoke=False)
@@ -256,10 +355,12 @@ def main(argv=None) -> int:
         rows = bench_stream(engine, queries, bucket_sizes=(1, 2, 4, 8),
                             repeats=args.repeats or 2, max_tick=3,
                             smoke=True)
+        rows += bench_deadline(engine, queries[:6], smoke=True)
         rows += bench_sharded(engine, queries, bucket_sizes=(1, 2, 4, 8))
         _emit(rows, smoke=True)
         print("# smoke asserts passed: zero recompiles after warmup, "
-              "stream bit-identical to batch predict")
+              "overlap+sync streams bit-identical to batch predict, "
+              "deadline flush ships partial buckets")
     else:
         from benchmarks.common import get_bundle
         rows_csv = run(get_bundle())

@@ -302,36 +302,61 @@ class ScopeEngine:
         return self._finalize(st, batch)
 
     # -- streaming prediction ------------------------------------------
+    def _dispatch_microbatch(self, mb, rng):
+        """Launch one microbatch: non-blocking handle for estimators with
+        ``dispatch_batch`` (overlapped execution); a finished
+        ``ParsedBatch`` for duck-typed object-list estimators."""
+        dispatch = getattr(self.estimator, "dispatch_batch", None)
+        if dispatch is not None:
+            return dispatch(mb.tokens, prompt_lens=mb.lengths, rng=rng)
+        return self._run_estimator(mb.tokens, rng)
+
     def predict_stream(self, requests: Iterable[RouteRequest], *,
                        scheduler: Optional["MicrobatchScheduler"] = None,
                        rng: Optional[jax.Array] = None,
-                       use_cache: Optional[bool] = None
+                       use_cache: Optional[bool] = None,
+                       overlap: bool = True
                        ) -> Iterator[PoolPredictions]:
-        """Drain an iterator of requests through the microbatch scheduler.
+        """Drain an iterator of requests through the continuous-batching
+        serve runtime.
 
         Yields one ``PoolPredictions`` per request, in arrival order, with
         the exact semantics of ``predict``: per-request ``get_many`` cache
         probes, estimator work for the misses only, per-request
         ``put_many`` on completion.  The difference is *how* the estimator
         runs: miss prompts from all in-flight requests are assembled into
-        fixed-shape bucket microbatches (see ``serving.scheduler``), so
+        fixed-shape bucket microbatches (see ``serving.scheduler``) — so
         ragged traffic reuses a handful of compiled executables and small
-        ticks ride along with large ones.  Under greedy decoding the
-        yielded predictions are bit-identical to ``predict`` on the same
-        queries.
+        ticks ride along with large ones — and each microbatch is
+        **double-buffer dispatched** through a ``ServeRuntime``
+        (``overlap=True``): batch N+1's host assembly (cache probe,
+        serialization, packing) runs while N's device decode is in flight,
+        and the host blocks only at parse time.  Parses stay in dispatch
+        (FIFO) order, so overlap changes when the host blocks, never what
+        it observes; ``overlap=False`` restores the fully synchronous
+        loop.  Under greedy decoding the yielded predictions match
+        ``predict`` on the same queries — bit-for-bit when the microbatch
+        shapes match the one-shot batch (the CI smoke gate), token- and
+        decision-identical with confidences to f32 ulp otherwise (XLA
+        reduction order varies with batch shape).
 
-        A request is emitted once all its missing pairs are resolved;
-        partially-filled buckets are flushed when the input iterator is
-        exhausted, so every submitted request is always answered.  A pair
-        whose (query, model) duplicates one still in flight (a hot query
-        repeated across ticks, probed before the first tick's microbatch
-        landed and populated the cache) is not scheduled again: it shares
-        the in-flight generation and, like a cache hit, spends no new
-        estimator tokens.  Cache writes happen per microbatch — the moment
-        a bucket's generations are parsed — so later requests hit entries
-        from microbatches that completed before they arrived, even while
-        the owning request is still FIFO-blocked from emitting.
+        The scheduler's deadline/occupancy knobs (``max_queue_age`` /
+        ``min_fill``) are honored on every request arrival via ``tick()``:
+        a latency-sensitive prompt rides out in a partially-filled bucket
+        instead of waiting for a full one.  A request is emitted once all
+        its missing pairs are resolved; partially-filled buckets are
+        flushed when the input iterator is exhausted, so every submitted
+        request is always answered.  A pair whose (query, model)
+        duplicates one still in flight (a hot query repeated across ticks,
+        probed before the first tick's microbatch parsed into the cache)
+        is not scheduled again: it shares the in-flight generation and,
+        like a cache hit, spends no new estimator tokens.  Cache writes
+        happen per microbatch — the moment a bucket's generations are
+        parsed — so later requests hit entries from microbatches parsed
+        before they arrived, even while the owning request is still
+        FIFO-blocked from emitting.
         """
+        from repro.serving.runtime import ServeRuntime
         from repro.serving.scheduler import MicrobatchScheduler
         if use_cache is None:
             use_cache = self.config.enable_cache
@@ -343,26 +368,28 @@ class ScopeEngine:
         version = self.config.estimator_version
         serial = 0                          # unique keys for uncached pairs
 
-        def run_microbatches(batches):
-            for mb in batches:
-                batch = self._run_estimator(mb.tokens, rng)
-                keys, entries = [], []
-                for row, key in enumerate(mb.tags):
-                    waiters = inflight.pop(key)
-                    for j, (entry, miss_i) in enumerate(waiters):
-                        entry.fill(miss_i, batch, row, shared=j > 0)
-                    if use_cache:
-                        owner, miss_i = waiters[0]      # true token spend
-                        keys.append(key)
-                        entries.append(CachedPrediction(
-                            y_hat=int(batch.y_hat[row]),
-                            len_hat=float(batch.len_hat[row]),
-                            well_formed=bool(batch.well_formed[row]),
-                            p_conf=float(batch.p_conf[row]),
-                            pred_tokens=int(batch.pred_tokens[row]),
-                            prompt_tokens=len(owner.state.prompts[miss_i])))
-                if keys:
-                    self.cache.put_many(keys, entries)
+        def on_parsed(mb, batch):
+            keys, entries = [], []
+            for row, key in enumerate(mb.tags):
+                waiters = inflight.pop(key)
+                for j, (entry, miss_i) in enumerate(waiters):
+                    entry.fill(miss_i, batch, row, shared=j > 0)
+                if use_cache:
+                    owner, miss_i = waiters[0]          # true token spend
+                    keys.append(key)
+                    entries.append(CachedPrediction(
+                        y_hat=int(batch.y_hat[row]),
+                        len_hat=float(batch.len_hat[row]),
+                        well_formed=bool(batch.well_formed[row]),
+                        p_conf=float(batch.p_conf[row]),
+                        pred_tokens=int(batch.pred_tokens[row]),
+                        prompt_tokens=len(owner.state.prompts[miss_i])))
+            if keys:
+                self.cache.put_many(keys, entries)
+
+        runtime = ServeRuntime(
+            lambda mb: self._dispatch_microbatch(mb, rng),
+            on_parsed=on_parsed, max_pending=1 if overlap else 0)
 
         def drain_completed():
             while pending and pending[0].remaining == 0:
@@ -384,9 +411,11 @@ class ScopeEngine:
                     key, serial = ("uncached", serial), serial + 1
                 inflight[key] = [(entry, miss_i)]
                 sched.submit(key, prompt)
-            run_microbatches(sched.ready())
+            runtime.dispatch(sched.tick())
+            runtime.poll()                  # free parses: device already done
             yield from drain_completed()
-        run_microbatches(sched.flush())
+        runtime.dispatch(sched.flush())
+        runtime.finish()
         yield from drain_completed()
         assert not pending, "stream ended with unresolved requests"
 
@@ -395,7 +424,8 @@ class ScopeEngine:
                      models: Optional[Sequence[str]] = None,
                      scheduler: Optional["MicrobatchScheduler"] = None,
                      rng: Optional[jax.Array] = None,
-                     use_cache: Optional[bool] = None
+                     use_cache: Optional[bool] = None,
+                     overlap: bool = True
                      ) -> Iterator[BatchReport]:
         """Streaming ``serve``: one executed ``BatchReport`` per qid tick.
 
@@ -416,7 +446,8 @@ class ScopeEngine:
                                    models=pool_models)
 
         for pool in self.predict_stream(as_requests(), scheduler=scheduler,
-                                        rng=rng, use_cache=use_cache):
+                                        rng=rng, use_cache=use_cache,
+                                        overlap=overlap):
             qids = ticks.popleft()
             if not qids:
                 yield BatchReport.empty(policy.name, pool_models)

@@ -128,6 +128,28 @@ def parse_generations(gen: np.ndarray, dec_logits: np.ndarray) -> ParsedBatch:
         rationale_len=np.where(cot, first_tend - first_think + 1, 0))
 
 
+@dataclasses.dataclass
+class DecodeHandle:
+    """In-flight generation: device arrays dispatched, not yet parsed.
+
+    ``is_ready`` polls the device buffers without blocking;``parse`` blocks
+    (``np.asarray``) and runs the batched parse.  The serve runtime keeps
+    one handle in flight while assembling the next microbatch on the host.
+    """
+    chunks: List[tuple]             # [(gen (b, T), dec (b, T, 2)), ...]
+
+    def is_ready(self) -> bool:
+        return all(g.is_ready() and d.is_ready() for g, d in self.chunks)
+
+    def parse(self) -> ParsedBatch:
+        if not self.chunks:
+            return ParsedBatch.empty()
+        gens = [np.asarray(g) for g, _ in self.chunks]
+        decs = [np.asarray(d) for _, d in self.chunks]
+        return parse_generations(np.concatenate(gens, axis=0),
+                                 np.concatenate(decs, axis=0))
+
+
 class ReasoningEstimator:
     def __init__(self, cfg: ModelConfig, params, *, cot: bool = True,
                  max_new_tokens: int = 12, batch_size: int = 256):
@@ -168,31 +190,48 @@ class ReasoningEstimator:
         return jax.device_put(arr, NamedSharding(self.mesh, spec))
 
     # ------------------------------------------------------------------
-    def predict_batch(self, prompts: List[List[int]], *,
-                      temperature: float = 0.0,
-                      rng: Optional[jax.Array] = None) -> ParsedBatch:
-        """Columnar predictions — the serve hot path (no per-pair objects).
+    def dispatch_batch(self, prompts, *, prompt_lens=None,
+                       temperature: float = 0.0,
+                       rng: Optional[jax.Array] = None) -> DecodeHandle:
+        """Launch generation for a batch and return without blocking.
 
         ``prompts`` may be a list of constant-length token lists or an
-        already-assembled (b, L) int array (the scheduler's microbatches).
+        already-assembled (b, L) int array (the scheduler's microbatches);
+        ``prompt_lens`` (b,) marks true per-row lengths under a bucket
+        grid.  The returned ``DecodeHandle`` parses on demand — the serve
+        runtime overlaps the next microbatch's host assembly with this
+        one's device decode.
         """
         if len(prompts) == 0:
-            return ParsedBatch.empty()
-        lens = {len(p) for p in prompts}
-        assert len(lens) == 1, "structured prompts must be constant-length"
+            return DecodeHandle([])
+        if prompt_lens is None:
+            lens = {len(p) for p in prompts}
+            assert len(lens) == 1, "structured prompts must be constant-length"
         arr = np.asarray(prompts, np.int32)
-        gens, decs = [], []
-        key = rng if rng is not None else jax.random.PRNGKey(0)
+        chunks = []
+        key = rng
         for i in range(0, len(arr), self.batch_size):
-            key, sub = jax.random.split(key)
-            gen, dec = sampler.generate(
-                self.params, self.cfg, self._place_batch(arr[i: i + self.batch_size]),
+            sub = None
+            if key is not None:
+                key, sub = jax.random.split(key)
+            pl = (None if prompt_lens is None
+                  else np.asarray(prompt_lens)[i: i + self.batch_size])
+            chunks.append(sampler.generate_async(
+                self.params, self.cfg,
+                self._place_batch(arr[i: i + self.batch_size]),
                 max_new_tokens=self.max_new_tokens, temperature=temperature,
-                rng=sub)
-            gens.append(gen)
-            decs.append(dec)
-        return parse_generations(np.concatenate(gens, axis=0),
-                                 np.concatenate(decs, axis=0))
+                rng=sub, prompt_lens=pl))
+        return DecodeHandle(chunks)
+
+    def predict_batch(self, prompts: List[List[int]], *,
+                      prompt_lens=None, temperature: float = 0.0,
+                      rng: Optional[jax.Array] = None) -> ParsedBatch:
+        """Columnar predictions — the serve hot path (no per-pair objects)."""
+        if len(prompts) == 0:
+            return ParsedBatch.empty()
+        return self.dispatch_batch(prompts, prompt_lens=prompt_lens,
+                                   temperature=temperature,
+                                   rng=rng).parse()
 
     def predict(self, prompts: List[List[int]], *,
                 temperature: float = 0.0,

@@ -9,6 +9,8 @@ retraining — and serves a batch of queries under a chosen routing policy.
   PYTHONPATH=src python -m repro.launch.serve --accuracy-floor 0.7
   PYTHONPATH=src python -m repro.launch.serve --cost-ceiling 0.002
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 6 --mesh
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --max-queue-ms 5 --min-fill 0.5
 """
 from __future__ import annotations
 
@@ -58,6 +60,15 @@ def main(argv=None):
     ap.add_argument("--stream-ticks", type=int, default=0,
                     help="serve as N streaming traffic ticks through the "
                          "bucketed microbatch scheduler (0 = one batch)")
+    ap.add_argument("--max-queue-ms", type=float, default=None,
+                    help="deadline flush: emit a partially-filled bucket "
+                         "rather than queue a prompt longer than this")
+    ap.add_argument("--min-fill", type=float, default=0.0,
+                    help="occupancy flush: emit once a length queue covers "
+                         "this fraction of the largest batch bucket")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable double-buffered dispatch (synchronous "
+                         "microbatch execution)")
     ap.add_argument("--mesh", action="store_true",
                     help="shard the estimator over the local serve mesh "
                          "(multiply CPU devices with XLA_FLAGS="
@@ -102,11 +113,15 @@ def main(argv=None):
 
     if args.stream_ticks > 0:
         from repro.serving.scheduler import MicrobatchScheduler
-        sched = MicrobatchScheduler()
+        sched = MicrobatchScheduler(
+            max_queue_age=(None if args.max_queue_ms is None
+                           else args.max_queue_ms / 1e3),
+            min_fill=args.min_fill)
         chunks = [[int(q) for q in c]
                   for c in np.array_split(qids, args.stream_ticks)]
         reports = list(engine.serve_stream(data, chunks, policy,
-                                           models=pool, scheduler=sched))
+                                           models=pool, scheduler=sched,
+                                           overlap=not args.no_overlap))
         n = sum(r.n_queries for r in reports)
         print(json.dumps({
             "policy": policy.name,

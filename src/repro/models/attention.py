@@ -84,9 +84,12 @@ def gqa_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
                *, kind: str = "attn") -> Tuple[jax.Array, Dict]:
     """Single-token GQA decode.
 
-    x: (b, 1, d); cache["k"/"v"]: (b, hkv, S, hd); pos: scalar int — number
-    of tokens already generated (the new token has absolute position
-    ``pos``).
+    x: (b, 1, d); cache["k"/"v"]: (b, hkv, S, hd); pos: scalar or (b,)
+    int — per-row number of tokens already cached (row ``i``'s new token
+    has absolute position ``pos[i]``).  Per-row positions let rows at
+    different sequence offsets (continuous batching, ragged prompt
+    lengths) share one decode executable: the new KV lands at each row's
+    own slot and the attention mask sees each row's own valid length.
 
     Windowed layers whose cache is allocated at exactly ``window`` entries
     run in **ring-buffer mode**: the new KV lands at ``pos % window`` and
@@ -99,19 +102,23 @@ def gqa_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
     q, k, v = _gqa_qkv(p, cfg, x, cos, sin)
     window = resolve_window(cfg, kind)
     S_cache = cache["k"].shape[2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     ring = window > 0 and S_cache == window
     if ring:
-        slot = jnp.asarray(pos) % window
-        valid = jnp.minimum(jnp.asarray(pos) + 1, window)
+        slot = pos % window
+        valid = jnp.minimum(pos + 1, window)
         attn_window = 0                     # ring already enforces it
     else:
         slot = pos
-        valid = jnp.asarray(pos) + 1
+        valid = pos + 1
         attn_window = window
-    kc = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype), slot, axis=2)
-    vc = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), slot, axis=2)
+    rows = jnp.arange(b)
+    kc = cache["k"].at[rows, :, slot].set(
+        k.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["k"].dtype),
+        unique_indices=True)
+    vc = cache["v"].at[rows, :, slot].set(
+        v.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["v"].dtype),
+        unique_indices=True)
     out = ops.decode_attention(
         q.transpose(0, 2, 1, 3), kc, vc, valid,
         window=attn_window,
@@ -220,7 +227,8 @@ def mla_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
                *, kind: str = "mla") -> Tuple[jax.Array, Dict]:
     """Absorbed-form MLA decode: attention runs in the latent space.
 
-    cache: {"c_kv": (b, S, lora), "k_rope": (b, S, rdim)}.  The up
+    cache: {"c_kv": (b, S, lora), "k_rope": (b, S, rdim)}.  ``pos`` is a
+    scalar or per-row (b,) position, as in ``gqa_decode``.  The up
     projections w_uk/w_uv are folded into the query / output instead of
     re-expanding the cache each step (the TPU-friendly serving form — the
     naive form would up-project all S cached entries per token).
@@ -229,13 +237,15 @@ def mla_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
     h = cfg.num_heads
     nope, rdim, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     lora = cfg.kv_lora_rank
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     q_nope, q_rope = _mla_q(p, cfg, x, cos, sin)            # (b,1,h,·)
     c_kv_new, k_rope_new = _mla_compress(p, cfg, x, cos, sin)
 
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    krope = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    rows = jnp.arange(b)
+    ckv = cache["c_kv"].at[rows, pos].set(
+        c_kv_new[:, 0].astype(cache["c_kv"].dtype), unique_indices=True)
+    krope = cache["k_rope"].at[rows, pos].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype), unique_indices=True)
 
     # absorb w_uk into q: q_lat[b,h,lora] = sum_n q_nope[b,h,n] w_uk[lora,h,n]
     w_uk = p["w_uk"].reshape(lora, h, nope)
@@ -250,11 +260,11 @@ def mla_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
     if cfg.logit_softcap > 0.0:
         s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
     S = ckv.shape[1]
-    kpos = jnp.arange(S)[None, None]
-    mask = kpos <= pos
+    kpos = jnp.arange(S)[None, None]                    # (1, 1, S)
+    mask = kpos <= pos[:, None, None]                   # (b, 1, S)
     window = resolve_window(cfg, kind)
     if window > 0:
-        mask = mask & (kpos > pos - window)
+        mask = mask & (kpos > pos[:, None, None] - window)
     s = jnp.where(mask, s, -1e30)
     probs = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum("bhs,bsl->bhl", probs, ckv.astype(jnp.float32))

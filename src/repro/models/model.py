@@ -84,12 +84,13 @@ def _cos_sin_full(cfg: ModelConfig, batch: Dict, b: int, s: int):
 
 
 def _cos_sin_decode(cfg: ModelConfig, b: int, pos):
+    """``pos``: (b,) int32 — per-row absolute position of the new token."""
     if cfg.rope_kind == "none" or cfg.is_attention_free() and cfg.shared_attn_every == 0:
         return None, None
     hd = cfg.resolved_head_dim
     rope_dim = cfg.qk_rope_head_dim if any(
         tf._is_mla(k) for k in cfg.layer_kinds()) else hd
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = pos[:, None]                              # (b, 1)
     if cfg.rope_kind == "mrope":
         return rope_mod.mrope_cos_sin(rope_mod.text_positions_3d(positions),
                                       rope_dim, cfg.rope_theta,
@@ -98,12 +99,13 @@ def _cos_sin_decode(cfg: ModelConfig, b: int, pos):
 
 
 def _sinusoid_at(pos, d: int):
+    """pos: (b,) -> (b, d) sinusoidal embedding at each row's position."""
     div = jnp.exp(jnp.arange(0, d, 2).astype(jnp.float32)
                   * (-jnp.log(10000.0) / d))
-    ang = pos.astype(jnp.float32) * div
-    out = jnp.zeros((d,), jnp.float32)
-    out = out.at[0::2].set(jnp.sin(ang))
-    out = out.at[1::2].set(jnp.cos(ang))
+    ang = pos.astype(jnp.float32)[..., None] * div        # (b, d/2)
+    out = jnp.zeros(ang.shape[:-1] + (d,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    out = out.at[..., 1::2].set(jnp.cos(ang))
     return out
 
 
@@ -210,16 +212,19 @@ def prefill(params, cfg: ModelConfig, batch: Dict):
 # Decode
 # ---------------------------------------------------------------------------
 def decode_step(params, cfg: ModelConfig, token, caches, pos):
-    """token: (b, 1) int32; pos: scalar int32 (tokens already cached).
+    """token: (b, 1) int32; pos: scalar OR (b,) int32 — per-row count of
+    tokens already cached (row ``i``'s new token lands at absolute position
+    ``pos[i]``).  A scalar broadcasts to every row, so rows at different
+    sequence positions share one compiled decode executable.
 
     Returns (logits (b, 1, V), new caches)."""
     b = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
     h = params["embed"][token]
     if cfg.scale_embeddings:
         h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
     if cfg.rope_kind == "none" and not cfg.is_attention_free():
-        h = h + _sinusoid_at(jnp.asarray(pos), cfg.d_model
-                             ).astype(h.dtype)[None, None]
+        h = h + _sinusoid_at(pos, cfg.d_model).astype(h.dtype)[:, None]
     cos, sin = _cos_sin_decode(cfg, b, pos)
 
     plan = tf.build_plan(cfg)

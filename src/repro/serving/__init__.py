@@ -1,7 +1,9 @@
-"""Serving substrate: KV-cache sampler, batched engine, microbatch scheduler.
+"""Serving substrate: KV-cache sampler, batched engine, microbatch
+scheduler, and the continuous-batching serve runtime.
 
 The routing entry point is ``repro.api.ScopeEngine``; ``scheduler`` turns
-ragged request streams into fixed-shape bucket microbatches for the fused
-serve hot path.
+ragged request streams into fixed-shape bucket microbatches (with
+deadline/occupancy flushing) and ``runtime.ServeRuntime`` double-buffers
+their dispatch so host assembly overlaps device decode.
 """
-from repro.serving import engine, sampler, scheduler  # noqa: F401
+from repro.serving import engine, runtime, sampler, scheduler  # noqa: F401

@@ -49,20 +49,26 @@ class ServingEngine:
         return rid
 
     def run(self, rng: Optional[jax.Array] = None) -> Dict[int, Result]:
-        """Drain the queue in fixed-size batches (last batch padded)."""
+        """Drain the queue in fixed-size batches (last batch padded).
+
+        Stochastic decoding (temperature > 0) requires an explicit ``rng``
+        — the sampler raises rather than silently reusing PRNGKey(0).
+        """
         results: Dict[int, Result] = {}
         queue, self._queue = self._queue, []
         if not queue:
             return results
         lp = max(len(r.prompt) for r in queue)
-        key = rng if rng is not None else jax.random.PRNGKey(0)
+        key = rng
         for i in range(0, len(queue), self.batch_size):
             chunk = queue[i: i + self.batch_size]
             pad_n = self.batch_size - len(chunk)
             prompts = np.full((len(chunk) + pad_n, lp), PAD, np.int32)
             for j, r in enumerate(chunk):
                 prompts[j, : len(r.prompt)] = r.prompt
-            key, sub = jax.random.split(key)
+            sub = None
+            if key is not None:
+                key, sub = jax.random.split(key)
             gen, lg = sampler.generate(
                 self.params, self.cfg, prompts,
                 max_new_tokens=self.max_new_tokens,

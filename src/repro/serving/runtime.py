@@ -1,0 +1,118 @@
+"""Double-buffered microbatch execution for the streaming serve path.
+
+``ServeRuntime`` separates *dispatch* (launch a microbatch's device work)
+from *parse* (block on the results and hand them to the consumer), so host
+assembly of microbatch N+1 — cache probes, prompt serialization, scheduler
+packing — runs while N's prefill + decode scan is still in flight on the
+device.  ``jax`` dispatch is asynchronous; the only forced host sync is
+``np.asarray`` at parse time, which the runtime defers until either
+
+  * capacity: ``max_pending`` batches are already in flight (the oldest is
+    parsed to make room — ``max_pending=1`` is classic double buffering,
+    ``max_pending=0`` is the synchronous pre-runtime behavior), or
+  * opportunity: ``poll()`` parses any batch whose device buffers report
+    ready (``jax.Array.is_ready``), keeping time-to-first-decision low, or
+  * shutdown: ``finish()`` drains everything.
+
+Parses always happen in dispatch (FIFO) order, so consumers observe the
+exact event order of the synchronous loop — overlap changes *when* the
+host blocks, never *what* it sees.
+
+The runtime is estimator-agnostic: a dispatch function returning an object
+with ``is_ready()``/``parse()`` (e.g. ``ReasoningEstimator.dispatch_batch``
+handles) runs overlapped; one returning a finished ``ParsedBatch`` directly
+(duck-typed test estimators) degrades to the synchronous path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Deque, Iterable, Tuple
+
+from repro.serving.scheduler import Microbatch
+
+
+def _is_ready(handle: Any) -> bool:
+    probe = getattr(handle, "is_ready", None)
+    return True if probe is None else bool(probe())
+
+
+def _parse(handle: Any) -> Any:
+    parse = getattr(handle, "parse", None)
+    return handle if parse is None else parse()
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    dispatched: int = 0
+    parsed: int = 0
+    overlapped: int = 0      # parses that found the device already done
+    max_in_flight: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+class ServeRuntime:
+    """FIFO dispatch/parse pipeline over microbatches.
+
+    ``dispatch_fn(mb)`` launches one microbatch and returns a handle (or a
+    finished result); ``on_parsed(mb, result)`` consumes each parsed batch
+    in dispatch order.
+    """
+
+    def __init__(self, dispatch_fn: Callable[[Microbatch], Any], *,
+                 on_parsed: Callable[[Microbatch, Any], None],
+                 max_pending: int = 1):
+        if max_pending < 0:
+            raise ValueError(f"max_pending must be >= 0, got {max_pending}")
+        self._dispatch_fn = dispatch_fn
+        self._on_parsed = on_parsed
+        self.max_pending = max_pending
+        self._inflight: Deque[Tuple[Microbatch, Any]] = deque()
+        self.stats = RuntimeStats()
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def _parse_oldest(self) -> None:
+        mb, handle = self._inflight.popleft()
+        self.stats.overlapped += int(_is_ready(handle))
+        self.stats.parsed += 1
+        self._on_parsed(mb, _parse(handle))
+
+    def dispatch(self, batches: Iterable[Microbatch]) -> None:
+        """Launch each microbatch, blocking only when over capacity.
+
+        Capacity is enforced **before** the new launch: with
+        ``max_pending=1`` the oldest batch is parsed (blocking until its
+        device work retires) and only then is the next one dispatched, so
+        at most one executable runs at a time — the overlap is host
+        assembly vs device decode, never two executables contending for
+        the same compute.  ``max_pending=0`` parses immediately after
+        dispatch (fully synchronous).
+        """
+        for mb in batches:
+            while self._inflight and len(self._inflight) >= self.max_pending:
+                self._parse_oldest()
+            handle = self._dispatch_fn(mb)
+            self._inflight.append((mb, handle))
+            self.stats.dispatched += 1
+            self.stats.max_in_flight = max(self.stats.max_in_flight,
+                                           len(self._inflight))
+            while len(self._inflight) > self.max_pending:
+                self._parse_oldest()
+
+    def poll(self) -> int:
+        """Parse every leading in-flight batch whose device work is done
+        (non-blocking); returns the number parsed."""
+        n = 0
+        while self._inflight and _is_ready(self._inflight[0][1]):
+            self._parse_oldest()
+            n += 1
+        return n
+
+    def finish(self) -> None:
+        """Block-parse everything still in flight (stream shutdown)."""
+        while self._inflight:
+            self._parse_oldest()

@@ -1,18 +1,39 @@
-"""KV-cache generation: batch prefill + one fused jitted decode scan.
+"""KV-cache generation: batch prefill + fused jitted decode scan segments.
 
-Prompts in SCOPE's structured serialization have constant length, so the
-batch prefill is a single full forward.  Decode is a single jitted
-``jax.lax.scan`` over the new-token axis: sampling (greedy or temperature,
-for GRPO rollouts) happens on device, an EOS done-mask is carried across
-steps, and only what the estimator consumes crosses back to the host —
-generated token ids plus the YES/NO logit pair at each step.  The full
-``(b, T, V)`` logits stack never leaves the device (~V/2x less host
-transfer than the legacy per-token dispatch loop).
+Decode is organised around an explicit ``DecodeState`` (caches, per-row
+positions, done-mask, carried sampling key) so the serve runtime can run
+decode in **chunked scan segments** and refill a drained-at-EOS slot with a
+freshly prefilled prompt between segments (continuous batching) instead of
+idling the slot until the batch finishes:
+
+  state = prefill_state(params, cfg, prompts, max_new_tokens=12)
+  state, gen, dec = decode_segment(params, cfg, state, 4)
+  state = refill_slot(params, cfg, state, row=2, prompt=new_prompt)
+  state, gen2, dec2 = decode_segment(params, cfg, state, 4)
+
+Positions are **per row**: rows at different sequence offsets (ragged
+prompt lengths under a bucket grid, refilled slots mid-decode) share one
+compiled decode executable, and sub-bucket rows reproduce an unpadded run
+exactly — attention masks each row at its own valid length and RoPE rotates
+at each row's own position.  (Exactness holds for attention backbones;
+SSM/conv states consume right-pad tokens during prefill, so keep exact-fit
+lengths for those.)
+
+Each scan segment samples on device (greedy or temperature), carries an
+EOS done-mask, and only what the estimator consumes crosses back to the
+host — generated token ids plus the YES/NO logit pair at each step.  The
+full ``(b, T, V)`` logits stack never leaves the device.
+
+``COMPILE_COUNTS`` counts executable builds explicitly (incremented inside
+the traced bodies, once per compilation) — the serve path's "0 recompiles
+after warmup" gate reads it instead of sniffing jit internals.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from collections import Counter
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,10 +46,24 @@ from repro.models import model as M
 # decision-logit channel order: [:, :, 0] = YES, [:, :, 1] = NO
 DECISION_TOKENS = (YES, NO)
 
+# Explicit compile-count instrumentation: the jitted bodies below increment
+# these counters at trace time, which happens exactly once per compiled
+# (shape, dtype, static-arg) combination.  Process-global and monotonic —
+# diff two snapshots to count the compiles of a traffic window.
+COMPILE_COUNTS: "Counter[str]" = Counter()
+
 
 @functools.partial(jax.jit, static_argnums=(1,))
 def _prefill(params, cfg: ModelConfig, tokens):
+    COMPILE_COUNTS["prefill"] += 1          # traced once per compilation
     return M.prefill(params, cfg, {"tokens": tokens})
+
+
+@jax.jit
+def _gather_last(logits, lens):
+    """Per-row last *valid* prompt logits: logits[i, lens[i] - 1]."""
+    idx = (lens - 1).astype(jnp.int32)[:, None, None]
+    return jnp.take_along_axis(logits, idx, axis=1)[:, 0].astype(jnp.float32)
 
 
 # Explicit seq-axis contract for decode caches, keyed by leaf name.  The
@@ -39,6 +74,10 @@ def _prefill(params, cfg: ModelConfig, tokens):
 # Everything else (mamba conv/ssm states, ck/cv encoder cross caches) has no
 # decode-time sequence axis and must never be grown, whatever its shape.
 CACHE_SEQ_AXIS = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 2}
+
+# every decode-cache leaf carries batch on axis 1 (behind the layer stack);
+# ``refill_slot`` relies on this to scatter one prefilled row into place
+CACHE_BATCH_AXIS = 1
 
 
 def _leaf_name(path) -> str:
@@ -77,57 +116,216 @@ def _pad_caches(caches, max_len: int, prompt_len: int):
 # only emit a warning per call without saving the copy
 @functools.partial(jax.jit, static_argnums=(1, 5, 6, 7))
 def _scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
-                 max_new_tokens: int, temperature: float, stop_at_eos: bool,
-                 prompt_len):
-    """One fused decode: sample -> emit (token, YES/NO logits) -> step.
+                 steps: int, temperature: float, stop_at_eos: bool,
+                 positions, done):
+    """One fused decode segment: sample -> emit (token, YES/NO) -> step.
 
-    Carries (last_logits, caches, done, key) across ``max_new_tokens`` scan
-    steps; per-step outputs are the sampled token ids (b,) and the decision
-    logit pair (b, 2).  Nothing of size V escapes the scan.
+    Carries (last_logits, caches, done, key) across ``steps`` scan steps;
+    ``positions`` is the per-row (b,) count of tokens already cached at
+    segment start, so row i's token at segment step t lands at absolute
+    position ``positions[i] + t``.  Per-step outputs are the sampled token
+    ids (b,) and the decision logit pair (b, 2).  Nothing of size V escapes
+    the scan.  Returns the full carry so segments can be chained.
     """
-    b = last_logits.shape[0]
+    COMPILE_COUNTS["scan_decode"] += 1      # traced once per compilation
     dec_ix = jnp.asarray(DECISION_TOKENS, jnp.int32)
 
     def step(carry, t):
-        logits, kv, done, k = carry
+        logits, kv, dn, k = carry
         if temperature > 0.0:
             k, sub = jax.random.split(k)
             nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
         else:
             nxt = jnp.argmax(logits, axis=-1)
-        nxt = jnp.where(done, PAD, nxt).astype(jnp.int32)
+        nxt = jnp.where(dn, PAD, nxt).astype(jnp.int32)
         dec = logits[:, dec_ix]                          # (b, 2)
         if stop_at_eos:
-            done = done | (nxt == EOS)
+            dn = dn | (nxt == EOS)
         new_logits, kv = M.decode_step(params, cfg, nxt[:, None], kv,
-                                       prompt_len + t)
+                                       positions + t)
         new_logits = new_logits[:, 0].astype(jnp.float32)
-        return (new_logits, kv, done, k), (nxt, dec)
+        return (new_logits, kv, dn, k), (nxt, dec)
 
-    init = (last_logits, caches, jnp.zeros((b,), bool), key)
-    _, (gen, dec_logits) = jax.lax.scan(step, init,
-                                        jnp.arange(max_new_tokens))
-    return gen.T, dec_logits.transpose(1, 0, 2)          # (b, T), (b, T, 2)
+    init = (last_logits, caches, done, key)
+    (last, kv, done, key), (gen, dec) = jax.lax.scan(step, init,
+                                                     jnp.arange(steps))
+    # (b, T), (b, T, 2), + carry for the next segment
+    return gen.T, dec.transpose(1, 0, 2), last, kv, done, key
+
+
+# ---------------------------------------------------------------------------
+# DecodeState: explicit decode carry between scan segments
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DecodeState:
+    """Decode carry between scan segments (slot-based continuous batching).
+
+    ``positions[i]`` counts the tokens already in row i's cache; ``done``
+    marks rows that emitted EOS (they keep decoding PAD at zero semantic
+    cost until refilled or the batch retires).  ``used`` is a host-side
+    upper bound on cache occupancy, checked against ``max_len`` before a
+    segment runs off the end of the allocation.
+    """
+    caches: Any
+    last_logits: jax.Array          # (b, V) float32
+    positions: jax.Array            # (b,) int32
+    done: jax.Array                 # (b,) bool
+    key: Optional[jax.Array]        # carried sampling key (None = greedy)
+    max_len: int                    # per-row cache capacity (slots)
+    used: int                       # host upper bound of max(positions)
+
+    @property
+    def batch(self) -> int:
+        return int(self.last_logits.shape[0])
+
+
+def prefill_state(params, cfg: ModelConfig, prompts, *,
+                  max_new_tokens: int, prompt_lens=None,
+                  rng: Optional[jax.Array] = None) -> DecodeState:
+    """Batch prefill into a ``DecodeState`` sized for ``max_new_tokens``.
+
+    ``prompts``: (b, L) int32, right-padded.  ``prompt_lens`` (b,) gives
+    each row's true length; row i then decodes from position
+    ``prompt_lens[i]`` with attention masked at its own valid length, so a
+    sub-bucket row reproduces the unpadded run exactly (attention
+    backbones).  ``None`` means every row is exactly L long.
+    """
+    prompts = jnp.asarray(prompts, jnp.int32)
+    b, lp = prompts.shape
+    max_len = lp + int(max_new_tokens)
+    logits, caches = _prefill(params, cfg, prompts)
+    caches = _pad_caches(caches, max_len, lp)
+    if prompt_lens is None:
+        last = logits[:, -1].astype(jnp.float32)
+        positions = jnp.full((b,), lp, jnp.int32)
+    else:
+        lens = np.asarray(prompt_lens, np.int64).reshape(-1)
+        if lens.shape != (b,):
+            raise ValueError(f"prompt_lens shape {lens.shape} != ({b},)")
+        if lens.min() < 1 or lens.max() > lp:
+            raise ValueError(
+                f"prompt_lens must lie in [1, {lp}], got "
+                f"[{lens.min()}, {lens.max()}]")
+        if lens.min() < lp and cfg.has_ssm():
+            # SSM/conv prefill has no per-row masking: the recurrent state
+            # consumes right-pad tokens, silently corrupting sub-bucket
+            # rows.  Loud failure beats wrong routing decisions.
+            raise ValueError(
+                "ragged prompt_lens require an attention-only backbone: "
+                f"{cfg.name!r} has SSM/conv layers whose prefill state "
+                "consumes right-pad tokens — use exact-fit lengths "
+                "(BucketConfig(prompt_lens=()))")
+        positions = jnp.asarray(lens, jnp.int32)
+        last = _gather_last(logits, positions)
+    return DecodeState(caches, last, positions,
+                       done=jnp.zeros((b,), bool), key=rng,
+                       max_len=max_len, used=lp)
+
+
+def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
+                   *, temperature: float = 0.0, stop_at_eos: bool = True
+                   ) -> Tuple[DecodeState, jax.Array, jax.Array]:
+    """Run ``steps`` decode steps; returns (state, gen (b, T), dec (b, T, 2)).
+
+    ``gen``/``dec`` are device arrays — the caller decides when to block
+    (``np.asarray``), which is what lets the serve runtime overlap host
+    assembly with device decode.  Chaining segments is bit-identical to one
+    segment of the summed length (the scan body is unchanged and the
+    sampling key is carried).
+    """
+    steps = int(steps)
+    if steps <= 0:
+        raise ValueError(f"steps must be positive, got {steps}")
+    if state.used + steps > state.max_len:
+        raise ValueError(
+            f"segment of {steps} steps overruns the cache: "
+            f"{state.used} used of {state.max_len} slots")
+    if temperature > 0.0 and state.key is None:
+        raise ValueError(
+            "stochastic decoding (temperature > 0) requires an explicit "
+            "rng key — the old PRNGKey(0) fallback made every call sample "
+            "the identical key stream")
+    key = state.key if state.key is not None else jax.random.PRNGKey(0)
+    gen, dec, last, caches, done, key = _scan_decode(
+        params, cfg, state.last_logits, state.caches, key, steps,
+        float(temperature), bool(stop_at_eos), state.positions, state.done)
+    new = DecodeState(caches, last, state.positions + steps, done,
+                      key if state.key is not None else None,
+                      state.max_len, state.used + steps)
+    return new, gen, dec
+
+
+def refill_slot(params, cfg: ModelConfig, state: DecodeState, row: int,
+                prompt: Sequence[int]) -> DecodeState:
+    """Admit a new prompt into slot ``row`` between decode segments.
+
+    Prefills the prompt alone, scatters its caches into the batch state at
+    ``row`` (every decode-cache leaf carries batch on ``CACHE_BATCH_AXIS``),
+    and resets the row's position/done/logits — the other rows are
+    untouched, so the refilled batch keeps decoding them bit-identically.
+    Pad ``prompt`` to a warmed bucket length to avoid a fresh prefill
+    executable.
+    """
+    arr = np.asarray(prompt, np.int32).reshape(1, -1)
+    lp = arr.shape[1]
+    if not 0 <= row < state.batch:
+        raise ValueError(f"row {row} out of range [0, {state.batch})")
+    if lp >= state.max_len:
+        raise ValueError(
+            f"refill prompt of {lp} tokens leaves no decode room in a "
+            f"{state.max_len}-slot cache")
+    logits, caches = _prefill(params, cfg, jnp.asarray(arr))
+    caches = _pad_caches(caches, state.max_len, lp)
+    merged = jax.tree.map(
+        lambda full, one: full.at[:, row].set(one[:, 0].astype(full.dtype)),
+        state.caches, caches)
+    return dataclasses.replace(
+        state,
+        caches=merged,
+        last_logits=state.last_logits.at[row].set(
+            logits[0, -1].astype(jnp.float32)),
+        positions=state.positions.at[row].set(lp),
+        done=state.done.at[row].set(False),
+        used=max(state.used, lp))
+
+
+# ---------------------------------------------------------------------------
+# One-shot generation (prefill + a single decode segment)
+# ---------------------------------------------------------------------------
+def generate_async(params, cfg: ModelConfig, prompts, *,
+                   max_new_tokens: int = 12, temperature: float = 0.0,
+                   rng: Optional[jax.Array] = None, stop_at_eos: bool = True,
+                   prompt_lens=None) -> Tuple[jax.Array, jax.Array]:
+    """``generate`` without the host sync: returns device arrays so the
+    caller can keep assembling the next microbatch while this one decodes
+    (double-buffered dispatch blocks only at parse time)."""
+    if temperature > 0.0 and rng is None:
+        raise ValueError(
+            "generate(temperature > 0) requires an explicit rng key — the "
+            "old PRNGKey(0) fallback made every stochastic call sample the "
+            "identical key stream; pass rng=jax.random.PRNGKey(...) "
+            "(greedy decoding stays deterministic without one)")
+    state = prefill_state(params, cfg, prompts,
+                          max_new_tokens=max_new_tokens,
+                          prompt_lens=prompt_lens, rng=rng)
+    _, gen, dec = decode_segment(params, cfg, state, max_new_tokens,
+                                 temperature=temperature,
+                                 stop_at_eos=stop_at_eos)
+    return gen, dec
 
 
 def generate(params, cfg: ModelConfig, prompts: np.ndarray, *,
              max_new_tokens: int = 12, temperature: float = 0.0,
-             rng: Optional[jax.Array] = None, stop_at_eos: bool = True
-             ) -> Tuple[np.ndarray, np.ndarray]:
-    """prompts: (b, Lp) int32, constant length.  Returns
+             rng: Optional[jax.Array] = None, stop_at_eos: bool = True,
+             prompt_lens=None) -> Tuple[np.ndarray, np.ndarray]:
+    """prompts: (b, Lp) int32, right-padded; ``prompt_lens`` (b,) marks
+    each row's true length (None = all exactly Lp).  Returns
     (generated (b, T) int32, decision_logits (b, T, 2) float32) where the
     last axis is the (YES, NO) logit pair at each step — the only slice of
     the vocab distribution the estimator reads."""
-    prompts = jnp.asarray(prompts, jnp.int32)
-    b, lp = prompts.shape
-    max_len = lp + max_new_tokens
-
-    logits, caches = _prefill(params, cfg, prompts)
-    caches = _pad_caches(caches, max_len, lp)
-    last_logits = logits[:, -1].astype(jnp.float32)
-
-    key = rng if rng is not None else jax.random.PRNGKey(0)
-    gen, dec = _scan_decode(params, cfg, last_logits, caches, key,
-                            int(max_new_tokens), float(temperature),
-                            bool(stop_at_eos), lp)
+    gen, dec = generate_async(params, cfg, prompts,
+                              max_new_tokens=max_new_tokens,
+                              temperature=temperature, rng=rng,
+                              stop_at_eos=stop_at_eos,
+                              prompt_lens=prompt_lens)
     return np.asarray(gen), np.asarray(dec)

@@ -16,44 +16,54 @@ shapes:
     serialization produces constant-length prompts per pool, so each
     distinct length is its own bucket).  A fixed ``prompt_lens`` grid may
     be configured to cap executable count under genuinely ragged lengths:
-    prompts are then right-padded with PAD up to the bucket boundary,
-    which matches the ``ServingEngine`` padding semantic (decode continues
-    from the padded position; sub-bucket rows are no longer bit-identical
-    to an unpadded run, so keep exact-fit where parity matters).
+    prompts are right-padded with PAD up to the bucket boundary and each
+    ``Microbatch`` carries the true per-row ``lengths``, which the sampler
+    threads through decode as per-row positions + valid-length masks — a
+    sub-bucket row reproduces the unpadded run's *token stream* exactly
+    and its decision logits to f32 ulp (the attention reductions span the
+    bucket width, so last-bit logit equality across widths is not a
+    representable goal).  Exactness holds for attention backbones;
+    SSM/conv prefill states consume pad tokens, so keep exact-fit there.
 
-``ready()`` pops full microbatches eagerly at the largest batch bucket;
-``flush()`` drains the remainder into a greedy largest-fit bucket
-decomposition.  ``SchedulerStats`` tracks bucket occupancy, pad waste, and
-the compiled-executable counts of the fused decode path.
+**Continuous flushing.**  ``ready()`` pops full microbatches eagerly at
+the largest batch bucket; ``tick()`` additionally applies the latency
+knobs — ``max_queue_age`` (emit a partial bucket rather than hold a
+request past its deadline; checked against an injectable monotonic
+``clock``) and ``min_fill`` (emit once a queue covers that fraction of the
+largest bucket, trading pad waste for latency); ``flush()`` drains
+everything left into a greedy largest-fit bucket decomposition at stream
+end.  ``SchedulerStats`` tracks bucket occupancy, pad waste, queue-age
+percentiles, and the compiled-executable counts of the fused decode path.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+import time
+from collections import OrderedDict, deque
+from typing import (
+    Any, Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
 from repro.data.tokenizer import PAD
 
+# bounded reservoir of per-prompt queue ages (seconds) for the percentiles
+MAX_QUEUE_AGE_SAMPLES = 65536
+
 
 def decode_compile_counts() -> Dict[str, int]:
     """Compiled-executable counts of the fused serve path.
 
-    Reads the jit caches of ``sampler._prefill`` / ``sampler._scan_decode``
-    — one entry per (shape, sharding) the serve path has compiled.  The
-    counters are process-global and monotonic; callers interested in the
-    cost of a traffic window should diff two snapshots.
+    Reads ``sampler.COMPILE_COUNTS`` — explicit counters incremented inside
+    the traced bodies of ``_prefill`` / ``_scan_decode``, i.e. exactly once
+    per compiled (shape, dtype, static-arg) combination.  No jit internals
+    are sniffed, so the CI "0 recompiles after warmup" gate cannot silently
+    degrade.  The counters are process-global and monotonic; callers
+    interested in the cost of a traffic window should diff two snapshots.
     """
     from repro.serving import sampler
-    out = {}
-    for name, fn in (("prefill", sampler._prefill),
-                     ("scan_decode", sampler._scan_decode)):
-        try:
-            out[name] = int(fn._cache_size())
-        except Exception:           # jit internals moved — degrade gracefully
-            out[name] = -1
-    return out
+    return {"prefill": int(sampler.COMPILE_COUNTS["prefill"]),
+            "scan_decode": int(sampler.COMPILE_COUNTS["scan_decode"])}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,23 +113,44 @@ class SchedulerStats:
     submitted: int = 0              # real prompts accepted
     emitted: int = 0                # real prompts shipped in microbatches
     microbatches: int = 0
+    partial_microbatches: int = 0   # emitted below the full bucket batch
     flushes: int = 0                # flush() calls that emitted something
+    deadline_flushes: int = 0       # queue drains forced by max_queue_age
+    fill_flushes: int = 0           # emissions triggered by min_fill
     pad_rows: int = 0               # all-PAD filler rows
     pad_tokens: int = 0             # PAD tokens added (rows + length padding)
     real_tokens: int = 0
     occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)       # (batch, len) bucket -> microbatch count
+    queue_ages: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=MAX_QUEUE_AGE_SAMPLES))
 
     @property
     def pad_fraction(self) -> float:
         total = self.real_tokens + self.pad_tokens
         return self.pad_tokens / total if total else 0.0
 
+    def queue_age_percentiles(self) -> Dict[str, float]:
+        """Seconds spent queued, per emitted prompt (p50/p95/max)."""
+        if not self.queue_ages:
+            return {"p50": 0.0, "p95": 0.0, "max": 0.0}
+        a = np.asarray(self.queue_ages, np.float64)
+        return {"p50": float(np.percentile(a, 50)),
+                "p95": float(np.percentile(a, 95)),
+                "max": float(a.max())}
+
     def as_dict(self) -> Dict[str, Any]:
+        ages = self.queue_age_percentiles()
         return {"submitted": self.submitted, "emitted": self.emitted,
-                "microbatches": self.microbatches, "flushes": self.flushes,
+                "microbatches": self.microbatches,
+                "partial_microbatches": self.partial_microbatches,
+                "flushes": self.flushes,
+                "deadline_flushes": self.deadline_flushes,
+                "fill_flushes": self.fill_flushes,
                 "pad_rows": self.pad_rows,
                 "pad_fraction": round(self.pad_fraction, 4),
+                "queue_age_ms": {k: round(v * 1e3, 3)
+                                 for k, v in ages.items()},
                 "buckets": {f"{b}x{l}": c
                             for (b, l), c in sorted(self.occupancy.items())},
                 "compile_counts": decode_compile_counts()}
@@ -131,10 +162,13 @@ class Microbatch:
 
     Rows [0, n_real) carry real prompts (right-padded to ``bucket[1]`` when
     a length grid is configured); rows [n_real, bucket[0]) are all-PAD
-    filler.  ``tags`` parallels the real rows.
+    filler.  ``tags`` parallels the real rows; ``lengths`` gives every
+    row's true prompt length (pad rows report the full bucket length), for
+    the sampler's per-row positions / valid-length masks.
     """
     tokens: np.ndarray              # (bucket_batch, bucket_len) int32
     tags: List[Any]
+    lengths: np.ndarray             # (bucket_batch,) int32 true lengths
     bucket: Tuple[int, int]
 
     @property
@@ -146,50 +180,84 @@ class Microbatch:
 class _Pending:
     tag: Any
     prompt: List[int]
+    t_submit: float
 
 
 class MicrobatchScheduler:
     """Request queue + microbatch assembler over a ``BucketConfig`` grid.
 
     ``submit`` enqueues one prompt under an opaque tag; ``ready`` pops
-    full largest-bucket microbatches; ``flush`` drains everything left.
-    The scheduler is shape bookkeeping only — executing a ``Microbatch``
-    (and discarding its pad rows) is the caller's job.
+    full largest-bucket microbatches; ``tick`` adds deadline/occupancy
+    flushing (``max_queue_age`` seconds / ``min_fill`` fraction of the
+    largest bucket, on the injectable monotonic ``clock``); ``flush``
+    drains everything left.  The scheduler is shape bookkeeping only —
+    executing a ``Microbatch`` (and discarding its pad rows) is the
+    caller's job.
     """
 
-    def __init__(self, config: Optional[BucketConfig] = None):
+    def __init__(self, config: Optional[BucketConfig] = None, *,
+                 max_queue_age: Optional[float] = None,
+                 min_fill: float = 0.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_queue_age is not None and max_queue_age < 0:
+            raise ValueError(f"max_queue_age must be >= 0, "
+                             f"got {max_queue_age}")
+        if not 0.0 <= min_fill <= 1.0:
+            raise ValueError(f"min_fill must be in [0, 1], got {min_fill}")
         self.config = config or BucketConfig()
+        self.max_queue_age = max_queue_age
+        self.min_fill = float(min_fill)
         self.stats = SchedulerStats()
+        self._clock = clock
         # per len-bucket FIFO; OrderedDict keeps drain order deterministic
         self._queues: "OrderedDict[int, List[_Pending]]" = OrderedDict()
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def oldest_age(self) -> float:
+        """Age (s) of the oldest queued prompt; 0.0 when empty."""
+        oldest = min((q[0].t_submit for q in self._queues.values() if q),
+                     default=None)
+        return 0.0 if oldest is None else self._clock() - oldest
+
     def submit(self, tag: Any, prompt: Sequence[int]) -> None:
         prompt = list(prompt)
         if not prompt:
             raise ValueError("empty prompt")
         ell = self.config.len_bucket(len(prompt))
-        self._queues.setdefault(ell, []).append(_Pending(tag, prompt))
+        self._queues.setdefault(ell, []).append(
+            _Pending(tag, prompt, self._clock()))
         self.stats.submitted += 1
 
     # -- assembly ------------------------------------------------------
     def _emit(self, ell: int, items: List[_Pending]) -> Microbatch:
         bb = self.config.batch_bucket(len(items))
         tokens = np.full((bb, ell), PAD, np.int32)
+        lengths = np.full((bb,), ell, np.int32)
         for i, it in enumerate(items):
             tokens[i, : len(it.prompt)] = it.prompt
+            lengths[i] = len(it.prompt)
+        now = self._clock()
         st = self.stats
         st.emitted += len(items)
         st.microbatches += 1
+        st.partial_microbatches += int(len(items) < bb)
         st.pad_rows += bb - len(items)
         real = sum(len(it.prompt) for it in items)
         st.real_tokens += real
         st.pad_tokens += bb * ell - real
+        st.queue_ages.extend(now - it.t_submit for it in items)
         key = (bb, ell)
         st.occupancy[key] = st.occupancy.get(key, 0) + 1
-        return Microbatch(tokens, [it.tag for it in items], key)
+        return Microbatch(tokens, [it.tag for it in items], lengths, key)
+
+    def _largest_fit(self, n: int) -> int:
+        """Largest configured batch size <= n, else n (padded up on emit)."""
+        for b in reversed(self.config.batch_sizes):
+            if b <= n:
+                return b
+        return n
 
     def ready(self) -> List[Microbatch]:
         """Pop every full largest-bucket microbatch currently assembled."""
@@ -201,16 +269,48 @@ class MicrobatchScheduler:
                 del q[:full]
         return out
 
+    def tick(self) -> List[Microbatch]:
+        """``ready()`` plus deadline/occupancy flushing.
+
+        A queue whose **oldest** prompt has waited ``max_queue_age`` is
+        drained front-first until the remainder is younger than the
+        deadline (partially-filled buckets allowed); a queue holding at
+        least ``min_fill * max_batch`` prompts emits largest-fit
+        microbatches down to that threshold.  With both knobs unset this
+        is exactly ``ready()``.
+
+        The deadline is **tick-granular**: it is only checked when
+        ``tick()`` runs (the engine calls it per request arrival), so the
+        realized age bound is ``max_queue_age`` plus the caller's
+        inter-tick time — including any microbatch execution its drain
+        loop blocks on.
+        """
+        out = self.ready()
+        if self.max_queue_age is None and self.min_fill <= 0.0:
+            return out
+        now = self._clock()
+        fill_n = self.min_fill * self.config.max_batch
+        for ell, q in self._queues.items():
+            while q:
+                expired = (self.max_queue_age is not None
+                           and now - q[0].t_submit >= self.max_queue_age)
+                filled = self.min_fill > 0.0 and len(q) >= fill_n
+                if not (expired or filled):
+                    break
+                take = self._largest_fit(len(q))
+                out.append(self._emit(ell, q[:take]))
+                del q[:take]
+                st = self.stats
+                st.deadline_flushes += int(expired)
+                st.fill_flushes += int(filled and not expired)
+        return out
+
     def flush(self) -> List[Microbatch]:
         """Drain the remainder: greedy largest-fit bucket decomposition."""
         out = self.ready()
         for ell, q in self._queues.items():
             while q:
-                take = len(q)
-                for b in reversed(self.config.batch_sizes):
-                    if b <= len(q):
-                        take = b
-                        break
+                take = self._largest_fit(len(q))
                 out.append(self._emit(ell, q[:take]))
                 del q[:take]
         self._queues.clear()

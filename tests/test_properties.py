@@ -197,3 +197,111 @@ def test_group_advantages_zero_mean(rewards_, groups):
     r = np.tile(np.asarray(rewards_), (groups, 1))
     adv = (r - r.mean(1, keepdims=True)) / (r.std(1, keepdims=True) + 1e-6)
     assert np.all(np.abs(adv.mean(1)) < 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Microbatch scheduler: flush decomposition + deadline/occupancy flushing
+# ---------------------------------------------------------------------------
+def _scheduler_mod():
+    from repro.serving import scheduler as sched_mod
+    return sched_mod
+
+
+@st.composite
+def _traffic(draw):
+    batch_sizes = tuple(draw(st.lists(st.integers(1, 16), min_size=1,
+                                      max_size=4, unique=True)))
+    n = draw(st.integers(min_value=0, max_value=40))
+    lens = draw(st.lists(st.integers(min_value=1, max_value=24),
+                         min_size=n, max_size=n))
+    return batch_sizes, lens
+
+
+@given(_traffic())
+@settings(max_examples=150, deadline=None)
+def test_flush_largest_fit_decomposition_invariants(traffic):
+    """flush(): every emitted batch is a configured bucket, every submitted
+    prompt is emitted exactly once, FIFO order holds per length class, and
+    the token matrix matches the prompts."""
+    sm = _scheduler_mod()
+    batch_sizes, lens = traffic
+    cfg = sm.BucketConfig(batch_sizes=batch_sizes)
+    sched = sm.MicrobatchScheduler(cfg)
+    prompts = {i: [7 + (i % 5)] * ln for i, ln in enumerate(lens)}
+    for i, p in prompts.items():
+        sched.submit(i, p)
+    mbs = sched.flush()
+    assert len(sched) == 0
+
+    seen = []
+    per_class = {}
+    for mb in mbs:
+        assert mb.bucket[0] in cfg.batch_sizes          # configured bucket
+        assert mb.tokens.shape == mb.bucket
+        assert mb.lengths.shape == (mb.bucket[0],)
+        for row, tag in enumerate(mb.tags):
+            p = prompts[tag]
+            assert mb.bucket[1] == cfg.len_bucket(len(p))
+            assert int(mb.lengths[row]) == len(p)
+            assert list(mb.tokens[row, : len(p)]) == p
+            per_class.setdefault(mb.bucket[1], []).append(tag)
+        seen.extend(mb.tags)
+    assert sorted(seen) == sorted(prompts)              # exactly once
+    for tags in per_class.values():                     # deterministic FIFO
+        assert tags == sorted(tags)
+    assert sched.stats.emitted == len(prompts)
+
+
+@st.composite
+def _arrival_trace(draw):
+    steps = draw(st.lists(
+        st.tuples(st.floats(min_value=0.0, max_value=3.0),
+                  st.integers(min_value=0, max_value=5)),
+        min_size=1, max_size=20))
+    max_age = draw(st.floats(min_value=0.25, max_value=2.0))
+    return steps, max_age
+
+
+@given(_arrival_trace())
+@settings(max_examples=150, deadline=None)
+def test_tick_deadline_bounds_queue_age(trace):
+    """After every tick(), no queued prompt is older than max_queue_age,
+    and the stream still emits every prompt exactly once in valid buckets."""
+    sm = _scheduler_mod()
+    steps, max_age = trace
+    now = [0.0]
+    cfg = sm.BucketConfig(batch_sizes=(2, 8))
+    sched = sm.MicrobatchScheduler(cfg, max_queue_age=max_age,
+                                   clock=lambda: now[0])
+    emitted, i = [], 0
+    for dt, k in steps:
+        now[0] += dt
+        for _ in range(k):
+            sched.submit(i, [5] * 6)
+            i += 1
+        emitted.extend(sched.tick())
+        assert sched.oldest_age() < max_age
+    emitted.extend(sched.flush())
+    tags = sorted(t for mb in emitted for t in mb.tags)
+    assert tags == list(range(i))
+    assert all(mb.bucket[0] in cfg.batch_sizes for mb in emitted)
+
+
+@given(st.integers(min_value=0, max_value=40),
+       st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=150, deadline=None)
+def test_tick_min_fill_caps_queue_occupancy(n, fill):
+    """min_fill: after tick() a queue never holds >= min_fill * max_batch
+    prompts, and emitted microbatches stay valid buckets in FIFO order."""
+    sm = _scheduler_mod()
+    cfg = sm.BucketConfig(batch_sizes=(4, 16))
+    sched = sm.MicrobatchScheduler(cfg, min_fill=fill, clock=lambda: 0.0)
+    for i in range(n):
+        sched.submit(i, [3] * 5)
+    mbs = sched.tick()
+    assert len(sched) < max(fill * cfg.max_batch, 1)
+    tags = [t for mb in mbs for t in mb.tags]
+    assert tags == sorted(tags) == list(range(len(tags)))
+    assert all(mb.bucket[0] in cfg.batch_sizes for mb in mbs)
+    mbs += sched.flush()
+    assert sorted(t for mb in mbs for t in mb.tags) == list(range(n))

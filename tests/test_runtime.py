@@ -1,0 +1,368 @@
+"""Continuous-batching serve runtime: per-row ragged decode, DecodeState
+segments + slot refill, the double-buffered ServeRuntime, and the engine's
+overlapped predict_stream (incl. ragged-length grid parity)."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import EngineConfig, RouteRequest, ScopeEngine
+from repro.core.estimator import ReasoningEstimator
+from repro.data.datasets import build_scope_data
+from repro.serving import sampler
+from repro.serving.runtime import ServeRuntime
+from repro.serving.scheduler import BucketConfig, Microbatch, MicrobatchScheduler
+
+
+# ---------------------------------------------------------------------------
+# Per-row positions / ragged prompt lengths in the sampler
+# ---------------------------------------------------------------------------
+def test_generate_ragged_lengths_match_unpadded(tiny_trained):
+    """Sub-bucket rows reproduce the unpadded run: token stream bit-exact,
+    decision logits to f32 ulp (attention reductions span the bucket width,
+    so last-bit equality across widths is not representable)."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(0)
+    lens = [15, 20, 9, 20]
+    L = max(lens)
+    rows = [rng.integers(3, 100, size=ln).astype(np.int32) for ln in lens]
+    padded = np.zeros((len(rows), L), np.int32)
+    for i, r in enumerate(rows):
+        padded[i, : len(r)] = r
+    g, d = sampler.generate(params, cfg, padded, max_new_tokens=6,
+                            prompt_lens=lens)
+    for i, r in enumerate(rows):
+        gi, di = sampler.generate(params, cfg, r[None], max_new_tokens=6)
+        np.testing.assert_array_equal(g[i], gi[0], err_msg=f"row {i} tokens")
+        np.testing.assert_allclose(d[i], di[0], atol=5e-6, rtol=1e-6,
+                                   err_msg=f"row {i} decision logits")
+
+
+def test_generate_full_length_rows_bit_identical_under_lens(tiny_trained):
+    """A row whose true length equals the bucket is untouched by the
+    per-row machinery: same batch, with vs without prompt_lens."""
+    cfg, params, _ = tiny_trained
+    prompts = np.random.default_rng(1).integers(
+        3, 100, size=(3, 20)).astype(np.int32)
+    g0, d0 = sampler.generate(params, cfg, prompts, max_new_tokens=5)
+    g1, d1 = sampler.generate(params, cfg, prompts, max_new_tokens=5,
+                              prompt_lens=[20, 20, 20])
+    np.testing.assert_array_equal(g0, g1)
+    np.testing.assert_array_equal(d0, d1)
+
+
+def test_prompt_lens_validation(tiny_trained):
+    cfg, params, _ = tiny_trained
+    prompts = np.ones((2, 10), np.int32)
+    with pytest.raises(ValueError, match="prompt_lens"):
+        sampler.generate(params, cfg, prompts, prompt_lens=[5])
+    with pytest.raises(ValueError, match="prompt_lens"):
+        sampler.generate(params, cfg, prompts, prompt_lens=[5, 11])
+    with pytest.raises(ValueError, match="prompt_lens"):
+        sampler.generate(params, cfg, prompts, prompt_lens=[0, 10])
+
+
+# ---------------------------------------------------------------------------
+# DecodeState: chunked segments + slot refill
+# ---------------------------------------------------------------------------
+def test_decode_segments_match_one_shot(tiny_trained):
+    cfg, params, _ = tiny_trained
+    prompts = np.random.default_rng(2).integers(
+        3, 100, size=(4, 18)).astype(np.int32)
+    g1, d1 = sampler.generate(params, cfg, prompts, max_new_tokens=8)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
+    gs, ds = [], []
+    for steps in (3, 3, 2):
+        state, g, d = sampler.decode_segment(params, cfg, state, steps)
+        gs.append(np.asarray(g))
+        ds.append(np.asarray(d))
+    np.testing.assert_array_equal(np.concatenate(gs, axis=1), g1)
+    np.testing.assert_array_equal(np.concatenate(ds, axis=1), d1)
+    assert int(state.positions[0]) == 18 + 8 and state.used == 18 + 8
+
+
+def test_decode_segments_match_one_shot_temperature(tiny_trained):
+    """The sampling key is carried across segments — chunking must not
+    change the stochastic stream."""
+    cfg, params, _ = tiny_trained
+    prompts = np.random.default_rng(3).integers(
+        3, 100, size=(3, 16)).astype(np.int32)
+    key = jax.random.PRNGKey(7)
+    g1, _ = sampler.generate(params, cfg, prompts, max_new_tokens=8,
+                             temperature=0.8, rng=key)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8,
+                                  rng=key)
+    gs = []
+    for steps in (5, 3):
+        state, g, _ = sampler.decode_segment(params, cfg, state, steps,
+                                             temperature=0.8)
+        gs.append(np.asarray(g))
+    np.testing.assert_array_equal(np.concatenate(gs, axis=1), g1)
+
+
+def test_refill_slot_between_segments(tiny_trained):
+    """A drained slot refilled with a fresh prompt decodes exactly like a
+    standalone run of that prompt, and the other rows are untouched."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(3, 100, size=(4, 18)).astype(np.int32)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
+    state, _, _ = sampler.decode_segment(params, cfg, state, 4)
+
+    new_prompt = rng.integers(3, 100, size=18).astype(np.int32)
+    state = sampler.refill_slot(params, cfg, state, 2, new_prompt)
+    assert int(state.positions[2]) == 18 and not bool(state.done[2])
+    state, g, d = sampler.decode_segment(params, cfg, state, 4)
+
+    # reference at the same batch size (a b=1 run picks a different gemm
+    # path whose accumulation differs in the last ulp): token stream must
+    # be bit-exact, decision logits to f32 ulp
+    g_ref, d_ref = sampler.generate(params, cfg,
+                                    np.repeat(new_prompt[None], 4, 0),
+                                    max_new_tokens=4)
+    np.testing.assert_array_equal(np.asarray(g)[2], g_ref[0])
+    np.testing.assert_allclose(np.asarray(d)[2], d_ref[0],
+                               atol=5e-6, rtol=1e-6)
+
+    # untouched rows continue bit-identically vs a no-refill run
+    s2 = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
+    s2, _, _ = sampler.decode_segment(params, cfg, s2, 4)
+    s2, g2, _ = sampler.decode_segment(params, cfg, s2, 4)
+    np.testing.assert_array_equal(
+        np.asarray(g)[[0, 1, 3]], np.asarray(g2)[[0, 1, 3]])
+
+
+def test_refill_and_segment_guards(tiny_trained):
+    cfg, params, _ = tiny_trained
+    prompts = np.ones((2, 10), np.int32)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=4)
+    with pytest.raises(ValueError, match="out of range"):
+        sampler.refill_slot(params, cfg, state, 5, [1] * 8)
+    with pytest.raises(ValueError, match="no decode room"):
+        sampler.refill_slot(params, cfg, state, 0, [1] * 14)
+    with pytest.raises(ValueError, match="overruns the cache"):
+        sampler.decode_segment(params, cfg, state, 5)
+    with pytest.raises(ValueError, match="positive"):
+        sampler.decode_segment(params, cfg, state, 0)
+
+
+def test_generate_requires_rng_for_stochastic_decoding(tiny_trained):
+    """temperature>0 without an explicit key must raise: the old
+    PRNGKey(0) fallback sampled the identical stream on every call."""
+    cfg, params, _ = tiny_trained
+    prompts = np.ones((1, 8), np.int32)
+    with pytest.raises(ValueError, match="rng"):
+        sampler.generate(params, cfg, prompts, max_new_tokens=2,
+                         temperature=0.7)
+    # greedy keeps its deterministic no-key default
+    g1, _ = sampler.generate(params, cfg, prompts, max_new_tokens=2)
+    g2, _ = sampler.generate(params, cfg, prompts, max_new_tokens=2)
+    np.testing.assert_array_equal(g1, g2)
+
+
+def test_estimator_batch_requires_rng_for_stochastic(tiny_trained):
+    cfg, params, _ = tiny_trained
+    est = ReasoningEstimator(cfg, params, max_new_tokens=4)
+    prompts = [[5] * 12, [6] * 12]
+    with pytest.raises(ValueError, match="rng"):
+        est.predict_batch(prompts, temperature=0.9)
+    out = est.predict_batch(prompts, temperature=0.9,
+                            rng=jax.random.PRNGKey(3))
+    assert len(out) == 2
+
+
+def test_dispatch_batch_empty_returns_empty_parse(tiny_trained):
+    cfg, params, _ = tiny_trained
+    est = ReasoningEstimator(cfg, params, max_new_tokens=4)
+    handle = est.dispatch_batch([])
+    assert handle.is_ready()
+    assert len(handle.parse()) == 0        # not a concatenate crash
+
+
+def test_ragged_prompt_lens_rejected_for_ssm_backbone():
+    """SSM/conv prefill state consumes right-pad tokens (no per-row
+    masking), so sub-bucket lengths must fail loudly, not corrupt."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = np.ones((2, 10), np.int32)
+    with pytest.raises(ValueError, match="attention-only"):
+        sampler.prefill_state(params, cfg, prompts, max_new_tokens=2,
+                              prompt_lens=[6, 10])
+    # full-length rows carry no pad into the state: still allowed
+    sampler.prefill_state(params, cfg, prompts, max_new_tokens=2,
+                          prompt_lens=[10, 10])
+
+
+# ---------------------------------------------------------------------------
+# ServeRuntime: FIFO parse order, capacity, sync/overlap paths
+# ---------------------------------------------------------------------------
+class _Handle:
+    def __init__(self, name, ready, log):
+        self.name = name
+        self._ready = ready
+        self.log = log
+
+    def is_ready(self):
+        return self._ready
+
+    def parse(self):
+        self.log.append(("parse", self.name))
+        return self.name
+
+
+def _mb(name):
+    return Microbatch(np.zeros((1, 4), np.int32), [name],
+                      np.full((1,), 4, np.int32), (1, 4))
+
+
+def test_serve_runtime_fifo_and_capacity():
+    log, parsed = [], []
+
+    def dispatch(mb):
+        log.append(("dispatch", mb.tags[0]))
+        return _Handle(mb.tags[0], ready=False, log=log)
+
+    rt = ServeRuntime(dispatch, on_parsed=lambda mb, r: parsed.append(r),
+                      max_pending=1)
+    rt.dispatch([_mb("a")])
+    assert log == [("dispatch", "a")] and len(rt) == 1
+    rt.dispatch([_mb("b")])            # capacity: parse a BEFORE launching b
+    assert log == [("dispatch", "a"), ("parse", "a"), ("dispatch", "b")]
+    assert parsed == ["a"] and len(rt) == 1
+    rt.finish()
+    assert parsed == ["a", "b"] and len(rt) == 0
+    assert rt.stats.dispatched == 2 and rt.stats.parsed == 2
+
+
+def test_serve_runtime_sync_mode_parses_immediately():
+    log, parsed = [], []
+    rt = ServeRuntime(
+        lambda mb: _Handle(mb.tags[0], ready=True, log=log),
+        on_parsed=lambda mb, r: parsed.append(r), max_pending=0)
+    rt.dispatch([_mb("a"), _mb("b")])
+    assert parsed == ["a", "b"] and len(rt) == 0
+
+
+def test_serve_runtime_poll_parses_only_ready():
+    log, parsed = [], []
+    handles = {}
+
+    def dispatch(mb):
+        h = _Handle(mb.tags[0], ready=False, log=log)
+        handles[mb.tags[0]] = h
+        return h
+
+    rt = ServeRuntime(dispatch, on_parsed=lambda mb, r: parsed.append(r),
+                      max_pending=2)
+    rt.dispatch([_mb("a"), _mb("b")])
+    assert rt.poll() == 0 and parsed == []
+    handles["b"]._ready = True         # b done, but a (older) still running:
+    assert rt.poll() == 0              # FIFO order is never violated
+    handles["a"]._ready = True
+    assert rt.poll() == 2 and parsed == ["a", "b"]
+    # duck-typed results (no is_ready/parse) degrade to the sync path
+    rt2 = ServeRuntime(lambda mb: mb.tags[0],
+                       on_parsed=lambda mb, r: parsed.append(r),
+                       max_pending=0)
+    rt2.dispatch([_mb("c")])
+    assert parsed[-1] == "c"
+
+
+# ---------------------------------------------------------------------------
+# Engine: overlapped stream parity + ragged length-grid parity
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def real_engine(tiny_trained, world, retriever, library):
+    cfg, params, _ = tiny_trained
+    data = build_scope_data(world, n_queries=160, seed=9)
+
+    def mk():
+        return ScopeEngine.build(EngineConfig(
+            estimator=ReasoningEstimator(cfg, params, max_new_tokens=6),
+            retriever=retriever, library=library,
+            models_meta={m: world.models[m] for m in data.models}))
+    return mk, data
+
+
+def test_stream_overlap_modes_bit_identical(real_engine):
+    """Overlap changes when the host blocks, never what it observes: the
+    double-buffered and synchronous streams see the same microbatches and
+    must agree bit-for-bit; both match batch ``predict`` decisions (same
+    tokens; confidences to f32 ulp — the one-big-batch shape reduces in a
+    different order on this backend)."""
+    mk, data = real_engine
+    queries = [data.queries[int(q)] for q in data.test_qids[:6]]
+    ticks = [queries[:2], queries[2:3], queries[3:6]]
+    ref = mk().predict(RouteRequest(queries))
+
+    got = {}
+    for overlap in (True, False):
+        sched = MicrobatchScheduler(BucketConfig(batch_sizes=(1, 2, 4, 8)))
+        pools = list(mk().predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            overlap=overlap))
+        got[overlap] = (np.concatenate([p.p_hat for p in pools]),
+                        np.concatenate([p.y_hat for p in pools]))
+    np.testing.assert_array_equal(got[True][0], got[False][0])
+    np.testing.assert_array_equal(got[True][1], got[False][1])
+    np.testing.assert_array_equal(got[True][1], ref.y_hat)
+    np.testing.assert_allclose(got[True][0], ref.p_hat,
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_stream_length_grid_matches_exact_fit(real_engine):
+    """Ragged lengths under a configured prompt_lens grid: sub-bucket rows
+    ride padded buckets yet the decisions match the unpadded exact-fit
+    path — token-derived fields exactly, confidence to f32 ulp."""
+    mk, data = real_engine
+    queries = [data.queries[int(q)] for q in data.test_qids[:5]]
+    ticks = [queries[:2], queries[2:5]]
+    ref = mk().predict(RouteRequest(queries))
+
+    prompt_len = len(mk()._prepare(RouteRequest(queries[:1]), False)
+                     .prompts[0])
+    grid = BucketConfig(batch_sizes=(1, 2, 4, 8),
+                        prompt_lens=(prompt_len + 7,))
+    sched = MicrobatchScheduler(grid)
+    pools = list(mk().predict_stream((RouteRequest(t) for t in ticks),
+                                     scheduler=sched))
+    assert sched.stats.pad_tokens > 0          # the grid really padded
+    y = np.concatenate([p.y_hat for p in pools])
+    lh = np.concatenate([p.len_hat for p in pools])
+    wf = np.concatenate([p.well_formed for p in pools])
+    cost = np.concatenate([p.cost_hat for p in pools])
+    p_hat = np.concatenate([p.p_hat for p in pools])
+    np.testing.assert_array_equal(y, ref.y_hat)
+    np.testing.assert_array_equal(lh, ref.len_hat)
+    np.testing.assert_array_equal(wf, ref.well_formed)
+    np.testing.assert_array_equal(cost, ref.cost_hat)   # true prompt lens
+    np.testing.assert_allclose(p_hat, ref.p_hat, atol=1e-6, rtol=1e-6)
+
+
+def test_stream_deadline_flush_bounds_queue_age(real_engine):
+    """A fake clock drives the deadline: the lone first-tick query ships in
+    a partially-filled bucket once max_queue_age expires instead of waiting
+    for the stream to end."""
+    mk, data = real_engine
+    queries = [data.queries[int(q)] for q in data.test_qids[:4]]
+    now = [0.0]
+    sched = MicrobatchScheduler(BucketConfig(batch_sizes=(64,)),
+                                max_queue_age=1.0, clock=lambda: now[0])
+
+    def ticks():
+        yield RouteRequest(queries[:1])
+        now[0] += 2.0                   # deadline expires between ticks
+        yield RouteRequest(queries[1:])
+
+    engine = mk()
+    pools = list(engine.predict_stream(ticks(), scheduler=sched))
+    assert sched.stats.deadline_flushes > 0
+    assert sched.stats.partial_microbatches > 0
+    ref = mk().predict(RouteRequest(queries))
+    np.testing.assert_array_equal(
+        np.concatenate([p.y_hat for p in pools]), ref.y_hat)
+    np.testing.assert_allclose(
+        np.concatenate([p.p_hat for p in pools]), ref.p_hat,
+        atol=1e-6, rtol=1e-6)
