@@ -1,0 +1,16 @@
+"""Shared benchmark output helper."""
+import json
+import os
+
+
+def write_bench_json(bench_path: str, payload: dict) -> None:
+    """Write a bench payload to ``benchmarks/BENCH_*.json`` and mirror it
+    to the repo-root ``BENCH_*.json`` — the tracked perf-trajectory
+    snapshot."""
+    root = os.path.join(os.path.dirname(bench_path), "..",
+                        os.path.basename(bench_path))
+    for path in (bench_path, root):
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {path}")

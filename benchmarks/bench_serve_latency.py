@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import functools
-import json
 import os
 import time
 from typing import Callable, Dict, List, Tuple
@@ -176,12 +175,10 @@ def bench_predict_route(engine, queries, *, alpha: float = 0.6) -> List[Dict]:
 # Drivers
 # ---------------------------------------------------------------------------
 def _emit(rows: List[Dict], *, smoke: bool) -> None:
-    payload = {"bench": "serve_latency", "smoke": smoke,
-               "unix_time": int(time.time()), "rows": rows}
-    with open(BENCH_PATH, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {BENCH_PATH}")
+    from benchmarks._io import write_bench_json
+    write_bench_json(BENCH_PATH, {
+        "bench": "serve_latency", "smoke": smoke,
+        "unix_time": int(time.time()), "rows": rows})
 
 
 def _as_csv_rows(rows: List[Dict]) -> List[Tuple[str, float, str]]:

@@ -16,6 +16,18 @@ Sections:
                     bucket with ``max_queue_age`` set: partially-filled
                     buckets ship when the latency budget expires, keeping
                     queue age bounded (asserted in --smoke)
+  engine_refill   — segment-chunked continuous batching
+                    (``predict_stream(refill=True)``): decode runs in
+                    fixed-size scan segments and drained-at-EOS rows admit
+                    the next queued prompt mid-batch instead of idling
+                    until the microbatch retires; measured against
+                    ``engine_whole_retire`` (the same stream with
+                    ``refill=False``) on a ragged-generation-length
+                    workload.  Decode-slot occupancy + refill counters
+                    come straight from ``SchedulerStats``; --smoke asserts
+                    the refill stream beats whole-retire q/s at higher
+                    occupancy with zero recompiles after warmup, and that
+                    both streams make identical routing decisions
   stream_naive    — ``predict`` called per ragged tick (the pre-scheduler
                     behavior): every distinct tick size compiles a fresh
                     (batch, len) executable
@@ -36,7 +48,6 @@ Rows go to stdout CSV (via ``benchmarks.run``) and to
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 from typing import Dict, List, Tuple
@@ -239,6 +250,119 @@ def bench_deadline(engine, queries, *, full_bucket: int = 16,
                                     for k, v in ages.items()}}}]
 
 
+def bench_refill(engine, queries, *, bucket_sizes, segment_len: int = 4,
+                 repeats: int = 3, max_tick: int = 3,
+                 smoke: bool = False) -> List[Dict]:
+    """Segment-chunked slot refill vs whole-retire on a ragged workload.
+
+    ``engine`` must carry an EOS-emitting (trained) estimator: rows then
+    drain at different decode steps, which is the regime where mid-batch
+    refill pays — ``refill=True`` admits the oldest queued prompt into a
+    drained slot between scan segments, while ``refill=False`` idles the
+    slot until the whole microbatch retires.  Occupancy and refill
+    counters are read straight from ``SchedulerStats`` (both modes account
+    ``slot_steps_active/total`` at token granularity, so the comparison is
+    one counter pair, not a recompute).  Routing-decision identity between
+    the two modes is checked on every field the router consumes:
+    token-derived fields bit-equal, confidences to f32 ulp, and the final
+    ``FixedAlphaPolicy`` choices equal.
+    """
+    from repro.api import FixedAlphaPolicy, RouteRequest
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+    from repro.serving.scheduler import decode_compile_counts
+
+    seg = max(1, min(segment_len, int(engine.estimator.max_new_tokens)))
+    ticks = _as_ticks(queries, _tick_sizes(len(queries), max_tick=max_tick))
+    cfg = BucketConfig(batch_sizes=bucket_sizes)
+
+    def stream(refill):
+        sched = MicrobatchScheduler(cfg)
+        t0 = time.perf_counter()
+        pools = list(engine.predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            use_cache=False, refill=refill, segment_len=seg))
+        return pools, time.perf_counter() - t0, sched
+
+    stream(False)                   # warm both modes' executables
+    stream(True)
+    warmed = decode_compile_counts()
+
+    # interleaved pairs (off, on) so wall-clock drift on a shared machine
+    # hits both modes alike; best-of per mode
+    t_off = t_on = None
+    off_pools = on_pools = s_off = s_on = None
+    for _ in range(repeats):
+        off_pools, dt, s_off = stream(False)
+        t_off = dt if t_off is None else min(t_off, dt)
+        on_pools, dt, s_on = stream(True)
+        t_on = dt if t_on is None else min(t_on, dt)
+    recompiles = _compile_delta(warmed, decode_compile_counts())
+    qps_off = len(queries) / t_off
+    qps_on = len(queries) / t_on
+
+    def cat(pools, field):
+        return np.concatenate([np.asarray(getattr(p, field)).reshape(-1)
+                               for p in pools])
+
+    token_identical = all(
+        np.array_equal(cat(on_pools, f), cat(off_pools, f))
+        for f in ("y_hat", "len_hat", "well_formed", "cost_hat",
+                  "pred_overhead"))
+    conf_close = bool(np.allclose(cat(on_pools, "p_hat"),
+                                  cat(off_pools, "p_hat"),
+                                  atol=1e-6, rtol=1e-6))
+    policy = FixedAlphaPolicy(0.6)
+    choices_on = np.concatenate(
+        [np.asarray(policy.decide(p, engine).choices) for p in on_pools])
+    choices_off = np.concatenate(
+        [np.asarray(policy.decide(p, engine).choices) for p in off_pools])
+    identical_decisions = bool(np.array_equal(choices_on, choices_off))
+
+    st_on, st_off = s_on.stats, s_off.stats
+    if smoke:
+        assert recompiles == 0, (
+            f"refill stream recompiled {recompiles} executables after "
+            f"warmup — segments and refill prefills must reuse the warmed "
+            f"bucket shapes")
+        assert token_identical, (
+            "refill-on vs refill-off streams disagree on token-derived "
+            "prediction fields")
+        assert conf_close, "refill-on vs refill-off confidences diverge"
+        assert identical_decisions, (
+            "refill-on vs refill-off streams routed differently")
+        assert st_on.slots_refilled > 0, (
+            "no slot was refilled: the ragged workload must drain rows "
+            "at EOS mid-batch")
+        assert st_on.slot_occupancy > st_off.slot_occupancy, (
+            f"refill occupancy {st_on.slot_occupancy:.3f} does not beat "
+            f"whole-retire {st_off.slot_occupancy:.3f}")
+        assert st_on.slot_steps_total < st_off.slot_steps_total, (
+            f"refill ran {st_on.slot_steps_total} decode slot-steps vs "
+            f"whole-retire's {st_off.slot_steps_total} for identical "
+            "output — the deterministic work saving disappeared")
+        assert qps_on > qps_off, (
+            f"refill q/s {qps_on:.2f} does not beat whole-retire "
+            f"{qps_off:.2f} on the ragged workload")
+    return [
+        {"name": "serve_throughput/engine_refill", "qps": qps_on,
+         "detail": {"queries": len(queries), "ticks": len(ticks),
+                    "segment_len": seg,
+                    "slot_occupancy": round(st_on.slot_occupancy, 4),
+                    "slots_refilled": st_on.slots_refilled,
+                    "refill_steps_saved": st_on.refill_steps_saved,
+                    "slot_steps": st_on.slot_steps_total,
+                    "recompiles_after_warmup": recompiles,
+                    "speedup_vs_whole_retire":
+                        round(qps_on / max(qps_off, 1e-9), 3),
+                    "identical_decisions": identical_decisions}},
+        {"name": "serve_throughput/engine_whole_retire", "qps": qps_off,
+         "detail": {"queries": len(queries),
+                    "slot_occupancy": round(st_off.slot_occupancy, 4),
+                    "slot_steps": st_off.slot_steps_total,
+                    "identical_decisions": identical_decisions}},
+    ]
+
+
 def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
     """Bucketed stream with the estimator placed on the serve mesh."""
     import jax
@@ -273,13 +397,12 @@ def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
 # ---------------------------------------------------------------------------
 def _emit(rows: List[Dict], *, smoke: bool) -> None:
     import jax
-    payload = {"bench": "serve_throughput", "smoke": smoke,
-               "unix_time": int(time.time()),
-               "devices": jax.local_device_count(), "rows": rows}
-    with open(BENCH_PATH, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {BENCH_PATH}")
+
+    from benchmarks._io import write_bench_json
+    write_bench_json(BENCH_PATH, {
+        "bench": "serve_throughput", "smoke": smoke,
+        "unix_time": int(time.time()),
+        "devices": jax.local_device_count(), "rows": rows})
 
 
 def _as_csv_rows(rows: List[Dict]) -> List[Tuple[str, float, str]]:
@@ -301,24 +424,20 @@ def run(bundle) -> List[Tuple[str, float, str]]:
                for q in bundle.data.test_qids[:48]]
     rows = bench_stream(engine, queries, bucket_sizes=BUCKETS)
     rows += bench_deadline(engine, queries[:24])
+    rows += bench_refill(bundle.engine(bundle.seen), queries,
+                         bucket_sizes=BUCKETS)
     rows += bench_sharded(bundle.engine(bundle.seen), queries,
                           bucket_sizes=BUCKETS)
     _emit(rows, smoke=False)
     return _as_csv_rows(rows)
 
 
-def _smoke_setup():
-    """Tiny untrained world — shapes and scheduling only, CI-sized."""
-    import jax
-
-    from repro.api import EngineConfig, ScopeEngine
-    from repro.configs.scope_estimator import TINY
-    from repro.core.estimator import ReasoningEstimator
+def _smoke_world():
+    """Tiny CI-sized world shared by the smoke engines."""
     from repro.core.fingerprint import FingerprintLibrary, build_anchor_set
     from repro.core.retrieval import AnchorRetriever
     from repro.data.datasets import build_scope_data, stratified_anchors
     from repro.data.worldsim import World
-    from repro.models import model as M
 
     world = World(seed=0)
     data = build_scope_data(world, n_queries=240, seed=0)
@@ -326,12 +445,60 @@ def _smoke_setup():
     library = FingerprintLibrary(aset)
     for m in data.models:
         library.onboard(world, m, seed=3)
-    params = M.init_params(jax.random.PRNGKey(0), TINY)
-    engine = ScopeEngine.build(EngineConfig(
-        estimator=ReasoningEstimator(TINY, params),
-        retriever=AnchorRetriever(aset), library=library,
+    return world, data, library, AnchorRetriever(aset)
+
+
+def _smoke_engine(world, data, library, retriever, params,
+                  max_new_tokens: int = 12):
+    from repro.api import EngineConfig, ScopeEngine
+    from repro.configs.scope_estimator import TINY
+    from repro.core.estimator import ReasoningEstimator
+
+    return ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(TINY, params,
+                                     max_new_tokens=max_new_tokens),
+        retriever=retriever, library=library,
         models_meta={m: world.models[m] for m in data.models}))
+
+
+def _smoke_setup():
+    """Tiny untrained world — shapes and scheduling only, CI-sized."""
+    import jax
+
+    from repro.configs.scope_estimator import TINY
+    from repro.models import model as M
+
+    world, data, library, retriever = _smoke_world()
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    engine = _smoke_engine(world, data, library, retriever, params)
     queries = [data.queries[int(q)] for q in data.test_qids[:10]]
+    return engine, queries
+
+
+def _smoke_trained_setup():
+    """Tiny SFT-bootstrapped engine for the refill row.
+
+    A briefly-trained estimator emits EOS at genuinely varying decode
+    steps well short of the ``max_new_tokens`` budget (the budget is sized
+    for worst-case rationale length, typical generations are much
+    shorter), which is the ragged-generation-length regime where mid-batch
+    slot refill pays; an untrained one never emits EOS, so every row would
+    retire at the same boundary and the refill row would measure nothing.
+    """
+    import jax
+
+    from repro.configs.scope_estimator import TINY
+    from repro.models import model as M
+    from repro.training.sft import build_sft_dataset, train_sft
+
+    world, data, library, retriever = _smoke_world()
+    ds = build_sft_dataset(data, library, retriever, cot=True,
+                           max_examples=800, seed=0)
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    params, _ = train_sft(params, TINY, ds, steps=50, batch_size=32)
+    engine = _smoke_engine(world, data, library, retriever, params,
+                           max_new_tokens=16)
+    queries = [data.queries[int(q)] for q in data.test_qids[:16]]
     return engine, queries
 
 
@@ -356,11 +523,16 @@ def main(argv=None) -> int:
                             repeats=args.repeats or 2, max_tick=3,
                             smoke=True)
         rows += bench_deadline(engine, queries[:6], smoke=True)
+        trained, tqueries = _smoke_trained_setup()
+        rows += bench_refill(trained, tqueries, bucket_sizes=(1, 2, 4, 8),
+                             repeats=args.repeats or 2, smoke=True)
         rows += bench_sharded(engine, queries, bucket_sizes=(1, 2, 4, 8))
         _emit(rows, smoke=True)
         print("# smoke asserts passed: zero recompiles after warmup, "
               "overlap+sync streams bit-identical to batch predict, "
-              "deadline flush ships partial buckets")
+              "deadline flush ships partial buckets, refill stream beats "
+              "whole-retire q/s at higher slot occupancy with identical "
+              "routing decisions")
     else:
         from benchmarks.common import get_bundle
         rows_csv = run(get_bundle())

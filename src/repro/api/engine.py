@@ -311,11 +311,57 @@ class ScopeEngine:
             return dispatch(mb.tokens, prompt_lens=mb.lengths, rng=rng)
         return self._run_estimator(mb.tokens, rng)
 
+    def _stream_fill(self, inflight, use_cache):
+        """Parse consumer shared by the stream paths: scatter one parse
+        group's rows into every waiting request (duplicates ride the first
+        waiter's generation at zero extra tokens) and write the cache per
+        group — the moment generations parse, before the owning request
+        drains."""
+        def fill(tags, batch):
+            keys, entries = [], []
+            for row, key in enumerate(tags):
+                waiters = inflight.pop(key)
+                for j, (entry, miss_i) in enumerate(waiters):
+                    entry.fill(miss_i, batch, row, shared=j > 0)
+                if use_cache:
+                    owner, miss_i = waiters[0]          # true token spend
+                    keys.append(key)
+                    entries.append(CachedPrediction(
+                        y_hat=int(batch.y_hat[row]),
+                        len_hat=float(batch.len_hat[row]),
+                        well_formed=bool(batch.well_formed[row]),
+                        p_conf=float(batch.p_conf[row]),
+                        pred_tokens=int(batch.pred_tokens[row]),
+                        prompt_tokens=len(owner.state.prompts[miss_i])))
+            if keys:
+                self.cache.put_many(keys, entries)
+        return fill
+
+    def _submit_misses(self, st, entry, sched, inflight, use_cache,
+                       serial: int) -> int:
+        """Queue a request's missing (query, model) prompts; a pair whose
+        key duplicates one still in flight shares that generation instead
+        of being scheduled again."""
+        for miss_i, prompt in enumerate(st.prompts):
+            qi, mi = st.missing[miss_i]
+            key = (st.qkeys[qi], st.models[mi], self.config.estimator_version)
+            if use_cache and key in inflight:
+                inflight[key].append((entry, miss_i))
+                continue
+            if not use_cache:           # uncached: never share work
+                key, serial = ("uncached", serial), serial + 1
+            inflight[key] = [(entry, miss_i)]
+            sched.submit(key, prompt)
+        return serial
+
     def predict_stream(self, requests: Iterable[RouteRequest], *,
                        scheduler: Optional["MicrobatchScheduler"] = None,
                        rng: Optional[jax.Array] = None,
                        use_cache: Optional[bool] = None,
-                       overlap: bool = True
+                       overlap: bool = True,
+                       refill: Optional[bool] = None,
+                       segment_len: Optional[int] = None,
+                       max_pending: Optional[int] = None
                        ) -> Iterator[PoolPredictions]:
         """Drain an iterator of requests through the continuous-batching
         serve runtime.
@@ -355,41 +401,75 @@ class ScopeEngine:
         parsed — so later requests hit entries from microbatches parsed
         before they arrived, even while the owning request is still
         FIFO-blocked from emitting.
+
+        ``max_pending`` sets the pipelining depth of the runtime (how many
+        dispatched microbatches may be in flight before the oldest is
+        block-parsed): ``None`` defaults to ``EngineConfig.max_pending``,
+        then to 1 when ``overlap`` else 0.  Depths > 1 interleave batch
+        N+1's prefill with batch N's decode — worth measuring on real
+        accelerators; on a single shared CPU device two in-flight
+        executables contend.
+
+        ``refill=True`` (default ``EngineConfig.refill``) switches to
+        **segment-chunked continuous batching**: decode runs in
+        ``segment_len``-step scan segments over a fixed slot batch, and
+        between segments rows that drained at EOS (or exhausted their
+        budget) are parsed from their own window of the decode buffer and
+        their slot refilled with the oldest queued prompt
+        (``scheduler.pop_one``) — a row that finishes early admits the
+        next request instead of idling until the batch retires.  All
+        cache/dedup semantics above are preserved; under greedy decoding
+        refill-on and refill-off streams make identical routing decisions
+        (token-derived fields bit-equal, confidences to f32 ulp).
+
+        Refill-mode latency caveat: while a slot state is live, queued
+        prompts are admitted at segment cadence via ``pop_one`` — usually
+        *sooner* than a deadline flush — but the scheduler's
+        ``max_queue_age``/``min_fill`` knobs and full-bucket emission are
+        only consulted between states, so a prompt that cannot ride the
+        live state (wider than its slots, or all slots busy) waits up to
+        the remaining refill horizon before a new bucket opens (see the
+        ROADMAP's refill-aware deadline scheduling item).
         """
         from repro.serving.runtime import ServeRuntime
         from repro.serving.scheduler import MicrobatchScheduler
+        cfg = self.config
         if use_cache is None:
-            use_cache = self.config.enable_cache
+            use_cache = cfg.enable_cache
+        if refill is None:
+            refill = cfg.refill
         sched = scheduler if scheduler is not None else MicrobatchScheduler()
+        if refill:
+            yield from self._predict_stream_refill(
+                requests, sched, rng=rng, use_cache=use_cache,
+                segment_len=(cfg.segment_len if segment_len is None
+                             else int(segment_len)))
+            return
+        if max_pending is None:
+            max_pending = cfg.max_pending
+        if max_pending is None:
+            max_pending = 1 if overlap else 0
         pending: Deque[_StreamEntry] = deque()
         # (query_key, model, version) -> waiters; the first waiter's prompt
         # is the one scheduled, later duplicates ride along
         inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
-        version = self.config.estimator_version
+        fill = self._stream_fill(inflight, use_cache)
         serial = 0                          # unique keys for uncached pairs
+        # decode-slot occupancy: whole-retire runs every bucket the full
+        # budget; pad rows and post-EOS steps idle (duck-typed estimators
+        # have no token budget — counters stay zero)
+        budget = int(getattr(self.estimator, "max_new_tokens", 0) or 0)
 
         def on_parsed(mb, batch):
-            keys, entries = [], []
-            for row, key in enumerate(mb.tags):
-                waiters = inflight.pop(key)
-                for j, (entry, miss_i) in enumerate(waiters):
-                    entry.fill(miss_i, batch, row, shared=j > 0)
-                if use_cache:
-                    owner, miss_i = waiters[0]          # true token spend
-                    keys.append(key)
-                    entries.append(CachedPrediction(
-                        y_hat=int(batch.y_hat[row]),
-                        len_hat=float(batch.len_hat[row]),
-                        well_formed=bool(batch.well_formed[row]),
-                        p_conf=float(batch.p_conf[row]),
-                        pred_tokens=int(batch.pred_tokens[row]),
-                        prompt_tokens=len(owner.state.prompts[miss_i])))
-            if keys:
-                self.cache.put_many(keys, entries)
+            fill(mb.tags, batch)
+            if budget:
+                sched.stats.slot_steps_total += mb.tokens.shape[0] * budget
+                sched.stats.slot_steps_active += int(
+                    batch.pred_tokens[: mb.n_real].sum())
 
         runtime = ServeRuntime(
             lambda mb: self._dispatch_microbatch(mb, rng),
-            on_parsed=on_parsed, max_pending=1 if overlap else 0)
+            on_parsed=on_parsed, max_pending=max_pending)
 
         def drain_completed():
             while pending and pending[0].remaining == 0:
@@ -401,21 +481,61 @@ class ScopeEngine:
             st = self._prepare(request, use_cache)
             entry = _StreamEntry(st)
             pending.append(entry)
-            for miss_i, prompt in enumerate(st.prompts):
-                qi, mi = st.missing[miss_i]
-                key = (st.qkeys[qi], st.models[mi], version)
-                if use_cache and key in inflight:
-                    inflight[key].append((entry, miss_i))
-                    continue
-                if not use_cache:           # uncached: never share work
-                    key, serial = ("uncached", serial), serial + 1
-                inflight[key] = [(entry, miss_i)]
-                sched.submit(key, prompt)
+            serial = self._submit_misses(st, entry, sched, inflight,
+                                         use_cache, serial)
             runtime.dispatch(sched.tick())
             runtime.poll()                  # free parses: device already done
             yield from drain_completed()
         runtime.dispatch(sched.flush())
         runtime.finish()
+        yield from drain_completed()
+        assert not pending, "stream ended with unresolved requests"
+
+    def _predict_stream_refill(self, requests: Iterable[RouteRequest],
+                               sched, *, rng, use_cache: bool,
+                               segment_len: int
+                               ) -> Iterator[PoolPredictions]:
+        """Segment-chunked continuous batching (see ``predict_stream``).
+
+        One decode state is live at a time (device work is serialized
+        anyway); whole microbatches open a state, and between segments
+        drained slots pull single requests off the scheduler queue.  One
+        segment advances per request arrival, so admission interleaves
+        with traffic; at stream end the loop drains until every slot
+        retires.  A queued prompt wider than the live state's slots waits
+        for that state to retire and then opens its own.
+        """
+        from repro.serving.runtime import SlotRuntime
+        est = self.estimator
+        open_slots = getattr(est, "open_slots", None)
+        if open_slots is None:
+            raise TypeError(
+                "refill streaming requires an estimator with open_slots() "
+                f"(ReasoningEstimator); {type(est).__name__} lacks it — "
+                "stream with refill=False instead")
+        pending: Deque[_StreamEntry] = deque()
+        inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
+        runtime = SlotRuntime(open_slots, sched, segment_len=segment_len,
+                              on_parsed=self._stream_fill(inflight,
+                                                          use_cache),
+                              horizon=self.config.refill_horizon, rng=rng)
+        serial = 0
+
+        def drain_completed():
+            while pending and pending[0].remaining == 0:
+                entry = pending.popleft()
+                yield self._finalize(entry.state, entry.parsed(),
+                                     put_cache=False)
+
+        for request in requests:
+            st = self._prepare(request, use_cache)
+            entry = _StreamEntry(st)
+            pending.append(entry)
+            serial = self._submit_misses(st, entry, sched, inflight,
+                                         use_cache, serial)
+            runtime.pump(final=False)
+            yield from drain_completed()
+        runtime.pump(final=True)
         yield from drain_completed()
         assert not pending, "stream ended with unresolved requests"
 
@@ -425,14 +545,18 @@ class ScopeEngine:
                      scheduler: Optional["MicrobatchScheduler"] = None,
                      rng: Optional[jax.Array] = None,
                      use_cache: Optional[bool] = None,
-                     overlap: bool = True
+                     overlap: bool = True,
+                     refill: Optional[bool] = None,
+                     segment_len: Optional[int] = None,
+                     max_pending: Optional[int] = None
                      ) -> Iterator[BatchReport]:
         """Streaming ``serve``: one executed ``BatchReport`` per qid tick.
 
         ``qid_stream`` yields batches of query ids (one traffic tick each);
-        prediction flows through ``predict_stream``'s bucketed scheduler,
-        then each tick is decided by ``policy`` and executed against the
-        world exactly like ``serve``.
+        prediction flows through ``predict_stream``'s bucketed scheduler
+        (including its ``refill``/``segment_len``/``max_pending`` runtime
+        knobs), then each tick is decided by ``policy`` and executed
+        against the world exactly like ``serve``.
         """
         pool_models = (list(models) if models is not None
                        else self.registry.routable())
@@ -447,7 +571,9 @@ class ScopeEngine:
 
         for pool in self.predict_stream(as_requests(), scheduler=scheduler,
                                         rng=rng, use_cache=use_cache,
-                                        overlap=overlap):
+                                        overlap=overlap, refill=refill,
+                                        segment_len=segment_len,
+                                        max_pending=max_pending):
             qids = ticks.popleft()
             if not qids:
                 yield BatchReport.empty(policy.name, pool_models)

@@ -47,6 +47,14 @@ class EngineConfig:
     estimator_version: str = "v0"
     enable_cache: bool = True
     cache_capacity: Optional[int] = None
+    # streaming serve runtime (predict_stream / serve_stream)
+    refill: bool = False            # segment-chunked mid-batch slot refill
+    segment_len: int = 4            # decode steps per scan segment (refill)
+    refill_horizon: Optional[int] = None    # decode-slot capacity in steps
+    #                                         (None = 4x max_new_tokens)
+    max_pending: Optional[int] = None       # in-flight microbatches in the
+    #                                         ServeRuntime pipeline (None =
+    #                                         1 if overlap else 0)
 
 
 @dataclasses.dataclass

@@ -68,12 +68,22 @@ class ParsedBatch:
         return cls.from_predictions([])
 
 
-def parse_generations(gen: np.ndarray, dec_logits: np.ndarray) -> ParsedBatch:
+def parse_generations(gen: np.ndarray, dec_logits: np.ndarray, *,
+                      starts: Optional[np.ndarray] = None,
+                      lens: Optional[np.ndarray] = None) -> ParsedBatch:
     """Batched parse of (N, T) generations + (N, T, 2) YES/NO logit pairs.
 
     Vectorizes ``_parse_one`` (decision-token location, confidence, format
     gate, rationale length) over the whole generation matrix — no per-sample
     or per-token Python loops.
+
+    ``starts``/``lens`` (N,) select a per-row **window** of the buffer: row
+    i's generation is ``gen[i, starts[i] : starts[i] + lens[i]]``.  A
+    refilled decode slot's tokens start mid-buffer (at the segment boundary
+    it was admitted) and stop at its own ``max_new_tokens`` budget, so the
+    rows of one continuous-batching buffer are parsed at different offsets;
+    positions outside a row's window read as PAD with zero logits, which is
+    exactly what a standalone run of the same prompt produces past EOS.
     """
     g = np.asarray(gen)
     if g.ndim != 2:
@@ -82,6 +92,25 @@ def parse_generations(gen: np.ndarray, dec_logits: np.ndarray) -> ParsedBatch:
     if N == 0:
         return ParsedBatch.empty()
     dec_logits = np.asarray(dec_logits, np.float64)
+    if starts is not None or lens is not None:
+        starts = (np.zeros(N, int) if starts is None
+                  else np.asarray(starts, int).reshape(-1))
+        lens = (np.full(N, T, dtype=int) if lens is None
+                else np.asarray(lens, int).reshape(-1))
+        if starts.shape != (N,) or lens.shape != (N,):
+            raise ValueError(
+                f"starts/lens must be ({N},), got {starts.shape}/{lens.shape}")
+        if (starts < 0).any() or (lens < 0).any() or (starts + lens > T).any():
+            raise ValueError(
+                f"row windows must lie inside the (N, {T}) buffer")
+        W = max(int(lens.max()), 1)
+        cols_w = np.arange(W)[None, :]
+        valid = cols_w < lens[:, None]
+        idx = np.clip(starts[:, None] + cols_w, 0, T - 1)
+        rows_w = np.arange(N)[:, None]
+        g = np.where(valid, g[rows_w, idx], tok.PAD)
+        dec_logits = np.where(valid[:, :, None], dec_logits[rows_w, idx], 0.0)
+        T = W
     rows = np.arange(N)
     cols = np.arange(T)[None, :]
 
@@ -135,8 +164,13 @@ class DecodeHandle:
     ``is_ready`` polls the device buffers without blocking;``parse`` blocks
     (``np.asarray``) and runs the batched parse.  The serve runtime keeps
     one handle in flight while assembling the next microbatch on the host.
+    ``windows`` optionally carries one (start, length) pair per row of the
+    concatenated buffer — the per-row ``max_new_tokens``/``used``
+    accounting of a segment-chunked decode whose refilled rows start
+    mid-buffer.
     """
     chunks: List[tuple]             # [(gen (b, T), dec (b, T, 2)), ...]
+    windows: Optional[List[tuple]] = None   # [(start, length)] per row
 
     def is_ready(self) -> bool:
         return all(g.is_ready() and d.is_ready() for g, d in self.chunks)
@@ -146,8 +180,223 @@ class DecodeHandle:
             return ParsedBatch.empty()
         gens = [np.asarray(g) for g, _ in self.chunks]
         decs = [np.asarray(d) for _, d in self.chunks]
+        starts = lens = None
+        if self.windows is not None:
+            starts = np.asarray([w[0] for w in self.windows], int)
+            lens = np.asarray([w[1] for w in self.windows], int)
         return parse_generations(np.concatenate(gens, axis=0),
-                                 np.concatenate(decs, axis=0))
+                                 np.concatenate(decs, axis=0),
+                                 starts=starts, lens=lens)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One live request occupying a decode slot."""
+    tag: object
+    start: int              # decode-step offset of its window in the run
+    refilled: bool
+
+
+class SlotRun:
+    """One live continuous-batching decode state (the refill serve path).
+
+    Wraps a ``sampler.DecodeState`` over a fixed (b, L) bucket and drives
+    it in ``segment_len``-step scan segments: after each segment, rows that
+    drained at EOS (or exhausted the per-request ``max_new_tokens`` budget)
+    are parsed from their own window of the accumulated decode buffer and
+    their slot freed; ``admit`` prefills freshly popped prompts into the
+    free slots — one batched prefill per boundary, padded to the warmed
+    (b, L) executable shape, however many slots drain together.  The slot
+    cache is allocated ``horizon`` decode steps deep (default 4x the
+    budget, rounded up to whole segments) so a slot serves several requests
+    back-to-back before the state retires; ``can_admit`` turns False once
+    the remaining horizon cannot fit a full budget — a request is never
+    admitted into a window it could not finish, so every admitted request
+    decodes exactly the window a standalone run would.
+    """
+
+    def __init__(self, estimator: "ReasoningEstimator", tokens, *,
+                 lengths=None, tags=None, segment_len: int = 4,
+                 horizon: Optional[int] = None,
+                 rng: Optional[jax.Array] = None):
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 2:
+            raise ValueError(f"tokens must be (b, L), got {tokens.shape}")
+        b, L = tokens.shape
+        self.est = estimator
+        self.batch = b
+        self.width = L
+        self.budget = int(estimator.max_new_tokens)
+        self.segment_len = int(segment_len)
+        if not 1 <= self.segment_len <= self.budget:
+            raise ValueError(
+                f"segment_len must lie in [1, {self.budget}] "
+                f"(max_new_tokens), got {segment_len}")
+        horizon = int(horizon) if horizon else 4 * self.budget
+        horizon = max(horizon, self.budget)
+        # whole segments only: a window admitted while can_admit() holds
+        # always completes by the horizon boundary
+        self.horizon = -(-horizon // self.segment_len) * self.segment_len
+        tags = list(tags) if tags is not None else list(range(b))
+        if len(tags) > b:
+            raise ValueError(f"{len(tags)} tags for {b} slots")
+        lens = None if lengths is None else np.asarray(lengths, int)
+        # per-row true lengths only when genuinely ragged: exact-fit
+        # buckets stay on the unmasked path (SSM backbones included)
+        pl = lens if lens is not None and (lens != L).any() else None
+        self.state = sampler.prefill_state(
+            estimator.params, estimator.cfg,
+            estimator._place_batch(tokens),
+            max_new_tokens=self.horizon, prompt_lens=pl, rng=rng)
+        # rows past the real tags are free slots from the start (a
+        # partially-filled opening bucket refills instead of padding)
+        self.slots: List[Optional[_Slot]] = [
+            _Slot(tags[i], 0, False) if i < len(tags) else None
+            for i in range(b)]
+        self.steps_run = 0                  # decode steps *launched*
+        self.steps_done = 0                 # decode steps synced to host
+        # host copy of the decode buffer, written once per segment
+        self._gen = np.full((b, self.horizon), -1, np.int32)
+        self._dec = np.zeros((b, self.horizon, 2), np.float32)
+        # slot-aligned refills admitted since the last launch; fused into
+        # the next ``decode_segment(refill=...)`` executable
+        self._pending: Optional[tuple] = None
+        self._inflight: Optional[tuple] = None      # (gen, dec) futures
+        # decode-slot accounting (token granularity; folded into
+        # SchedulerStats by ``account``)
+        self.slot_steps_total = 0
+        self.slot_steps_active = 0
+        self.refill_steps = 0               # active steps on refilled rows
+
+    # -- slot bookkeeping ----------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def finished(self) -> bool:
+        return self.n_live == 0
+
+    def free_rows(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def can_admit(self) -> bool:
+        return self.steps_run + self.budget <= self.horizon
+
+    def admit(self, items: Sequence[tuple]) -> None:
+        """Refill free slots with ``items`` = [(tag, prompt, length)].
+
+        Admissions are **deferred and fused**: every refill collected at a
+        boundary rides the next ``decode_segment(refill=...)`` launch —
+        the slot-aligned prompt matrix is prefilled, merged, and decoded
+        in one executable, so a boundary costs a single launch however
+        many slots drained.  Each refilled row's window starts at the
+        current boundary (``steps_run``).
+        """
+        if not items:
+            return
+        if self._inflight is not None:
+            raise RuntimeError(
+                "cannot admit while a segment is in flight — sync() first")
+        free = self.free_rows()
+        if len(items) > len(free):
+            raise ValueError(
+                f"{len(items)} refills for {len(free)} free slots")
+        if not self.can_admit():
+            raise ValueError(
+                "remaining horizon cannot fit a full decode budget")
+        if self._pending is None:
+            self._pending = (np.zeros(self.batch, bool),
+                             np.full((self.batch, self.width), tok.PAD,
+                                     np.int32),
+                             np.ones(self.batch, np.int64))
+        mask, mat, lens = self._pending
+        for (tag, prompt, length), row in zip(items, free):
+            p = np.asarray(prompt, np.int32).reshape(-1)
+            if not 1 <= len(p) <= self.width:
+                raise ValueError(
+                    f"refill prompt of {len(p)} tokens does not fit the "
+                    f"slot width {self.width}")
+            mask[row] = True
+            mat[row] = tok.PAD
+            mat[row, : len(p)] = p
+            lens[row] = int(length) if length else len(p)
+            self.slots[row] = _Slot(tag, self.steps_run, True)
+
+    # -- decode --------------------------------------------------------
+    def launch(self) -> None:
+        """Dispatch the next decode segment without blocking, fusing any
+        pending refills into the same executable.  ``sync`` collects it;
+        launching before the host parses the previous boundary overlaps
+        host work with device decode."""
+        if self._inflight is not None:
+            raise RuntimeError("a segment is already in flight")
+        if self.steps_run + self.segment_len > self.horizon:
+            raise RuntimeError(
+                f"segment overruns the {self.horizon}-step slot horizon")
+        self.state, g, d = sampler.decode_segment(
+            self.est.params, self.est.cfg, self.state, self.segment_len,
+            refill=self._pending)
+        self._pending = None
+        self._inflight = (g, d)
+        self.steps_run += self.segment_len
+        self.slot_steps_total += self.batch * self.segment_len
+
+    def sync(self) -> List[tuple]:
+        """Block on the in-flight segment (launching one first if needed)
+        and free the slots whose rows completed at this boundary.
+
+        Returns the freed ``(row, slot)`` pairs for ``parse_completed`` —
+        the parse is split off so the serve runtime can launch the next
+        segment *before* parsing, keeping the device busy while the host
+        assembles results.
+        """
+        if self._inflight is None:
+            self.launch()
+        g, d = self._inflight
+        self._inflight = None
+        t0, t1 = self.steps_done, self.steps_done + self.segment_len
+        self._gen[:, t0:t1] = np.asarray(g)
+        self._dec[:, t0:t1] = np.asarray(d)
+        self.steps_done = t1
+        done = np.asarray(self.state.done)
+        completed = []
+        for row, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if bool(done[row]) or t1 - slot.start >= self.budget:
+                completed.append((row, slot))
+                self.slots[row] = None
+        return completed
+
+    def parse_completed(self, completed: List[tuple]):
+        """(tags, ParsedBatch) for the rows ``sync`` freed: each row's
+        generation is its own window of the decode buffer."""
+        if not completed:
+            return [], ParsedBatch.empty()
+        rows = [r for r, _ in completed]
+        starts = np.asarray([s.start for _, s in completed], int)
+        lens = np.minimum(self.budget, self.steps_done - starts)
+        batch = parse_generations(self._gen[rows, : self.steps_done],
+                                  self._dec[rows, : self.steps_done],
+                                  starts=starts, lens=lens)
+        self.slot_steps_active += int(batch.pred_tokens.sum())
+        refilled = [i for i, (_, s) in enumerate(completed) if s.refilled]
+        if refilled:
+            self.refill_steps += int(batch.pred_tokens[refilled].sum())
+        return [s.tag for _, s in completed], batch
+
+    def step(self):
+        """``sync`` + ``parse_completed`` in one blocking call — the
+        unpipelined drive (unit tests); the serve runtime interleaves a
+        ``launch`` between the two to overlap host parsing with decode."""
+        return self.parse_completed(self.sync())
+
+    def account(self, stats) -> None:
+        """Fold this run's decode-slot counters into ``SchedulerStats``."""
+        stats.slot_steps_total += self.slot_steps_total
+        stats.slot_steps_active += self.slot_steps_active
+        stats.refill_steps_saved += self.refill_steps
 
 
 class ReasoningEstimator:
@@ -222,6 +471,20 @@ class ReasoningEstimator:
                 max_new_tokens=self.max_new_tokens, temperature=temperature,
                 rng=sub, prompt_lens=pl))
         return DecodeHandle(chunks)
+
+    def open_slots(self, tokens, *, lengths=None, tags=None,
+                   segment_len: int = 4, horizon: Optional[int] = None,
+                   rng: Optional[jax.Array] = None) -> SlotRun:
+        """Open a continuous-batching decode state over one microbatch.
+
+        The engine's segment-chunked refill path drives the returned
+        ``SlotRun``: ``step`` decode segments, ``admit`` fresh prompts into
+        drained slots between them.  ``tokens``/``lengths``/``tags`` are a
+        scheduler ``Microbatch``'s fields; rows beyond the real tags are
+        immediately-free slots.
+        """
+        return SlotRun(self, tokens, lengths=lengths, tags=tags,
+                       segment_len=segment_len, horizon=horizon, rng=rng)
 
     def predict_batch(self, prompts: List[List[int]], *,
                       prompt_lens=None, temperature: float = 0.0,

@@ -11,6 +11,10 @@ retraining — and serves a batch of queries under a chosen routing policy.
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 6 --mesh
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
       --max-queue-ms 5 --min-fill 0.5
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --refill --segment-len 4
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --max-pending 2
 """
 from __future__ import annotations
 
@@ -69,6 +73,20 @@ def main(argv=None):
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable double-buffered dispatch (synchronous "
                          "microbatch execution)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="pipelining depth: microbatches in flight before "
+                         "the oldest is block-parsed (default 1 with "
+                         "overlap, 0 without; 2 interleaves prefill of "
+                         "N+1 with decode of N on real accelerators)")
+    ap.add_argument("--refill", action="store_true",
+                    help="segment-chunked continuous batching: refill "
+                         "drained-at-EOS decode slots from the queue "
+                         "between scan segments instead of retiring "
+                         "microbatches whole")
+    ap.add_argument("--segment-len", type=int, default=None,
+                    help="decode steps per scan segment in --refill mode "
+                         "(default 4; drained slots admit new prompts at "
+                         "segment boundaries)")
     ap.add_argument("--mesh", action="store_true",
                     help="shard the estimator over the local serve mesh "
                          "(multiply CPU devices with XLA_FLAGS="
@@ -121,7 +139,10 @@ def main(argv=None):
                   for c in np.array_split(qids, args.stream_ticks)]
         reports = list(engine.serve_stream(data, chunks, policy,
                                            models=pool, scheduler=sched,
-                                           overlap=not args.no_overlap))
+                                           overlap=not args.no_overlap,
+                                           refill=args.refill,
+                                           segment_len=args.segment_len,
+                                           max_pending=args.max_pending))
         n = sum(r.n_queries for r in reports)
         print(json.dumps({
             "policy": policy.name,

@@ -3,7 +3,9 @@ scheduler, and the continuous-batching serve runtime.
 
 The routing entry point is ``repro.api.ScopeEngine``; ``scheduler`` turns
 ragged request streams into fixed-shape bucket microbatches (with
-deadline/occupancy flushing) and ``runtime.ServeRuntime`` double-buffers
-their dispatch so host assembly overlaps device decode.
+deadline/occupancy flushing), ``runtime.ServeRuntime`` double-buffers
+their dispatch so host assembly overlaps device decode, and
+``runtime.SlotRuntime`` chunks decode into scan segments and refills
+drained-at-EOS slots from the queue mid-batch.
 """
 from repro.serving import engine, runtime, sampler, scheduler  # noqa: F401

@@ -1,4 +1,4 @@
-"""Double-buffered microbatch execution for the streaming serve path.
+"""Microbatch execution runtimes for the streaming serve path.
 
 ``ServeRuntime`` separates *dispatch* (launch a microbatch's device work)
 from *parse* (block on the results and hand them to the consumer), so host
@@ -9,7 +9,9 @@ device.  ``jax`` dispatch is asynchronous; the only forced host sync is
 
   * capacity: ``max_pending`` batches are already in flight (the oldest is
     parsed to make room — ``max_pending=1`` is classic double buffering,
-    ``max_pending=0`` is the synchronous pre-runtime behavior), or
+    ``max_pending=0`` is the synchronous pre-runtime behavior, and depths
+    > 1 interleave batch N+1's prefill with batch N's decode, which pays
+    on accelerators where the two phases occupy different units), or
   * opportunity: ``poll()`` parses any batch whose device buffers report
     ready (``jax.Array.is_ready``), keeping time-to-first-decision low, or
   * shutdown: ``finish()`` drains everything.
@@ -22,12 +24,17 @@ The runtime is estimator-agnostic: a dispatch function returning an object
 with ``is_ready()``/``parse()`` (e.g. ``ReasoningEstimator.dispatch_batch``
 handles) runs overlapped; one returning a finished ``ParsedBatch`` directly
 (duck-typed test estimators) degrades to the synchronous path.
+
+``SlotRuntime`` is the segment-chunked counterpart: instead of retiring
+microbatches whole, it drives a live decode-slot state
+(``ReasoningEstimator.open_slots`` -> ``SlotRun``) in fixed scan segments
+and refills drained-at-EOS slots mid-batch from the scheduler queue.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Callable, Deque, Iterable, Tuple
+from typing import Any, Callable, Deque, Iterable, Optional, Tuple
 
 from repro.serving.scheduler import Microbatch
 
@@ -116,3 +123,86 @@ class ServeRuntime:
         """Block-parse everything still in flight (stream shutdown)."""
         while self._inflight:
             self._parse_oldest()
+
+
+class SlotRuntime:
+    """Segment-chunked continuous batching over decode slots.
+
+    The refill counterpart of ``ServeRuntime``: one live slot state at a
+    time (device work is serialized on one executable anyway).  Whole
+    scheduler microbatches *open* a state via ``open_slots``; between scan
+    segments, rows that drained at EOS (or exhausted their budget) hand
+    their parse group to ``on_parsed`` and their slot admits the oldest
+    queued prompt (``scheduler.pop_one``) — a row that finishes early
+    serves the next request instead of idling until the batch retires.
+
+    ``pump(final=False)`` advances **at most one segment** — the engine
+    calls it per request arrival, so admission interleaves with traffic;
+    ``pump(final=True)`` flushes the scheduler and drains until every slot
+    retires.  A queued prompt wider than the live state's slots is never
+    force-fit: it waits for that state to retire and then opens (or joins)
+    its own microbatch.  Retired runs fold their decode-slot occupancy
+    counters into ``scheduler.stats``.
+    """
+
+    def __init__(self, open_slots: Callable[..., Any], scheduler, *,
+                 segment_len: int, on_parsed: Callable[[list, Any], None],
+                 horizon: Optional[int] = None, rng: Any = None):
+        self._open_slots = open_slots
+        self._sched = scheduler
+        self._segment_len = int(segment_len)
+        self._on_parsed = on_parsed
+        self._horizon = horizon
+        self._rng = rng
+        self._open_queue: Deque[Microbatch] = deque()
+        self._run: Any = None
+
+    def __len__(self) -> int:
+        """Requests currently occupying slots or awaiting a free state."""
+        live = self._run.n_live if self._run is not None else 0
+        return live + sum(mb.n_real for mb in self._open_queue)
+
+    def _admit(self, run) -> None:
+        """Pop queued prompts into the run's free slots (as many as fit)."""
+        if not run.can_admit():
+            return
+        items = []
+        for _ in run.free_rows():
+            item = self._sched.pop_one(run.width)
+            if item is None:
+                break
+            items.append(item)
+        run.admit(items)
+
+    def pump(self, final: bool = False) -> None:
+        while True:
+            if self._run is None:
+                self._open_queue.extend(
+                    self._sched.flush() if final else self._sched.tick())
+                if not self._open_queue:
+                    return
+                mb = self._open_queue.popleft()
+                self._run = self._open_slots(
+                    mb.tokens, lengths=mb.lengths, tags=mb.tags,
+                    segment_len=self._segment_len, horizon=self._horizon,
+                    rng=self._rng)
+                # a partially-filled opening bucket's pad rows are free
+                # slots: refill them before the first segment launches
+                self._admit(self._run)
+            run = self._run
+            # sync the in-flight segment, refill the slots it drained, and
+            # launch the next segment BEFORE parsing — the host assembles
+            # results (window parse, cache writes, request completion)
+            # while the device decodes ahead
+            completed = run.sync()
+            self._admit(run)
+            if not run.finished:
+                run.launch()
+            if completed:
+                self._on_parsed(*run.parse_completed(completed))
+            if run.finished:
+                run.account(self._sched.stats)
+                self._run = None
+                continue                # maybe open the next state
+            if not final:
+                return                  # one segment per arrival

@@ -11,6 +11,11 @@ idling the slot until the batch finishes:
   state = refill_slot(params, cfg, state, row=2, prompt=new_prompt)
   state, gen2, dec2 = decode_segment(params, cfg, state, 4)
 
+``refill_slots`` is the batched form the serve runtime uses: every slot
+drained at one segment boundary refills with a single prefill call,
+padded to the warmed (b, L) executable shape with true per-prompt
+lengths.
+
 Positions are **per row**: rows at different sequence offsets (ragged
 prompt lengths under a bucket grid, refilled slots mid-decode) share one
 compiled decode executable, and sub-bucket rows reproduce an unpadded run
@@ -111,23 +116,11 @@ def _pad_caches(caches, max_len: int, prompt_len: int):
     return jax.tree_util.tree_map_with_path(grow, caches)
 
 
-# no donate_argnums on the caches: XLA reports the KV buffers as unusable
-# donations for a scan carry (they are not jit outputs), so donating would
-# only emit a warning per call without saving the copy
-@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7))
-def _scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
-                 steps: int, temperature: float, stop_at_eos: bool,
-                 positions, done):
-    """One fused decode segment: sample -> emit (token, YES/NO) -> step.
-
-    Carries (last_logits, caches, done, key) across ``steps`` scan steps;
-    ``positions`` is the per-row (b,) count of tokens already cached at
-    segment start, so row i's token at segment step t lands at absolute
-    position ``positions[i] + t``.  Per-step outputs are the sampled token
-    ids (b,) and the decision logit pair (b, 2).  Nothing of size V escapes
-    the scan.  Returns the full carry so segments can be chained.
-    """
-    COMPILE_COUNTS["scan_decode"] += 1      # traced once per compilation
+def _run_scan(params, cfg: ModelConfig, last_logits, caches, key,
+              steps: int, temperature: float, stop_at_eos: bool,
+              positions, done):
+    """Traced scan body shared by ``_scan_decode`` / ``_refill_scan_decode``:
+    sample -> emit (token, YES/NO) -> step, for ``steps`` steps."""
     dec_ix = jnp.asarray(DECISION_TOKENS, jnp.int32)
 
     def step(carry, t):
@@ -151,6 +144,98 @@ def _scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
                                                      jnp.arange(steps))
     # (b, T), (b, T, 2), + carry for the next segment
     return gen.T, dec.transpose(1, 0, 2), last, kv, done, key
+
+
+# no donate_argnums on the caches: XLA reports the KV buffers as unusable
+# donations for a scan carry (they are not jit outputs), so donating would
+# only emit a warning per call without saving the copy
+@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7))
+def _scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
+                 steps: int, temperature: float, stop_at_eos: bool,
+                 positions, done):
+    """One fused decode segment.
+
+    ``positions`` is the per-row (b,) count of tokens already cached at
+    segment start, so row i's token at segment step t lands at absolute
+    position ``positions[i] + t``.  Per-step outputs are the sampled token
+    ids (b,) and the decision logit pair (b, 2).  Nothing of size V escapes
+    the scan.  Returns the full carry so segments can be chained.
+    """
+    COMPILE_COUNTS["scan_decode"] += 1      # traced once per compilation
+    return _run_scan(params, cfg, last_logits, caches, key, steps,
+                     temperature, stop_at_eos, positions, done)
+
+
+def _grow_to(path, leaf, ref):
+    """Pad a prefill cache leaf's seq axis up to ``ref``'s (traced-safe)."""
+    ax = CACHE_SEQ_AXIS.get(_leaf_name(path))
+    if ax is None:
+        return leaf
+    widths = [(0, 0)] * leaf.ndim
+    widths[ax] = (0, ref.shape[ax] - leaf.shape[ax])
+    return jnp.pad(leaf, widths)
+
+
+def _check_refill_lens(cfg: ModelConfig, state: "DecodeState", width: int,
+                       lens: np.ndarray) -> None:
+    """Shared refill-prompt guards (fused and unfused paths must accept
+    exactly the same inputs): true lengths in [1, width], attention-only
+    backbones when padded, and decode room left in the slot cache."""
+    if lens.min() < 1 or lens.max() > width:
+        raise ValueError(
+            f"prompt_lens must lie in [1, {width}], got "
+            f"[{lens.min()}, {lens.max()}]")
+    if lens.min() < width and cfg.has_ssm():
+        raise ValueError(
+            "padded refill requires an attention-only backbone: "
+            f"{cfg.name!r} has SSM/conv layers whose prefill state consumes "
+            "right-pad tokens — refill at the exact prompt length instead")
+    if lens.max() >= state.max_len or width > state.max_len:
+        raise ValueError(
+            f"refill prompt of {lens.max()} tokens (padded to {width}) "
+            f"leaves no decode room in a {state.max_len}-slot cache")
+
+
+@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7))
+def _refill_scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
+                        steps: int, temperature: float, stop_at_eos: bool,
+                        positions, done, refill_mask, refill_prompts,
+                        refill_lens):
+    """``_scan_decode`` with slot refill fused into the same executable.
+
+    ``refill_prompts`` is a **slot-aligned** (b, W) token matrix: row i
+    replaces slot i's request iff ``refill_mask[i]``; ``refill_lens`` (b,)
+    gives each refill prompt's true length (ignored where the mask is
+    False).  The prompts are prefilled, their caches grown to decode
+    capacity and merged under the mask, and the masked rows' position /
+    done / last-logits reset — then the segment scan runs.  One executable
+    launch admits every slot drained at a boundary *and* decodes the next
+    segment; the per-row math is identical to a separate
+    ``refill_slots`` + ``_scan_decode`` pair (asserted bit-exactly in the
+    tests), the fusion only removes per-boundary launch overhead.
+    """
+    COMPILE_COUNTS["refill_scan_decode"] += 1   # traced once per compile
+    logits, new_caches = M.prefill(params, cfg, {"tokens": refill_prompts})
+    new_caches = jax.tree_util.tree_map_with_path(_grow_to, new_caches,
+                                                  caches)
+
+    def merge(old, new):
+        shape = [1] * old.ndim
+        shape[CACHE_BATCH_AXIS] = old.shape[CACHE_BATCH_AXIS]
+        return jnp.where(refill_mask.reshape(shape), new.astype(old.dtype),
+                         old)
+
+    caches = jax.tree.map(merge, caches, new_caches)
+    idx = (refill_lens - 1).astype(jnp.int32)[:, None, None]
+    last_new = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    last_logits = jnp.where(refill_mask[:, None],
+                            last_new.astype(jnp.float32), last_logits)
+    positions = jnp.where(refill_mask, refill_lens.astype(jnp.int32),
+                          positions)
+    done = jnp.where(refill_mask, False, done)
+    out = _run_scan(params, cfg, last_logits, caches, key, steps,
+                    temperature, stop_at_eos, positions, done)
+    return out + (positions,)
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +308,8 @@ def prefill_state(params, cfg: ModelConfig, prompts, *,
 
 
 def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
-                   *, temperature: float = 0.0, stop_at_eos: bool = True
+                   *, temperature: float = 0.0, stop_at_eos: bool = True,
+                   refill: Optional[Tuple] = None
                    ) -> Tuple[DecodeState, jax.Array, jax.Array]:
     """Run ``steps`` decode steps; returns (state, gen (b, T), dec (b, T, 2)).
 
@@ -232,6 +318,15 @@ def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
     assembly with device decode.  Chaining segments is bit-identical to one
     segment of the summed length (the scan body is unchanged and the
     sampling key is carried).
+
+    ``refill`` = (mask (b,), prompts (b, W), prompt_lens (b,)) admits new
+    requests into the masked slots **in the same executable launch**: the
+    slot-aligned prompts are prefilled (right-padded to width W, true
+    lengths in ``prompt_lens``) and the masked rows reset to decode from
+    their own prompt before the segment runs — bit-identical to
+    ``refill_slots`` followed by a plain segment, minus the per-boundary
+    launch overhead.  The same attention-backbone restriction applies to
+    padded refill prompts.
     """
     steps = int(steps)
     if steps <= 0:
@@ -246,47 +341,112 @@ def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
             "rng key — the old PRNGKey(0) fallback made every call sample "
             "the identical key stream")
     key = state.key if state.key is not None else jax.random.PRNGKey(0)
-    gen, dec, last, caches, done, key = _scan_decode(
-        params, cfg, state.last_logits, state.caches, key, steps,
-        float(temperature), bool(stop_at_eos), state.positions, state.done)
-    new = DecodeState(caches, last, state.positions + steps, done,
+    if refill is None:
+        gen, dec, last, caches, done, key = _scan_decode(
+            params, cfg, state.last_logits, state.caches, key, steps,
+            float(temperature), bool(stop_at_eos), state.positions,
+            state.done)
+        positions = state.positions
+        used = state.used
+    else:
+        mask, prompts, lens = refill
+        mask = np.asarray(mask, bool).reshape(-1)
+        prompts = np.asarray(prompts, np.int32)
+        b = state.batch
+        if mask.shape != (b,) or prompts.ndim != 2 or prompts.shape[0] != b:
+            raise ValueError(
+                f"refill mask/prompts must be ({b},)/({b}, W), got "
+                f"{mask.shape}/{prompts.shape}")
+        width = prompts.shape[1]
+        lens = (np.full((b,), width, np.int64) if lens is None
+                else np.asarray(lens, np.int64).reshape(-1))
+        if lens.shape != (b,):
+            raise ValueError(f"prompt_lens shape {lens.shape} != ({b},)")
+        if not mask.any():
+            raise ValueError("refill mask selects no rows — pass "
+                             "refill=None for a plain segment")
+        _check_refill_lens(cfg, state, width, lens[mask])
+        mlens = lens[mask]
+        lens = np.where(mask, lens, 1)      # unmasked rows: any valid index
+        gen, dec, last, caches, done, key, positions = _refill_scan_decode(
+            params, cfg, state.last_logits, state.caches, key, steps,
+            float(temperature), bool(stop_at_eos), state.positions,
+            state.done, jnp.asarray(mask), jnp.asarray(prompts),
+            jnp.asarray(lens, jnp.int32))
+        used = max(state.used, int(mlens.max()))
+    new = DecodeState(caches, last, positions + steps, done,
                       key if state.key is not None else None,
-                      state.max_len, state.used + steps)
+                      state.max_len, used + steps)
     return new, gen, dec
 
 
-def refill_slot(params, cfg: ModelConfig, state: DecodeState, row: int,
-                prompt: Sequence[int]) -> DecodeState:
-    """Admit a new prompt into slot ``row`` between decode segments.
+def refill_slots(params, cfg: ModelConfig, state: DecodeState,
+                 rows: Sequence[int], prompts, *,
+                 prompt_lens: Optional[Sequence[int]] = None) -> DecodeState:
+    """Admit new prompts into slots ``rows`` between decode segments.
 
-    Prefills the prompt alone, scatters its caches into the batch state at
-    ``row`` (every decode-cache leaf carries batch on ``CACHE_BATCH_AXIS``),
-    and resets the row's position/done/logits — the other rows are
-    untouched, so the refilled batch keeps decoding them bit-identically.
-    Pad ``prompt`` to a warmed bucket length to avoid a fresh prefill
-    executable.
+    ``prompts`` is a (p, W) int token matrix with p >= r = len(rows): the
+    first r rows are the refilled prompts (right-padded to a common width
+    W), trailing rows are all-PAD filler so the matrix can match a warmed
+    prefill shape — the slot batch's own (b, L) is always warm, so a refill
+    boundary costs **one** executable launch however many slots drain
+    together.  ``prompt_lens`` gives each refilled prompt's true length
+    (None = exactly W).  Each prompt's caches are scattered
+    into the batch state at its row (every decode-cache leaf carries batch
+    on ``CACHE_BATCH_AXIS``) and the row's position/done/logits reset —
+    the other rows are untouched, so the refilled batch keeps decoding
+    them bit-identically.  A refilled row decodes from its true length
+    with attention masked there, so pad garbage in the cache tail is never
+    attended (attention backbones only — SSM prefill state consumes the
+    pads, exactly as in ``prefill_state``).
     """
-    arr = np.asarray(prompt, np.int32).reshape(1, -1)
-    lp = arr.shape[1]
-    if not 0 <= row < state.batch:
-        raise ValueError(f"row {row} out of range [0, {state.batch})")
-    if lp >= state.max_len:
+    arr = np.asarray(prompts, np.int32)
+    if arr.ndim != 2:
+        raise ValueError(f"prompts must be (p, W), got {arr.shape}")
+    p, width = arr.shape
+    rows = np.asarray(rows, np.int32).reshape(-1)
+    r = rows.shape[0]
+    if r > p:
+        raise ValueError(f"{r} rows for only {p} prompts")
+    if r == 0:
+        return state
+    if len(set(int(x) for x in rows)) != r:
+        raise ValueError(f"duplicate refill rows: {rows.tolist()}")
+    if rows.min() < 0 or rows.max() >= state.batch:
         raise ValueError(
-            f"refill prompt of {lp} tokens leaves no decode room in a "
-            f"{state.max_len}-slot cache")
+            f"rows {rows.tolist()} out of range [0, {state.batch})")
+    lens = (np.full((r,), width, np.int64) if prompt_lens is None
+            else np.asarray(prompt_lens, np.int64).reshape(-1))
+    if lens.shape != (r,):
+        raise ValueError(f"prompt_lens shape {lens.shape} != ({r},)")
+    _check_refill_lens(cfg, state, width, lens)
     logits, caches = _prefill(params, cfg, jnp.asarray(arr))
-    caches = _pad_caches(caches, state.max_len, lp)
+    caches = _pad_caches(caches, state.max_len, width)
+    ridx = jnp.asarray(rows)
     merged = jax.tree.map(
-        lambda full, one: full.at[:, row].set(one[:, 0].astype(full.dtype)),
+        lambda full, new: full.at[:, ridx].set(
+            new[:, :r].astype(full.dtype)),
         state.caches, caches)
+    plens = jnp.asarray(lens, jnp.int32)
+    # gather over the first r (real) prefilled rows only
+    last = _gather_last(logits[:r], plens)              # (r, V) f32
     return dataclasses.replace(
         state,
         caches=merged,
-        last_logits=state.last_logits.at[row].set(
-            logits[0, -1].astype(jnp.float32)),
-        positions=state.positions.at[row].set(lp),
-        done=state.done.at[row].set(False),
-        used=max(state.used, lp))
+        last_logits=state.last_logits.at[ridx].set(last),
+        positions=state.positions.at[ridx].set(plens),
+        done=state.done.at[ridx].set(False),
+        used=max(state.used, int(lens.max())))
+
+
+def refill_slot(params, cfg: ModelConfig, state: DecodeState, row: int,
+                prompt: Sequence[int], *,
+                prompt_len: Optional[int] = None) -> DecodeState:
+    """Single-slot ``refill_slots``: admit one prompt into slot ``row``."""
+    arr = np.asarray(prompt, np.int32).reshape(1, -1)
+    return refill_slots(params, cfg, state, [row], arr,
+                        prompt_lens=None if prompt_len is None
+                        else [int(prompt_len)])
 
 
 # ---------------------------------------------------------------------------

@@ -63,7 +63,9 @@ def decode_compile_counts() -> Dict[str, int]:
     """
     from repro.serving import sampler
     return {"prefill": int(sampler.COMPILE_COUNTS["prefill"]),
-            "scan_decode": int(sampler.COMPILE_COUNTS["scan_decode"])}
+            "scan_decode": int(sampler.COMPILE_COUNTS["scan_decode"]),
+            "refill_scan_decode":
+                int(sampler.COMPILE_COUNTS["refill_scan_decode"])}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +122,18 @@ class SchedulerStats:
     pad_rows: int = 0               # all-PAD filler rows
     pad_tokens: int = 0             # PAD tokens added (rows + length padding)
     real_tokens: int = 0
+    # decode-slot accounting (continuous batching): how many slot-steps the
+    # decode executables ran, how many of them decoded a live request's
+    # tokens, and how much of that came from mid-batch refills.  The engine
+    # folds these in at parse/retire time for both the whole-retire and the
+    # segment-chunked refill paths, so the bench occupancy comparison reads
+    # one counter pair instead of recomputing.
+    slots_refilled: int = 0         # requests popped into an open slot
+    refill_steps_saved: int = 0     # active decode steps served by refilled
+    #                                 rows — whole-retire would have idled
+    #                                 those slot-steps at PAD
+    slot_steps_total: int = 0       # batch x decode-steps actually run
+    slot_steps_active: int = 0      # of those, steps holding a live request
     occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)       # (batch, len) bucket -> microbatch count
     queue_ages: Deque[float] = dataclasses.field(
@@ -129,6 +143,12 @@ class SchedulerStats:
     def pad_fraction(self) -> float:
         total = self.real_tokens + self.pad_tokens
         return self.pad_tokens / total if total else 0.0
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Fraction of decode slot-steps that served a live request."""
+        return (self.slot_steps_active / self.slot_steps_total
+                if self.slot_steps_total else 0.0)
 
     def queue_age_percentiles(self) -> Dict[str, float]:
         """Seconds spent queued, per emitted prompt (p50/p95/max)."""
@@ -149,6 +169,11 @@ class SchedulerStats:
                 "fill_flushes": self.fill_flushes,
                 "pad_rows": self.pad_rows,
                 "pad_fraction": round(self.pad_fraction, 4),
+                "slots_refilled": self.slots_refilled,
+                "refill_steps_saved": self.refill_steps_saved,
+                "slot_steps": {"total": self.slot_steps_total,
+                               "active": self.slot_steps_active},
+                "slot_occupancy": round(self.slot_occupancy, 4),
                 "queue_age_ms": {k: round(v * 1e3, 3)
                                  for k, v in ages.items()},
                 "buckets": {f"{b}x{l}": c
@@ -258,6 +283,38 @@ class MicrobatchScheduler:
             if b <= n:
                 return b
         return n
+
+    def pop_one(self, width: Optional[int] = None
+                ) -> Optional[Tuple[Any, List[int], int]]:
+        """Pop the single oldest queued prompt that fits an open decode
+        slot of ``width`` tokens; ``None`` when nothing fits.
+
+        This is the scheduler's unit of **mid-batch refill**: between
+        decode segments the engine pulls one request per drained slot
+        instead of waiting for a whole bucket.  Only queue fronts are
+        taken, so per-length-class FIFO order is preserved, and the
+        globally oldest fitting prompt wins across classes.  Returns
+        ``(tag, prompt, length)``; emission stats (queue age, real/pad
+        tokens, ``slots_refilled``) are accounted as a one-row emission.
+        """
+        best_ell = None
+        for ell, q in self._queues.items():
+            if not q or (width is not None and len(q[0].prompt) > width):
+                continue
+            if (best_ell is None
+                    or q[0].t_submit < self._queues[best_ell][0].t_submit):
+                best_ell = ell
+        if best_ell is None:
+            return None
+        it = self._queues[best_ell].pop(0)
+        st = self.stats
+        st.emitted += 1
+        st.slots_refilled += 1
+        st.real_tokens += len(it.prompt)
+        if width is not None:
+            st.pad_tokens += width - len(it.prompt)
+        st.queue_ages.append(self._clock() - it.t_submit)
+        return it.tag, it.prompt, len(it.prompt)
 
     def ready(self) -> List[Microbatch]:
         """Pop every full largest-bucket microbatch currently assembled."""

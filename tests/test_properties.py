@@ -287,6 +287,56 @@ def test_tick_deadline_bounds_queue_age(trace):
     assert all(mb.bucket[0] in cfg.batch_sizes for mb in emitted)
 
 
+@st.composite
+def _refill_trace(draw):
+    """Interleaved submits, single-slot pops, and bucket ticks — the
+    operation mix of the segment-chunked refill serve path."""
+    return draw(st.lists(st.one_of(
+        st.tuples(st.just("submit"), st.integers(1, 24)),   # prompt length
+        st.tuples(st.just("pop"), st.integers(4, 28)),      # slot width
+        st.tuples(st.just("tick"), st.just(0))),
+        min_size=1, max_size=40))
+
+
+@given(_refill_trace())
+@settings(max_examples=150, deadline=None)
+def test_refill_pop_one_preserves_exactly_once_and_fifo(ops):
+    """Segment-chunked + refilled streams keep the scheduler contract:
+    interleaving ``pop_one`` (mid-batch slot refill) with ``tick``/
+    ``flush`` bucket emission delivers every submitted prompt exactly
+    once, never hands out a prompt wider than the open slot, and
+    preserves FIFO order within each length class."""
+    sm = _scheduler_mod()
+    cfg = sm.BucketConfig(batch_sizes=(2, 8))
+    sched = sm.MicrobatchScheduler(cfg, clock=lambda: 0.0)
+    submitted, delivered, pops, i = {}, [], 0, 0
+    for op, arg in ops:
+        if op == "submit":
+            sched.submit(i, [5] * arg)
+            submitted[i] = arg
+            i += 1
+        elif op == "pop":
+            item = sched.pop_one(arg)
+            if item is not None:
+                tag, prompt, ln = item
+                assert ln == len(prompt) == submitted[tag] <= arg
+                delivered.append(tag)
+                pops += 1
+        else:
+            for mb in sched.tick():
+                delivered.extend(mb.tags)
+    for mb in sched.flush():
+        delivered.extend(mb.tags)
+    assert sorted(delivered) == list(range(i))          # exactly once
+    per_class = {}
+    for t in delivered:
+        per_class.setdefault(submitted[t], []).append(t)
+    for tags in per_class.values():                     # per-class FIFO
+        assert tags == sorted(tags)
+    assert sched.stats.emitted == i
+    assert sched.stats.slots_refilled == pops
+
+
 @given(st.integers(min_value=0, max_value=40),
        st.floats(min_value=0.05, max_value=1.0))
 @settings(max_examples=150, deadline=None)

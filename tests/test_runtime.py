@@ -7,7 +7,9 @@ import pytest
 import jax
 
 from repro.api import EngineConfig, RouteRequest, ScopeEngine
-from repro.core.estimator import ReasoningEstimator
+from repro.core.estimator import (
+    DecodeHandle, ReasoningEstimator, parse_generations)
+from repro.data import tokenizer as tok
 from repro.data.datasets import build_scope_data
 from repro.serving import sampler
 from repro.serving.runtime import ServeRuntime
@@ -130,6 +132,121 @@ def test_refill_slot_between_segments(tiny_trained):
     s2, g2, _ = sampler.decode_segment(params, cfg, s2, 4)
     np.testing.assert_array_equal(
         np.asarray(g)[[0, 1, 3]], np.asarray(g2)[[0, 1, 3]])
+
+
+def test_refill_slot_padded_prompt_matches_exact(tiny_trained):
+    """A refill prompt padded to the warmed bucket width (with its true
+    prompt_len) decodes bit-identically to an exact-length refill: pad
+    garbage in the cache tail is masked out by the per-row valid length."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(3, 100, size=(4, 18)).astype(np.int32)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
+    state, _, _ = sampler.decode_segment(params, cfg, state, 4)
+
+    new_prompt = rng.integers(3, 100, size=12).astype(np.int32)
+    padded = np.zeros(18, np.int32)
+    padded[:12] = new_prompt
+    s_exact = sampler.refill_slot(params, cfg, state, 2, new_prompt)
+    s_pad = sampler.refill_slot(params, cfg, state, 2, padded,
+                                prompt_len=12)
+    assert int(s_pad.positions[2]) == 12
+    _, g_e, d_e = sampler.decode_segment(params, cfg, s_exact, 4)
+    _, g_p, d_p = sampler.decode_segment(params, cfg, s_pad, 4)
+    np.testing.assert_array_equal(np.asarray(g_p), np.asarray(g_e))
+    np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_e),
+                               atol=5e-6, rtol=1e-6)
+
+
+def test_refill_slots_batched_matches_sequential(tiny_trained):
+    """One batched refill_slots call (padded to the warmed (b, L) prefill
+    shape) equals sequential single-slot refills."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(12)
+    prompts = rng.integers(3, 100, size=(4, 18)).astype(np.int32)
+    fresh = rng.integers(3, 100, size=(2, 14)).astype(np.int32)
+
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
+    state, _, _ = sampler.decode_segment(params, cfg, state, 4)
+
+    mat = np.zeros((4, 18), np.int32)           # padded to (b, L)
+    mat[0, :14] = fresh[0]
+    mat[1, :14] = fresh[1]
+    s_batch = sampler.refill_slots(params, cfg, state, [1, 3], mat,
+                                   prompt_lens=[14, 14])
+    s_seq = sampler.refill_slot(params, cfg, state, 1, fresh[0])
+    s_seq = sampler.refill_slot(params, cfg, s_seq, 3, fresh[1])
+    _, g_b, d_b = sampler.decode_segment(params, cfg, s_batch, 4)
+    _, g_s, d_s = sampler.decode_segment(params, cfg, s_seq, 4)
+    np.testing.assert_array_equal(np.asarray(g_b), np.asarray(g_s))
+    np.testing.assert_allclose(np.asarray(d_b), np.asarray(d_s),
+                               atol=5e-6, rtol=1e-6)
+
+
+def test_decode_segment_fused_refill_matches_unfused(tiny_trained):
+    """decode_segment(refill=(mask, prompts, lens)) — prefill + merge +
+    scan in one executable — is bit-identical to refill_slots followed by
+    a plain segment (tokens AND decision logits: same math, one launch)."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(13)
+    prompts = rng.integers(3, 100, size=(4, 18)).astype(np.int32)
+    fresh = rng.integers(3, 100, size=(2, 12)).astype(np.int32)
+
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=16)
+    state, _, _ = sampler.decode_segment(params, cfg, state, 4)
+
+    mat = np.zeros((4, 18), np.int32)
+    mat[1, :12] = fresh[0]
+    mat[3, :12] = fresh[1]
+    s_ref = sampler.refill_slots(params, cfg, state, [1, 3],
+                                 np.concatenate([mat[1:2], mat[3:4],
+                                                 mat[:2] * 0]),
+                                 prompt_lens=[12, 12])
+    s_ref, g_ref, d_ref = sampler.decode_segment(params, cfg, s_ref, 4)
+
+    mask = np.array([False, True, False, True])
+    s_fus, g_fus, d_fus = sampler.decode_segment(
+        params, cfg, state, 4, refill=(mask, mat, [1, 12, 1, 12]))
+    np.testing.assert_array_equal(np.asarray(g_fus), np.asarray(g_ref))
+    np.testing.assert_array_equal(np.asarray(d_fus), np.asarray(d_ref))
+    np.testing.assert_array_equal(np.asarray(s_fus.positions),
+                                  np.asarray(s_ref.positions))
+    # continuation stays aligned too
+    _, g2f, _ = sampler.decode_segment(params, cfg, s_fus, 4)
+    _, g2r, _ = sampler.decode_segment(params, cfg, s_ref, 4)
+    np.testing.assert_array_equal(np.asarray(g2f), np.asarray(g2r))
+
+
+def test_decode_segment_refill_guards(tiny_trained):
+    cfg, params, _ = tiny_trained
+    state = sampler.prefill_state(params, cfg, np.ones((2, 10), np.int32),
+                                  max_new_tokens=8)
+    mat = np.ones((2, 8), np.int32)
+    with pytest.raises(ValueError, match="no rows"):
+        sampler.decode_segment(params, cfg, state, 4,
+                               refill=([False, False], mat, [8, 8]))
+    with pytest.raises(ValueError, match="mask/prompts"):
+        sampler.decode_segment(params, cfg, state, 4,
+                               refill=([True], mat, [8]))
+    with pytest.raises(ValueError, match="prompt_lens"):
+        sampler.decode_segment(params, cfg, state, 4,
+                               refill=([True, False], mat, [0, 8]))
+
+
+def test_refill_slots_guards(tiny_trained):
+    cfg, params, _ = tiny_trained
+    prompts = np.ones((3, 10), np.int32)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=4)
+    mat = np.ones((2, 8), np.int32)
+    with pytest.raises(ValueError, match="duplicate"):
+        sampler.refill_slots(params, cfg, state, [1, 1], mat)
+    with pytest.raises(ValueError, match="out of range"):
+        sampler.refill_slots(params, cfg, state, [0, 5], mat)
+    with pytest.raises(ValueError, match="rows for only"):
+        sampler.refill_slots(params, cfg, state, [0, 1, 2], mat)
+    with pytest.raises(ValueError, match="prompt_len"):
+        sampler.refill_slots(params, cfg, state, [0, 1], mat,
+                             prompt_lens=[0, 8])
 
 
 def test_refill_and_segment_guards(tiny_trained):
@@ -339,6 +456,228 @@ def test_stream_length_grid_matches_exact_fit(real_engine):
     np.testing.assert_array_equal(wf, ref.well_formed)
     np.testing.assert_array_equal(cost, ref.cost_hat)   # true prompt lens
     np.testing.assert_allclose(p_hat, ref.p_hat, atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Per-row window parse: refilled rows start mid-buffer
+# ---------------------------------------------------------------------------
+def test_parse_generations_windows_match_gathered():
+    """Windowed parse == plain parse of the hand-gathered windows, over a
+    buffer whose rows sit at different offsets with different lengths."""
+    rng = np.random.default_rng(5)
+    T, N = 24, 6
+    gen = rng.integers(0, 40, size=(N, T))
+    dec = rng.normal(size=(N, T, 2))
+    # plant a well-formed body at each row's own offset
+    starts = np.array([0, 3, 8, 0, 15, 20])
+    lens = np.array([6, 6, 6, 4, 6, 4])
+    for i, s in enumerate(starts):
+        gen[i, s: s + 3] = [tok.YES, tok.LEN_BASE + 2, tok.EOS]
+        gen[i, s + 3: s + lens[i]] = tok.PAD
+    ref_rows = []
+    for i in range(N):
+        w = gen[i, starts[i]: starts[i] + lens[i]]
+        dw = dec[i, starts[i]: starts[i] + lens[i]]
+        pad = np.full(int(lens.max()) - lens[i], tok.PAD)
+        ref_rows.append(parse_generations(
+            np.concatenate([w, pad])[None],
+            np.concatenate([dw, np.zeros((len(pad), 2))])[None]))
+    got = parse_generations(gen, dec, starts=starts, lens=lens)
+    for i, ref in enumerate(ref_rows):
+        assert got.y_hat[i] == ref.y_hat[0]
+        assert got.len_hat[i] == ref.len_hat[0]
+        assert got.well_formed[i] == ref.well_formed[0]
+        assert got.pred_tokens[i] == ref.pred_tokens[0]
+        np.testing.assert_allclose(got.p_conf[i], ref.p_conf[0])
+
+
+def test_parse_generations_window_validation():
+    gen = np.zeros((2, 8), int)
+    dec = np.zeros((2, 8, 2))
+    with pytest.raises(ValueError, match="inside"):
+        parse_generations(gen, dec, starts=[0, 6], lens=[8, 4])
+    with pytest.raises(ValueError, match="must be"):
+        parse_generations(gen, dec, starts=[0], lens=[4, 4])
+
+
+def test_decode_handle_windows(tiny_trained):
+    """DecodeHandle.parse with windows == parsing each row's slice."""
+    cfg, params, _ = tiny_trained
+    prompts = np.random.default_rng(6).integers(
+        3, 100, size=(3, 16)).astype(np.int32)
+    g, d = sampler.generate(params, cfg, prompts, max_new_tokens=8)
+    windows = [(0, 8), (2, 6), (4, 4)]
+    got = DecodeHandle([(g, d)], windows=windows).parse()
+    for i, (s, ln) in enumerate(windows):
+        pad = 8 - ln
+        ref = parse_generations(
+            np.concatenate([g[i, s: s + ln], np.full(pad, tok.PAD)])[None],
+            np.concatenate([d[i, s: s + ln], np.zeros((pad, 2))])[None])
+        assert got.y_hat[i] == ref.y_hat[0]
+        assert got.pred_tokens[i] == ref.pred_tokens[0]
+        np.testing.assert_allclose(got.p_conf[i], ref.p_conf[0])
+
+
+# ---------------------------------------------------------------------------
+# SlotRun: segment-chunked decode with mid-batch refill
+# ---------------------------------------------------------------------------
+def _drive_slot_run(est, prompts, tags, extra, *, segment_len):
+    """Step a SlotRun to completion, admitting ``extra`` = [(tag, prompt)]
+    into slots as they drain; returns {tag: per-field dict}."""
+    run = est.open_slots(np.asarray(prompts, np.int32), tags=list(tags),
+                         segment_len=segment_len)
+    queue = list(extra)
+    results = {}
+    while not run.finished or queue:
+        if queue and run.free_rows() and run.can_admit():
+            n = min(len(queue), len(run.free_rows()))
+            run.admit([(t, p, len(p)) for t, p in queue[:n]])
+            del queue[:n]
+        assert not run.finished, "queue left but horizon exhausted"
+        tags_done, batch = run.step()
+        for i, t in enumerate(tags_done):
+            results[t] = {f: getattr(batch, f)[i] for f in
+                          ("y_hat", "len_hat", "well_formed", "p_conf",
+                           "pred_tokens", "rationale_len")}
+    return results, run
+
+
+def test_slot_run_refilled_rows_match_standalone(tiny_trained):
+    """Every request served through a SlotRun — original rows and
+    mid-batch refills alike — parses identically to a standalone
+    whole-batch run of the same prompts."""
+    cfg, params, _ = tiny_trained
+    est = ReasoningEstimator(cfg, params, max_new_tokens=8)
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(3, 100, size=(4, 18)).astype(np.int32)
+    extra = rng.integers(3, 100, size=(3, 18)).astype(np.int32)
+
+    results, run = _drive_slot_run(
+        est, prompts, tags=["a", "b", "c", "d"],
+        extra=[("e", list(extra[0])), ("f", list(extra[1])),
+               ("g", list(extra[2]))], segment_len=4)
+    assert set(results) == set("abcdefg")
+    assert run.slot_steps_total > 0
+    assert run.refill_steps > 0
+
+    ref = est.predict_batch(
+        [list(p) for p in np.concatenate([prompts, extra])])
+    for i, t in enumerate("abcdefg"):
+        got = results[t]
+        assert got["y_hat"] == ref.y_hat[i], t
+        assert got["len_hat"] == ref.len_hat[i], t
+        assert got["well_formed"] == ref.well_formed[i], t
+        assert got["pred_tokens"] == ref.pred_tokens[i], t
+        assert got["rationale_len"] == ref.rationale_len[i], t
+        np.testing.assert_allclose(got["p_conf"], ref.p_conf[i],
+                                   atol=1e-6, rtol=1e-6, err_msg=t)
+
+
+def test_slot_run_partial_bucket_has_free_slots(tiny_trained):
+    """Rows beyond the real tags of a partially-filled opening bucket are
+    immediately-free slots — a refill target from boundary zero."""
+    cfg, params, _ = tiny_trained
+    est = ReasoningEstimator(cfg, params, max_new_tokens=8)
+    prompts = np.random.default_rng(8).integers(
+        3, 100, size=(4, 12)).astype(np.int32)
+    run = est.open_slots(prompts, tags=["a", "b"], segment_len=4)
+    assert run.free_rows() == [2, 3]
+    assert run.n_live == 2 and run.can_admit()
+
+
+def test_slot_run_guards(tiny_trained):
+    cfg, params, _ = tiny_trained
+    est = ReasoningEstimator(cfg, params, max_new_tokens=8)
+    prompts = np.ones((2, 10), np.int32)
+    with pytest.raises(ValueError, match="segment_len"):
+        est.open_slots(prompts, segment_len=0)
+    with pytest.raises(ValueError, match="segment_len"):
+        est.open_slots(prompts, segment_len=99)
+    run = est.open_slots(prompts, segment_len=4)
+    with pytest.raises(ValueError, match="free slots"):
+        run.admit([("x", [1] * 5, 5)])
+    with pytest.raises(ValueError, match="tags"):
+        est.open_slots(prompts, tags=["a", "b", "c"], segment_len=4)
+
+
+# ---------------------------------------------------------------------------
+# Engine: segment-chunked refill stream
+# ---------------------------------------------------------------------------
+def test_stream_refill_matches_whole_retire(real_engine):
+    """Refill-on and refill-off streams make identical routing decisions:
+    token-derived fields bit-equal, confidences to f32 ulp (partial
+    buckets run a different executable shape in whole-retire mode), and
+    both match batch ``predict``."""
+    mk, data = real_engine
+    queries = [data.queries[int(q)] for q in data.test_qids[:7]]
+    ticks = [queries[:2], queries[2:3], queries[3:7]]
+    ref = mk().predict(RouteRequest(queries))
+
+    pools, scheds = {}, {}
+    for refill in (False, True):
+        sched = MicrobatchScheduler(BucketConfig(batch_sizes=(1, 2, 4, 8)))
+        pools[refill] = list(mk().predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            refill=refill, segment_len=3))
+        scheds[refill] = sched
+    assert len(pools[True]) == len(ticks)
+    for field in ("y_hat", "len_hat", "well_formed", "cost_hat",
+                  "pred_overhead"):
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(getattr(p, field)) for p in
+                            pools[True]]),
+            np.concatenate([np.asarray(getattr(p, field)) for p in
+                            pools[False]]), err_msg=field)
+    np.testing.assert_allclose(
+        np.concatenate([p.p_hat for p in pools[True]]),
+        np.concatenate([p.p_hat for p in pools[False]]),
+        atol=1e-6, rtol=1e-6)
+    np.testing.assert_array_equal(
+        np.concatenate([p.y_hat for p in pools[True]]), ref.y_hat)
+    # both modes account decode-slot occupancy in SchedulerStats
+    for refill in (False, True):
+        st = scheds[refill].stats
+        assert st.slot_steps_total > 0
+        assert 0.0 < st.slot_occupancy <= 1.0
+    # every scheduled prompt was delivered exactly once
+    assert scheds[True].stats.emitted == scheds[True].stats.submitted
+
+
+def test_stream_refill_cache_and_dedup(real_engine):
+    """Cache writes land per parse group and in-flight duplicates share
+    generations in refill mode, exactly as in the whole-retire stream."""
+    mk, data = real_engine
+    queries = [data.queries[int(q)] for q in data.test_qids[:4]]
+    ticks = [queries[:2], queries[:2], queries[2:4]]
+    engine = mk()
+    pools = list(engine.predict_stream(
+        (RouteRequest(t) for t in ticks),
+        scheduler=MicrobatchScheduler(BucketConfig(batch_sizes=(1, 2, 4, 8))),
+        refill=True, segment_len=3))
+    # the duplicated middle tick spends no new estimator tokens
+    assert int(pools[1].pred_overhead.sum()) == 0
+    np.testing.assert_array_equal(pools[1].y_hat, pools[0].y_hat)
+    # a later identical request is served from the cache, zero decode
+    again = list(engine.predict_stream(
+        iter([RouteRequest(queries[:2])]), refill=True))
+    assert again[0].cache_hits == again[0].y_hat.size
+    np.testing.assert_array_equal(again[0].y_hat, pools[0].y_hat)
+
+
+def test_stream_refill_requires_slot_estimator(real_engine):
+    """refill=True with an estimator lacking open_slots fails loudly."""
+    mk, data = real_engine
+
+    class Duck:
+        def predict(self, prompts, rng=None):
+            raise AssertionError("unreachable")
+
+    engine = mk()
+    engine.set_estimator(Duck(), "duck-v1")
+    with pytest.raises(TypeError, match="open_slots"):
+        list(engine.predict_stream(
+            iter([RouteRequest([data.queries[int(data.test_qids[0])]])]),
+            refill=True))
 
 
 def test_stream_deadline_flush_bounds_queue_age(real_engine):
