@@ -54,6 +54,33 @@ def run(bundle=None) -> List[Tuple[str, float, str]]:
     rows.append((f"kernel/ssd_xla_l{l}h{h}p{p}n{n}",
                  _time(f, x, dt, A, B, C), "chunked_dual_form"))
 
+    # paged decode attention (XLA gather path) vs the dense decode twin
+    b, hq, hkv, S, d, page = 4, 8, 2, 2048, 64, 16
+    n_pages = b * (S // page) + 1                # + trash page
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, 1, d))
+    kc = jax.random.normal(ks[1], (b, hkv, S, d))
+    vc = jax.random.normal(ks[2], (b, hkv, S, d))
+    kp = jnp.zeros((n_pages, hkv, page, d))
+    vp = jnp.zeros((n_pages, hkv, page, d))
+    table = np.full((b, S // page), n_pages - 1, np.int32)
+    nxt = 0
+    for i in range(b):                           # scatter rows into pages
+        for j in range(S // page):
+            kp = kp.at[nxt].set(kc[i, :, j * page:(j + 1) * page])
+            vp = vp.at[nxt].set(vc[i, :, j * page:(j + 1) * page])
+            table[i, j] = nxt
+            nxt += 1
+    lens = jnp.full((b,), S, jnp.int32)
+    table = jnp.asarray(table)
+    fd = jax.jit(lambda q, k, v, n: ops.decode_attention(q, k, v, n))
+    rows.append((f"kernel/decode_attn_dense_b{b}s{S}",
+                 _time(fd, q, kc, vc, lens), "dense_cache"))
+    fp = jax.jit(lambda q, k, v, n, t: ops.paged_decode_attention(
+        q, k, v, n, t, page_size=page, kv_cap=S))
+    rows.append((f"kernel/decode_attn_paged_b{b}s{S}p{page}",
+                 _time(fp, q, kp, vp, lens, table), "paged_gather"))
+
     # topk retrieval
     q = jax.random.normal(ks[0], (256, 32))
     a = jax.random.normal(ks[1], (250, 32))

@@ -363,6 +363,107 @@ def bench_refill(engine, queries, *, bucket_sizes, segment_len: int = 4,
     ]
 
 
+def bench_paged(dense_engine, paged_engine, queries, *, bucket_sizes,
+                segment_len: int = 4, repeats: int = 3, max_tick: int = 3,
+                smoke: bool = False) -> List[Dict]:
+    """Block-paged KV cache vs the dense per-slot horizon, same workload.
+
+    Both engines carry the same trained parameters and stream the same
+    ragged refill workload; the only difference is the decode-cache
+    layout.  The paged engine's XLA gather path reconstructs exactly the
+    contiguous cache the dense kernel reads, so every token-derived field
+    must be bit-equal and the final routing decisions identical — the
+    page pool buys peak-KV headroom (``kv_peak_tokens`` scales with live
+    tokens rather than slots x horizon), not different outputs.
+    """
+    from repro.api import FixedAlphaPolicy, RouteRequest
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+    from repro.serving.scheduler import decode_compile_counts
+
+    seg = max(1, min(segment_len,
+                     int(dense_engine.estimator.max_new_tokens)))
+    ticks = _as_ticks(queries, _tick_sizes(len(queries), max_tick=max_tick))
+    cfg = BucketConfig(batch_sizes=bucket_sizes)
+
+    def stream(engine):
+        sched = MicrobatchScheduler(cfg)
+        t0 = time.perf_counter()
+        pools = list(engine.predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            use_cache=False, refill=True, segment_len=seg))
+        return pools, time.perf_counter() - t0, sched
+
+    stream(dense_engine)            # warm both cache layouts' executables
+    stream(paged_engine)
+    warmed = decode_compile_counts()
+
+    t_dense = t_paged = None
+    dense_pools = paged_pools = s_dense = s_paged = None
+    for _ in range(repeats):
+        dense_pools, dt, s_dense = stream(dense_engine)
+        t_dense = dt if t_dense is None else min(t_dense, dt)
+        paged_pools, dt, s_paged = stream(paged_engine)
+        t_paged = dt if t_paged is None else min(t_paged, dt)
+    recompiles = _compile_delta(warmed, decode_compile_counts())
+    qps_dense = len(queries) / t_dense
+    qps_paged = len(queries) / t_paged
+
+    def cat(pools, field):
+        return np.concatenate([np.asarray(getattr(p, field)).reshape(-1)
+                               for p in pools])
+
+    token_identical = all(
+        np.array_equal(cat(paged_pools, f), cat(dense_pools, f))
+        for f in ("y_hat", "len_hat", "well_formed", "cost_hat",
+                  "pred_overhead"))
+    conf_close = bool(np.allclose(cat(paged_pools, "p_hat"),
+                                  cat(dense_pools, "p_hat"),
+                                  atol=1e-6, rtol=1e-6))
+    policy = FixedAlphaPolicy(0.6)
+    choices_paged = np.concatenate(
+        [np.asarray(policy.decide(p, dense_engine).choices)
+         for p in paged_pools])
+    choices_dense = np.concatenate(
+        [np.asarray(policy.decide(p, dense_engine).choices)
+         for p in dense_pools])
+    identical_decisions = bool(np.array_equal(choices_paged, choices_dense))
+
+    st_p, st_d = s_paged.stats, s_dense.stats
+    if smoke:
+        assert recompiles == 0, (
+            f"paged stream recompiled {recompiles} executables after "
+            f"warmup — page tables are traced, so steady-state segments "
+            f"must reuse the warmed bucket shapes")
+        assert token_identical, (
+            "paged vs dense streams disagree on token-derived prediction "
+            "fields — the gather path lost bit parity")
+        assert conf_close, "paged vs dense confidences diverge"
+        assert identical_decisions, (
+            "paged vs dense streams routed differently")
+        assert st_p.pages_peak > 0 and st_p.kv_page_size > 0, (
+            "the paged stream never touched the page pool")
+        assert st_p.kv_peak_tokens < st_d.kv_peak_tokens, (
+            f"paged peak KV {st_p.kv_peak_tokens} tokens does not beat "
+            f"the dense horizon's {st_d.kv_peak_tokens} — paging must "
+            f"cap KV at live tokens, not slots x horizon")
+    return [
+        {"name": "serve_throughput/engine_paged", "qps": qps_paged,
+         "detail": {"queries": len(queries), "segment_len": seg,
+                    "kv_page_size": st_p.kv_page_size,
+                    "pages_peak": st_p.pages_peak,
+                    "kv_peak_tokens": st_p.kv_peak_tokens,
+                    "kv_peak_tokens_dense": st_d.kv_peak_tokens,
+                    "page_fragmentation":
+                        round(st_p.page_fragmentation, 4),
+                    "deferred_on_pages":
+                        st_p.admissions_deferred_on_pages,
+                    "recompiles_after_warmup": recompiles,
+                    "qps_vs_dense": round(qps_paged / max(qps_dense, 1e-9),
+                                          3),
+                    "identical_decisions": identical_decisions}},
+    ]
+
+
 def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
     """Bucketed stream with the estimator placed on the serve mesh."""
     import jax
@@ -426,6 +527,10 @@ def run(bundle) -> List[Tuple[str, float, str]]:
     rows += bench_deadline(engine, queries[:24])
     rows += bench_refill(bundle.engine(bundle.seen), queries,
                          bucket_sizes=BUCKETS)
+    rows += bench_paged(bundle.engine(bundle.seen),
+                        bundle.engine(bundle.seen, kv_paged=True,
+                                      kv_page_size=8),
+                        queries, bucket_sizes=BUCKETS)
     rows += bench_sharded(bundle.engine(bundle.seen), queries,
                           bucket_sizes=BUCKETS)
     _emit(rows, smoke=False)
@@ -449,7 +554,7 @@ def _smoke_world():
 
 
 def _smoke_engine(world, data, library, retriever, params,
-                  max_new_tokens: int = 12):
+                  max_new_tokens: int = 12, **ekw):
     from repro.api import EngineConfig, ScopeEngine
     from repro.configs.scope_estimator import TINY
     from repro.core.estimator import ReasoningEstimator
@@ -458,7 +563,7 @@ def _smoke_engine(world, data, library, retriever, params,
         estimator=ReasoningEstimator(TINY, params,
                                      max_new_tokens=max_new_tokens),
         retriever=retriever, library=library,
-        models_meta={m: world.models[m] for m in data.models}))
+        models_meta={m: world.models[m] for m in data.models}, **ekw))
 
 
 def _smoke_setup():
@@ -498,8 +603,12 @@ def _smoke_trained_setup():
     params, _ = train_sft(params, TINY, ds, steps=50, batch_size=32)
     engine = _smoke_engine(world, data, library, retriever, params,
                            max_new_tokens=16)
+    # paged twin: same params and pool, block-paged decode KV — streams
+    # must be bit-identical to the dense engine's refill streams
+    paged = _smoke_engine(world, data, library, retriever, params,
+                          max_new_tokens=16, kv_paged=True, kv_page_size=8)
     queries = [data.queries[int(q)] for q in data.test_qids[:16]]
-    return engine, queries
+    return engine, paged, queries
 
 
 def main(argv=None) -> int:
@@ -523,16 +632,20 @@ def main(argv=None) -> int:
                             repeats=args.repeats or 2, max_tick=3,
                             smoke=True)
         rows += bench_deadline(engine, queries[:6], smoke=True)
-        trained, tqueries = _smoke_trained_setup()
+        trained, tpaged, tqueries = _smoke_trained_setup()
         rows += bench_refill(trained, tqueries, bucket_sizes=(1, 2, 4, 8),
                              repeats=args.repeats or 2, smoke=True)
+        rows += bench_paged(trained, tpaged, tqueries,
+                            bucket_sizes=(1, 2, 4, 8),
+                            repeats=args.repeats or 2, smoke=True)
         rows += bench_sharded(engine, queries, bucket_sizes=(1, 2, 4, 8))
         _emit(rows, smoke=True)
         print("# smoke asserts passed: zero recompiles after warmup, "
               "overlap+sync streams bit-identical to batch predict, "
               "deadline flush ships partial buckets, refill stream beats "
               "whole-retire q/s at higher slot occupancy with identical "
-              "routing decisions")
+              "routing decisions, paged KV bit-identical to dense at "
+              "lower peak KV tokens")
     else:
         from benchmarks.common import get_bundle
         rows_csv = run(get_bundle())

@@ -428,8 +428,11 @@ class ScopeEngine:
         ``max_queue_age``/``min_fill`` knobs and full-bucket emission are
         only consulted between states, so a prompt that cannot ride the
         live state (wider than its slots, or all slots busy) waits up to
-        the remaining refill horizon before a new bucket opens (see the
-        ROADMAP's refill-aware deadline scheduling item).
+        the remaining refill horizon before a new bucket opens.  With
+        ``EngineConfig.kv_paged`` the horizon ceiling does not exist: the
+        slot cache is block-paged (``serving.kv_pool``), admission gates
+        on free pool pages, and a state serves requests indefinitely —
+        the wait collapses to "until a slot drains and pages free up".
         """
         from repro.serving.runtime import ServeRuntime
         from repro.serving.scheduler import MicrobatchScheduler
@@ -438,6 +441,11 @@ class ScopeEngine:
             use_cache = cfg.enable_cache
         if refill is None:
             refill = cfg.refill
+        if cfg.kv_paged and not refill:
+            raise ValueError(
+                "kv_paged requires the refill serve path (the whole-retire "
+                "runtime keeps dense per-microbatch caches) — set "
+                "EngineConfig.refill=True or pass refill=True")
         sched = scheduler if scheduler is not None else MicrobatchScheduler()
         if refill:
             yield from self._predict_stream_refill(
@@ -513,12 +521,48 @@ class ScopeEngine:
                 "refill streaming requires an estimator with open_slots() "
                 f"(ReasoningEstimator); {type(est).__name__} lacks it — "
                 "stream with refill=False instead")
+        cfg = self.config
+        open_fn = open_slots
+        if cfg.kv_paged:
+            if cfg.refill_horizon is not None:
+                raise ValueError(
+                    "kv_paged and refill_horizon are mutually exclusive: "
+                    "paged admission is gated on free pool pages, not a "
+                    "slot horizon")
+            from repro.kernels.decode_attention import KernelType
+            from repro.serving.kv_pool import KVPool
+            kernel = {"xla": KernelType.XLA,
+                      "pallas": KernelType.PALLAS}.get(cfg.kv_kernel.lower())
+            if kernel is None:
+                raise ValueError(f"unknown kv_kernel {cfg.kv_kernel!r} "
+                                 "(expected 'xla' or 'pallas')")
+            page = int(cfg.kv_page_size)
+            budget = int(getattr(est, "max_new_tokens", 0) or 0)
+            budget_steps = -(-budget // segment_len) * segment_len
+            shared = (None if cfg.kv_pool_pages is None
+                      else KVPool(n_pages=int(cfg.kv_pool_pages),
+                                  page_size=page))
+
+            def open_fn(tokens, **kw):
+                if shared is not None:
+                    pool = shared
+                else:
+                    # auto-size: the opening bucket's dense worst case —
+                    # paged still wins whenever rows finish early or the
+                    # run outlives one horizon
+                    b, width = np.asarray(tokens).shape
+                    pool = KVPool(
+                        n_pages=b * (-(-(width + budget_steps) // page)),
+                        page_size=page)
+                return open_slots(tokens, kv_pool=pool, kv_kernel=kernel,
+                                  **kw)
+
         pending: Deque[_StreamEntry] = deque()
         inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
-        runtime = SlotRuntime(open_slots, sched, segment_len=segment_len,
+        runtime = SlotRuntime(open_fn, sched, segment_len=segment_len,
                               on_parsed=self._stream_fill(inflight,
                                                           use_cache),
-                              horizon=self.config.refill_horizon, rng=rng)
+                              horizon=cfg.refill_horizon, rng=rng)
         serial = 0
 
         def drain_completed():

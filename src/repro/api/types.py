@@ -55,6 +55,17 @@ class EngineConfig:
     max_pending: Optional[int] = None       # in-flight microbatches in the
     #                                         ServeRuntime pipeline (None =
     #                                         1 if overlap else 0)
+    # paged KV cache (refill path only): block-paged decode-cache pool
+    # instead of the dense per-slot horizon — KV memory scales with live
+    # tokens, admission gates on free pages
+    kv_paged: bool = False
+    kv_page_size: int = 16          # token positions per KV page
+    kv_pool_pages: Optional[int] = None     # pool size in pages (None =
+    #                                         auto-size to the opening
+    #                                         bucket's worst case)
+    kv_kernel: str = "xla"          # paged decode-attention impl:
+    #                                 "xla" (gather, bit-parity with dense)
+    #                                 or "pallas"
 
 
 @dataclasses.dataclass

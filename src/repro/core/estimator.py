@@ -218,7 +218,8 @@ class SlotRun:
     def __init__(self, estimator: "ReasoningEstimator", tokens, *,
                  lengths=None, tags=None, segment_len: int = 4,
                  horizon: Optional[int] = None,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None,
+                 kv_pool=None, kv_kernel=None):
         tokens = np.asarray(tokens, np.int32)
         if tokens.ndim != 2:
             raise ValueError(f"tokens must be (b, L), got {tokens.shape}")
@@ -232,11 +233,26 @@ class SlotRun:
             raise ValueError(
                 f"segment_len must lie in [1, {self.budget}] "
                 f"(max_new_tokens), got {segment_len}")
-        horizon = int(horizon) if horizon else 4 * self.budget
-        horizon = max(horizon, self.budget)
-        # whole segments only: a window admitted while can_admit() holds
-        # always completes by the horizon boundary
-        self.horizon = -(-horizon // self.segment_len) * self.segment_len
+        # a request admitted at a boundary is freed at the first boundary
+        # >= budget steps later, so a row writes at most this many decode
+        # slots past its prompt — the paged per-row capacity and the unit
+        # the host decode buffers grow by
+        self.budget_steps = -(-self.budget // self.segment_len) \
+            * self.segment_len
+        self.kv_pool = kv_pool
+        if kv_pool is None:
+            horizon = int(horizon) if horizon else 4 * self.budget
+            horizon = max(horizon, self.budget)
+            # whole segments only: a window admitted while can_admit()
+            # holds always completes by the horizon boundary
+            self.horizon = -(-horizon // self.segment_len) \
+                * self.segment_len
+            buf = self.horizon
+        else:
+            # paged mode has no shared horizon: admission is gated on free
+            # pages and the host buffers grow per segment instead
+            self.horizon = None
+            buf = self.budget_steps
         tags = list(tags) if tags is not None else list(range(b))
         if len(tags) > b:
             raise ValueError(f"{len(tags)} tags for {b} slots")
@@ -244,10 +260,20 @@ class SlotRun:
         # per-row true lengths only when genuinely ragged: exact-fit
         # buckets stay on the unmasked path (SSM backbones included)
         pl = lens if lens is not None and (lens != L).any() else None
-        self.state = sampler.prefill_state(
-            estimator.params, estimator.cfg,
-            estimator._place_batch(tokens),
-            max_new_tokens=self.horizon, prompt_lens=pl, rng=rng)
+        if kv_pool is None:
+            self.state = sampler.prefill_state(
+                estimator.params, estimator.cfg,
+                estimator._place_batch(tokens),
+                max_new_tokens=self.horizon, prompt_lens=pl, rng=rng)
+        else:
+            from repro.kernels.decode_attention import KernelType
+            self.state = sampler.prefill_state(
+                estimator.params, estimator.cfg,
+                estimator._place_batch(tokens),
+                max_new_tokens=self.budget_steps, prompt_lens=pl, rng=rng,
+                kv_pool=kv_pool,
+                kv_kernel=kv_kernel or KernelType.XLA,
+                kv_active=np.arange(b) < len(tags))
         # rows past the real tags are free slots from the start (a
         # partially-filled opening bucket refills instead of padding)
         self.slots: List[Optional[_Slot]] = [
@@ -256,8 +282,8 @@ class SlotRun:
         self.steps_run = 0                  # decode steps *launched*
         self.steps_done = 0                 # decode steps synced to host
         # host copy of the decode buffer, written once per segment
-        self._gen = np.full((b, self.horizon), -1, np.int32)
-        self._dec = np.zeros((b, self.horizon, 2), np.float32)
+        self._gen = np.full((b, buf), -1, np.int32)
+        self._dec = np.zeros((b, buf, 2), np.float32)
         # slot-aligned refills admitted since the last launch; fused into
         # the next ``decode_segment(refill=...)`` executable
         self._pending: Optional[tuple] = None
@@ -280,8 +306,28 @@ class SlotRun:
     def free_rows(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
+    @property
+    def paged(self) -> bool:
+        return self.kv_pool is not None
+
     def can_admit(self) -> bool:
+        """Whether one more request may be admitted into a free slot.
+
+        Dense mode gates on the remaining horizon fitting a full budget;
+        paged mode gates on the pool having a worst-case row's pages free
+        — the ``refill_horizon`` ceiling does not exist there, so a
+        queued prompt drains as soon as pages free up, however long the
+        run has already decoded.
+        """
+        if self.paged:
+            return self.state.paged.can_admit(self.width)
         return self.steps_run + self.budget <= self.horizon
+
+    @property
+    def deferral_reason(self) -> str:
+        """Which resource a ``can_admit() == False`` boundary waits on
+        (the stats counter the serve runtime bumps)."""
+        return "pages" if self.paged else "horizon"
 
     def admit(self, items: Sequence[tuple]) -> None:
         """Refill free slots with ``items`` = [(tag, prompt, length)].
@@ -302,9 +348,6 @@ class SlotRun:
         if len(items) > len(free):
             raise ValueError(
                 f"{len(items)} refills for {len(free)} free slots")
-        if not self.can_admit():
-            raise ValueError(
-                "remaining horizon cannot fit a full decode budget")
         if self._pending is None:
             self._pending = (np.zeros(self.batch, bool),
                              np.full((self.batch, self.width), tok.PAD,
@@ -312,6 +355,11 @@ class SlotRun:
                              np.ones(self.batch, np.int64))
         mask, mat, lens = self._pending
         for (tag, prompt, length), row in zip(items, free):
+            if not self.can_admit():
+                raise ValueError(
+                    "cannot admit: the kv pool has no room for a "
+                    "worst-case row" if self.paged else
+                    "remaining horizon cannot fit a full decode budget")
             p = np.asarray(prompt, np.int32).reshape(-1)
             if not 1 <= len(p) <= self.width:
                 raise ValueError(
@@ -321,6 +369,10 @@ class SlotRun:
             mat[row] = tok.PAD
             mat[row, : len(p)] = p
             lens[row] = int(length) if length else len(p)
+            if self.paged:
+                # reserve the row's pages NOW so the next can_admit()
+                # check sees the pool as the coming launch will leave it
+                self.state.paged.pre_admit(row, int(lens[row]))
             self.slots[row] = _Slot(tag, self.steps_run, True)
 
     # -- decode --------------------------------------------------------
@@ -331,7 +383,8 @@ class SlotRun:
         host work with device decode."""
         if self._inflight is not None:
             raise RuntimeError("a segment is already in flight")
-        if self.steps_run + self.segment_len > self.horizon:
+        if not self.paged and \
+                self.steps_run + self.segment_len > self.horizon:
             raise RuntimeError(
                 f"segment overruns the {self.horizon}-step slot horizon")
         self.state, g, d = sampler.decode_segment(
@@ -356,6 +409,16 @@ class SlotRun:
         g, d = self._inflight
         self._inflight = None
         t0, t1 = self.steps_done, self.steps_done + self.segment_len
+        if t1 > self._gen.shape[1]:
+            # paged runs have no horizon, so the host buffers grow in
+            # budget-sized chunks as the run outlives its initial window
+            grow = -(-(t1 - self._gen.shape[1]) // self.budget_steps) \
+                * self.budget_steps
+            self._gen = np.concatenate(
+                [self._gen, np.full((self.batch, grow), -1, np.int32)], 1)
+            self._dec = np.concatenate(
+                [self._dec,
+                 np.zeros((self.batch, grow, 2), np.float32)], 1)
         self._gen[:, t0:t1] = np.asarray(g)
         self._dec[:, t0:t1] = np.asarray(d)
         self.steps_done = t1
@@ -367,6 +430,11 @@ class SlotRun:
             if bool(done[row]) or t1 - slot.start >= self.budget:
                 completed.append((row, slot))
                 self.slots[row] = None
+                if self.paged:
+                    # hand the row's pages back the moment it drains —
+                    # its table entries fall back to the trash page, so
+                    # the still-running PAD decode scatters harmlessly
+                    self.state.paged.retire_row(row)
         return completed
 
     def parse_completed(self, completed: List[tuple]):
@@ -397,6 +465,19 @@ class SlotRun:
         stats.slot_steps_total += self.slot_steps_total
         stats.slot_steps_active += self.slot_steps_active
         stats.refill_steps_saved += self.refill_steps
+        if self.paged:
+            pool = self.kv_pool
+            stats.kv_page_size = pool.page_size
+            stats.pages_in_use = pool.pages_in_use
+            stats.pages_peak = max(stats.pages_peak, pool.pages_peak)
+            stats.kv_live_tokens = pool.live_tokens
+            stats.kv_peak_tokens = max(stats.kv_peak_tokens,
+                                       pool.tokens_peak)
+        else:
+            # dense KV is committed wholesale at prefill: every slot holds
+            # max_len token positions for the whole run
+            stats.kv_peak_tokens = max(
+                stats.kv_peak_tokens, self.batch * self.state.max_len)
 
 
 class ReasoningEstimator:
@@ -474,17 +555,24 @@ class ReasoningEstimator:
 
     def open_slots(self, tokens, *, lengths=None, tags=None,
                    segment_len: int = 4, horizon: Optional[int] = None,
-                   rng: Optional[jax.Array] = None) -> SlotRun:
+                   rng: Optional[jax.Array] = None,
+                   kv_pool=None, kv_kernel=None) -> SlotRun:
         """Open a continuous-batching decode state over one microbatch.
 
         The engine's segment-chunked refill path drives the returned
         ``SlotRun``: ``step`` decode segments, ``admit`` fresh prompts into
         drained slots between them.  ``tokens``/``lengths``/``tags`` are a
         scheduler ``Microbatch``'s fields; rows beyond the real tags are
-        immediately-free slots.
+        immediately-free slots.  Passing a ``kv_pool`` (``serving.kv_pool.
+        KVPool``) switches the slot cache to the block-paged layout —
+        ``horizon`` must then stay None (admission is page-gated).
         """
+        if kv_pool is not None and horizon is not None:
+            raise ValueError("horizon and kv_pool are mutually exclusive: "
+                             "paged admission is gated on free pages")
         return SlotRun(self, tokens, lengths=lengths, tags=tags,
-                       segment_len=segment_len, horizon=horizon, rng=rng)
+                       segment_len=segment_len, horizon=horizon, rng=rng,
+                       kv_pool=kv_pool, kv_kernel=kv_kernel)
 
     def predict_batch(self, prompts: List[List[int]], *,
                       prompt_lens=None, temperature: float = 0.0,

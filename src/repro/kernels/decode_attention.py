@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for single-token decode attention.
+"""Pallas TPU kernels for single-token decode attention (dense + paged).
 
 The decode hot spot is a memory-bound sweep of the KV cache: one query
 token attends to S cached keys.  The grid walks KV blocks sequentially per
@@ -9,11 +9,21 @@ heads lives in VMEM scratch, so the cache streams HBM->VMEM exactly once
 Masking supports a per-batch valid length (``cache_len``) and an optional
 sliding window (both used by the ring-buffer serving caches).
 
+``paged_decode_attention`` is the block-paged variant backing the KV pool
+(`serving/kv_pool.py`): the cache lives as (n_pages, hkv, page_size, hd)
+physical pages and each row's logical block ``iw`` is resolved through a
+scalar-prefetched page table — ``PrefetchScalarGridSpec`` makes the table
+available to the BlockSpec index map, so the grid DMAs exactly the pages a
+row owns and never materializes a gathered dense cache.  Callers select
+the implementation via the ``KernelType`` enum (``KernelTypeMapping`` in
+``kernels/ops.py`` maps it to this kernel or the XLA gather path).
+
 Validated against ``ref.attention`` / ``ops.decode_attention`` in
 interpret mode.
 """
 from __future__ import annotations
 
+import enum
 import functools
 from typing import Optional
 
@@ -23,6 +33,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+class KernelType(enum.Enum):
+    """Which paged decode-attention implementation to dispatch."""
+    PALLAS = 0
+    XLA = 1
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
@@ -113,4 +129,112 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         ],
         interpret=interpret,
     )(cache_len, qg[:, :, 0], k_cache, v_cache)
+    return out.reshape(b, hq, 1, dv)
+
+
+def _paged_decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float,
+                         softcap: float, page_size: int, kv_cap: int,
+                         n_w: int):
+    """One grid step = one logical page of one (batch row, kv head).
+
+    ``table_ref``/``len_ref`` are scalar-prefetched: the flattened page
+    table already steered the BlockSpec index map, so ``k_ref``/``v_ref``
+    hold the *physical* page this row's logical block ``iw`` maps to
+    (the trash page for unallocated entries — fully masked below).
+    """
+    ib = pl.program_id(0)
+    iw = pl.program_id(2)
+
+    @pl.when(iw == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (page, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (page, dv)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (g, page)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    valid = len_ref[ib]
+    kpos = iw * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (kpos < valid) & (kpos < kv_cap)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF, 0.0, jnp.exp(m_prev - m_safe))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(iw == n_w - 1)
+    def _finish():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0, ...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, cache_len, page_table,
+                           *, page_size: int, kv_cap: int,
+                           softcap: float = 0.0,
+                           scale: Optional[float] = None,
+                           interpret: bool = True) -> jax.Array:
+    """Block-paged decode attention.
+
+    q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page_size, d[v])
+    physical page storage; page_table: (b, W) int32 mapping each row's
+    logical page to a physical one; cache_len: (b,) or scalar valid
+    lengths; kv_cap: the per-row logical capacity (W * page_size rounded
+    down to it).  Returns (b, hq, 1, dv).
+    """
+    b, hq, _, d = q.shape
+    hkv = k_pages.shape[1]
+    dv = v_pages.shape[-1]
+    g = hq // hkv
+    n_w = page_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    table_flat = jnp.asarray(page_table, jnp.int32).reshape(-1)   # (b*W,)
+
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, softcap=softcap,
+        page_size=page_size, kv_cap=kv_cap, n_w=n_w)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_w),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h, iw, tbl, lens: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b_, h, iw, tbl, lens:
+                         (tbl[b_ * n_w + iw], h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dv),
+                         lambda b_, h, iw, tbl, lens:
+                         (tbl[b_ * n_w + iw], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b_, h, iw, tbl, lens: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        interpret=interpret,
+    )(table_flat, cache_len, qg, k_pages, v_pages)
     return out.reshape(b, hq, 1, dv)

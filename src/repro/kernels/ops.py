@@ -230,6 +230,67 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
     return out.reshape(b, hq, 1, dv).astype(q.dtype)
 
 
+def _paged_decode_attention_xla(q, k_pages, v_pages, cache_len, page_table,
+                                *, page_size: int, kv_cap: int,
+                                softcap: float = 0.0,
+                                scale: Optional[float] = None) -> jax.Array:
+    """XLA paged path: gather each row's pages into a dense per-row view,
+    slice to ``kv_cap``, then run the exact dense masked-softmax above.
+
+    Every valid cache position holds the same value as the dense layout
+    (the scatter wrote it there) and every position past ``cache_len``
+    reaches the softmax as an exact-zero probability, so this path is
+    **bit-identical** to the dense oracle whenever ``kv_cap`` equals the
+    dense cache length — the parity the tests pin down.
+    """
+    b, hq, _, d = q.shape
+    hkv = k_pages.shape[1]
+    n_w = page_table.shape[1]
+    kd = k_pages[page_table]                    # (b, W, hkv, page, hd)
+    vd = v_pages[page_table]
+    kd = kd.transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, n_w * page_size, d)[:, :, :kv_cap]
+    vd = vd.transpose(0, 2, 1, 3, 4).reshape(
+        b, hkv, n_w * page_size, -1)[:, :, :kv_cap]
+    return decode_attention(q, kd, vd, cache_len, softcap=softcap,
+                            scale=scale, impl="xla")
+
+
+def _paged_decode_attention_pallas(q, k_pages, v_pages, cache_len,
+                                   page_table, *, page_size: int,
+                                   kv_cap: int, softcap: float = 0.0,
+                                   scale: Optional[float] = None
+                                   ) -> jax.Array:
+    return _da.paged_decode_attention(
+        q, k_pages, v_pages, cache_len, page_table, page_size=page_size,
+        kv_cap=kv_cap, softcap=softcap, scale=scale, interpret=_interpret())
+
+
+# KernelType -> implementation, the dispatch idiom shared with the other
+# kernels: model code picks an enum member (a static jit argument), never
+# a string, so the mapping is the single registry of paged backends.
+KernelTypeMapping = {
+    _da.KernelType.PALLAS: _paged_decode_attention_pallas,
+    _da.KernelType.XLA: _paged_decode_attention_xla,
+}
+
+
+def paged_decode_attention(q, k_pages, v_pages, cache_len, page_table, *,
+                           page_size: int, kv_cap: int, softcap: float = 0.0,
+                           scale: Optional[float] = None,
+                           kernel=_da.KernelType.XLA) -> jax.Array:
+    """Single-token attention against a block-paged cache.
+
+    q: (b, hq, 1, d); k_pages/v_pages: (n_pages, hkv, page_size, d)
+    physical page storage (the last page is the trash page);
+    page_table: (b, W) int32; cache_len: scalar or (b,) valid lengths
+    INCLUDING the current token.
+    """
+    return KernelTypeMapping[kernel](
+        q, k_pages, v_pages, cache_len, page_table, page_size=page_size,
+        kv_cap=kv_cap, softcap=softcap, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # SSD
 # ---------------------------------------------------------------------------

@@ -14,6 +14,8 @@ retraining — and serves a batch of queries under a chosen routing policy.
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
       --refill --segment-len 4
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --refill --kv-paged --kv-page-size 16
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
       --max-pending 2
 """
 from __future__ import annotations
@@ -87,6 +89,19 @@ def main(argv=None):
                     help="decode steps per scan segment in --refill mode "
                          "(default 4; drained slots admit new prompts at "
                          "segment boundaries)")
+    ap.add_argument("--kv-paged", action="store_true",
+                    help="block-paged decode KV cache (--refill only): "
+                         "pool-backed pages instead of a dense per-slot "
+                         "horizon — KV memory scales with live tokens and "
+                         "admission gates on free pages")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="token positions per KV page in --kv-paged mode "
+                         "(default 16; smaller pages = less last-page "
+                         "waste, bigger page tables)")
+    ap.add_argument("--kv-pool-pages", type=int, default=None,
+                    help="KV pool size in pages in --kv-paged mode "
+                         "(default: auto-size each slot state to its "
+                         "bucket's dense worst case)")
     ap.add_argument("--mesh", action="store_true",
                     help="shard the estimator over the local serve mesh "
                          "(multiply CPU devices with XLA_FLAGS="
@@ -105,9 +120,31 @@ def main(argv=None):
                                seed=args.seed)
         params, _ = train_sft(params, cfg, ds, steps=250, batch_size=64)
 
+    if args.kv_paged and not args.refill:
+        ap.error("--kv-paged requires --refill (the whole-retire runtime "
+                 "keeps dense per-microbatch caches)")
+    if args.kv_page_size < 1:
+        ap.error(f"--kv-page-size must be >= 1, got {args.kv_page_size}")
+
     engine = ScopeEngine.build(EngineConfig(
         estimator=ReasoningEstimator(cfg, params), retriever=retr,
-        library=lib, models_meta={m: world.models[m] for m in data.models}))
+        library=lib, models_meta={m: world.models[m] for m in data.models},
+        kv_paged=args.kv_paged, kv_page_size=args.kv_page_size,
+        kv_pool_pages=args.kv_pool_pages))
+
+    if args.kv_paged and args.kv_pool_pages is not None:
+        # a request admitted at a boundary may decode its whole budget:
+        # a pool that cannot page even a minimal such row can never admit
+        seg = args.segment_len or 4
+        budget = int(engine.estimator.max_new_tokens)
+        budget_steps = -(-budget // seg) * seg
+        min_pages = -(-(1 + budget_steps) // args.kv_page_size)
+        if args.kv_pool_pages < min_pages:
+            raise ValueError(
+                f"--kv-pool-pages {args.kv_pool_pages} is too small to "
+                f"admit a single full-budget row: a 1-token prompt "
+                f"decoding {budget_steps} budget steps needs "
+                f"{min_pages} pages of {args.kv_page_size} tokens")
 
     if args.ood:
         pool = [m.name for m in world.pool if not m.seen]

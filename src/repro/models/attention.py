@@ -128,6 +128,44 @@ def gqa_decode(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
     return y @ p["wo"], {"k": kc, "v": vc}
 
 
+def gqa_decode_paged(p, cfg: ModelConfig, x, cos, sin, cache: Dict, pos,
+                     table, spec, *, kind: str = "attn"
+                     ) -> Tuple[jax.Array, Dict]:
+    """Single-token GQA decode against a block-paged cache.
+
+    cache["k"/"v"]: (n_pages, hkv, page_size, hd) physical pages shared by
+    the whole batch; ``table``: (b, W) int32 page table; ``spec``: a
+    ``PagedSpec`` (static page_size / kv_cap / kernel).  The new KV
+    scatters into slot ``pos % page_size`` of physical page
+    ``table[row, pos // page_size]``.  The logical page index is clamped
+    to the table width: live rows never pass ``kv_cap`` (the sampler
+    guards each segment), so the clamp only fires for retired/done rows
+    whose table points at the trash page — their PAD writes collide there
+    harmlessly, which is also why the scatter must NOT claim unique
+    indices.  No ring-buffer mode: paged layers are full-window only
+    (``kv_pool.check_paged_support``).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _gqa_qkv(p, cfg, x, cos, sin)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    lp = jnp.minimum(pos // spec.page_size, table.shape[1] - 1)
+    rows = jnp.arange(b)
+    pid = table[rows, lp]                                # (b,)
+    slot = pos % spec.page_size
+    kc = cache["k"].at[pid, :, slot].set(
+        k.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[pid, :, slot].set(
+        v.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["v"].dtype))
+    out = ops.paged_decode_attention(
+        q.transpose(0, 2, 1, 3), kc, vc, pos + 1, table,
+        page_size=spec.page_size, kv_cap=spec.kv_cap,
+        softcap=cfg.logit_softcap, scale=cfg.attn_scale or None,
+        kernel=spec.kernel)
+    y = out.transpose(0, 2, 1, 3).reshape(b, 1, cfg.num_heads * hd)
+    return y @ p["wo"], {"k": kc, "v": vc}
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (whisper decoder)
 # ---------------------------------------------------------------------------

@@ -211,11 +211,16 @@ def prefill(params, cfg: ModelConfig, batch: Dict):
 # ---------------------------------------------------------------------------
 # Decode
 # ---------------------------------------------------------------------------
-def decode_step(params, cfg: ModelConfig, token, caches, pos):
+def decode_step(params, cfg: ModelConfig, token, caches, pos, *, paged=None):
     """token: (b, 1) int32; pos: scalar OR (b,) int32 — per-row count of
     tokens already cached (row ``i``'s new token lands at absolute position
     ``pos[i]``).  A scalar broadcasts to every row, so rows at different
     sequence positions share one compiled decode executable.
+
+    ``paged`` = (PagedSpec, page table (b, W)) switches the attention
+    caches to the block-paged layout from ``serving/kv_pool.py``; the RoPE
+    rotation, embedding and head math are untouched — positions stay
+    absolute, only the KV storage addressing changes.
 
     Returns (logits (b, 1, V), new caches)."""
     b = token.shape[0]
@@ -232,7 +237,7 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos):
     new_caches = []
     for seg, cache, (unit, count) in zip(params["segments"], caches, plan):
         h, nc = tf.segment_decode(seg, shared, cfg, unit, count, h, cos, sin,
-                                  cache, pos)
+                                  cache, pos, paged=paged)
         new_caches.append(nc)
     return _logits(params, cfg, h), tuple(new_caches)
 

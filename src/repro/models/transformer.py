@@ -153,7 +153,11 @@ def block_full(p: Dict, cfg: ModelConfig, kind: str, h: jax.Array,
 # Block apply — single-token decode
 # ---------------------------------------------------------------------------
 def block_decode(p: Dict, cfg: ModelConfig, kind: str, h: jax.Array,
-                 cos, sin, cache: Dict, pos) -> Tuple[jax.Array, Dict]:
+                 cos, sin, cache: Dict, pos, *, paged=None
+                 ) -> Tuple[jax.Array, Dict]:
+    """``paged`` = (PagedSpec, page table (b, W)) routes attention layers
+    through the block-paged cache layout; ``kv_pool.check_paged_support``
+    guarantees only plain GQA kinds reach here when it is set."""
     if kind == "mamba":
         y, new = ssm_mod.mamba_decode(p["mamba"], cfg,
                                       rmsnorm(p["norm"], h, cfg.rmsnorm_eps),
@@ -162,7 +166,13 @@ def block_decode(p: Dict, cfg: ModelConfig, kind: str, h: jax.Array,
 
     new_cache: Dict = {}
     x = rmsnorm(p["attn_norm"], h, cfg.rmsnorm_eps)
-    if _is_mla(kind):
+    if paged is not None:
+        if _is_mla(kind):
+            raise ValueError("paged decode does not support MLA layers")
+        spec, table = paged
+        y, kv = attn_mod.gqa_decode_paged(p["attn"], cfg, x, cos, sin,
+                                          cache, pos, table, spec, kind=kind)
+    elif _is_mla(kind):
         y, kv = attn_mod.mla_decode(p["attn"], cfg, x, cos, sin, cache, pos,
                                     kind=kind)
     else:
@@ -241,7 +251,10 @@ def segment_full(seg_params: Dict, shared_params, cfg: ModelConfig,
 
 def segment_decode(seg_params: Dict, shared_params, cfg: ModelConfig,
                    unit: Tuple[str, ...], count: int, h: jax.Array, cos, sin,
-                   caches: Dict, pos):
+                   caches: Dict, pos, *, paged=None):
+    # the page table (in ``paged``) is closed over, not scanned: every
+    # layer shares one table while each scanned layer consumes its own
+    # (n_pages, hkv, page, hd) slice of the stacked page storage
     def body(hh, xs):
         layer_caches = xs["__cache__"]
         new_caches = {}
@@ -249,7 +262,7 @@ def segment_decode(seg_params: Dict, shared_params, cfg: ModelConfig,
             p = shared_params if kind == "shared_attn" else xs[str(j)]
             kk = "attn" if kind == "shared_attn" else kind
             hh, nc = block_decode(p, cfg, kk, hh, cos, sin,
-                                  layer_caches[str(j)], pos)
+                                  layer_caches[str(j)], pos, paged=paged)
             new_caches[str(j)] = nc
         return hh, new_caches
 

@@ -147,13 +147,16 @@ class SlotRuntime:
 
     def __init__(self, open_slots: Callable[..., Any], scheduler, *,
                  segment_len: int, on_parsed: Callable[[list, Any], None],
-                 horizon: Optional[int] = None, rng: Any = None):
+                 horizon: Optional[int] = None, rng: Any = None,
+                 kv_pool: Any = None, kv_kernel: Any = None):
         self._open_slots = open_slots
         self._sched = scheduler
         self._segment_len = int(segment_len)
         self._on_parsed = on_parsed
         self._horizon = horizon
         self._rng = rng
+        self._kv_pool = kv_pool
+        self._kv_kernel = kv_kernel
         self._open_queue: Deque[Microbatch] = deque()
         self._run: Any = None
 
@@ -163,11 +166,25 @@ class SlotRuntime:
         return live + sum(mb.n_real for mb in self._open_queue)
 
     def _admit(self, run) -> None:
-        """Pop queued prompts into the run's free slots (as many as fit)."""
-        if not run.can_admit():
-            return
+        """Pop queued prompts into the run's free slots (as many as fit).
+
+        ``can_admit`` is re-checked per item — each paged admission draws
+        down the pool, so the first one can succeed and the next defer.  A
+        boundary that leaves a free slot idle while the queue holds work is
+        *counted*, not silently swallowed: the deferral shows up in
+        ``SchedulerStats`` under the resource it waited on (pool pages in
+        paged mode, the slot horizon in dense mode).
+        """
         items = []
         for _ in run.free_rows():
+            if not run.can_admit():
+                if self._sched.peek_one(run.width):
+                    stats = self._sched.stats
+                    if run.deferral_reason == "pages":
+                        stats.admissions_deferred_on_pages += 1
+                    else:
+                        stats.admissions_deferred_on_horizon += 1
+                break
             item = self._sched.pop_one(run.width)
             if item is None:
                 break
@@ -182,10 +199,14 @@ class SlotRuntime:
                 if not self._open_queue:
                     return
                 mb = self._open_queue.popleft()
+                kw = {}
+                if self._kv_pool is not None:
+                    kw = {"kv_pool": self._kv_pool,
+                          "kv_kernel": self._kv_kernel}
                 self._run = self._open_slots(
                     mb.tokens, lengths=mb.lengths, tags=mb.tags,
                     segment_len=self._segment_len, horizon=self._horizon,
-                    rng=self._rng)
+                    rng=self._rng, **kw)
                 # a partially-filled opening bucket's pad rows are free
                 # slots: refill them before the first segment launches
                 self._admit(self._run)

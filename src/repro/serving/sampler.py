@@ -47,6 +47,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS, NO, PAD, YES
 from repro.models import model as M
+from repro.serving.kv_pool import (KVPool, PagedKV, _ceil_div,
+                                   check_paged_support)
+from repro.kernels.decode_attention import KernelType
 
 # decision-logit channel order: [:, :, 0] = YES, [:, :, 1] = NO
 DECISION_TOKENS = (YES, NO)
@@ -118,9 +121,12 @@ def _pad_caches(caches, max_len: int, prompt_len: int):
 
 def _run_scan(params, cfg: ModelConfig, last_logits, caches, key,
               steps: int, temperature: float, stop_at_eos: bool,
-              positions, done):
-    """Traced scan body shared by ``_scan_decode`` / ``_refill_scan_decode``:
-    sample -> emit (token, YES/NO) -> step, for ``steps`` steps."""
+              positions, done, paged=None):
+    """Traced scan body shared by ``_scan_decode`` / ``_refill_scan_decode``
+    and their paged twins: sample -> emit (token, YES/NO) -> step, for
+    ``steps`` steps.  ``paged`` = (PagedSpec, page table) reroutes the KV
+    writes/reads through the block-paged layout; the sampling math is
+    byte-for-byte the same code path."""
     dec_ix = jnp.asarray(DECISION_TOKENS, jnp.int32)
 
     def step(carry, t):
@@ -135,7 +141,7 @@ def _run_scan(params, cfg: ModelConfig, last_logits, caches, key,
         if stop_at_eos:
             dn = dn | (nxt == EOS)
         new_logits, kv = M.decode_step(params, cfg, nxt[:, None], kv,
-                                       positions + t)
+                                       positions + t, paged=paged)
         new_logits = new_logits[:, 0].astype(jnp.float32)
         return (new_logits, kv, dn, k), (nxt, dec)
 
@@ -239,6 +245,146 @@ def _refill_scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
 
 
 # ---------------------------------------------------------------------------
+# Paged twins: prefill-scatter + decode over the block-paged KV layout
+# ---------------------------------------------------------------------------
+def _paged_leaf_scatter(leaf, storage, page_ids, page_size: int):
+    """Scatter a dense prefill leaf (count, b, hkv, L, hd) into paged
+    storage (count, n_pages + 1, hkv, page_size, hd) at the flattened
+    (b * ceil(L / page_size),) physical destinations ``page_ids``.
+
+    Pad/filler blocks all target the trash page; their writes collide
+    there in nondeterministic order, which is unobservable — trash reads
+    are always masked to exact-zero probability or belong to discarded
+    rows — so the scatter must not claim unique indices.
+    """
+    count, b, hkv, L, hd = leaf.shape
+    npg = page_ids.shape[0] // b
+    pad = npg * page_size - L
+    if pad:
+        leaf = jnp.pad(leaf, [(0, 0), (0, 0), (0, 0), (0, pad), (0, 0)])
+    blocks = leaf.reshape(count, b, hkv, npg, page_size, hd)
+    blocks = blocks.transpose(0, 1, 3, 2, 4, 5).reshape(
+        count, b * npg, hkv, page_size, hd)
+    return storage.at[:, page_ids].set(blocks.astype(storage.dtype))
+
+
+def _scatter_prefill_caches(caches, storage_of, page_ids, page_size: int):
+    """Tree-map the page scatter over the k/v cache leaves.
+
+    ``check_paged_support`` guarantees every decode-cache leaf is a GQA
+    k/v pair, so anything else here is a bug, not a user error.
+    """
+    def scatter(path, leaf):
+        name = _leaf_name(path)
+        if name not in ("k", "v"):
+            raise AssertionError(
+                f"paged scatter hit non-GQA cache leaf {name!r}")
+        return _paged_leaf_scatter(leaf, storage_of(path, leaf), page_ids,
+                                   page_size)
+
+    return jax.tree_util.tree_map_with_path(scatter, caches)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3, 4))
+def _paged_prefill(params, cfg: ModelConfig, tokens, n_pages_total: int,
+                   page_size: int, page_ids):
+    """Prefill + scatter into **fresh** paged storage.
+
+    ``page_ids`` (b * npg,) maps each row's prompt page blocks to the
+    physical pages its table owns (trash for inactive rows / pad blocks).
+    Storage is (count, n_pages_total, hkv, page_size, hd) per leaf with
+    the trash page at index n_pages_total - 1.
+    """
+    COMPILE_COUNTS["paged_prefill"] += 1    # traced once per compilation
+    logits, caches = M.prefill(params, cfg, {"tokens": tokens})
+
+    def storage_of(path, leaf):
+        count, _, hkv, _, hd = leaf.shape
+        return jnp.zeros((count, n_pages_total, hkv, page_size, hd),
+                         leaf.dtype)
+
+    return logits, _scatter_prefill_caches(caches, storage_of, page_ids,
+                                           page_size)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def _paged_refill_prefill(params, cfg: ModelConfig, tokens, page_size: int,
+                          page_ids, caches):
+    """Prefill + scatter into **existing** paged storage (unfused refill).
+
+    Refilled rows' destinations are freshly allocated pages and everything
+    else targets trash, so live rows' pages are untouched — the paged
+    analogue of the dense per-row cache merge.
+    """
+    COMPILE_COUNTS["paged_refill_prefill"] += 1
+    logits, new = M.prefill(params, cfg, {"tokens": tokens})
+
+    flat_cache = {}
+
+    def name_leaf(path, leaf):
+        flat_cache[jax.tree_util.keystr(path)] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(name_leaf, caches)
+
+    def storage_of(path, leaf):
+        return flat_cache[jax.tree_util.keystr(path)]
+
+    return logits, _scatter_prefill_caches(new, storage_of, page_ids,
+                                           page_size)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7, 8))
+def _paged_scan_decode(params, cfg: ModelConfig, last_logits, caches, key,
+                       steps: int, temperature: float, stop_at_eos: bool,
+                       spec, table, positions, done):
+    """``_scan_decode`` over the paged layout.  ``spec`` (static) carries
+    page_size / kv_cap / kernel; ``table`` is the traced (b, W) page
+    table pushed fresh each segment — its shape is constant per batch, so
+    table updates never recompile."""
+    COMPILE_COUNTS["paged_scan_decode"] += 1
+    return _run_scan(params, cfg, last_logits, caches, key, steps,
+                     temperature, stop_at_eos, positions, done,
+                     paged=(spec, table))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 5, 6, 7, 8))
+def _paged_refill_scan_decode(params, cfg: ModelConfig, last_logits, caches,
+                              key, steps: int, temperature: float,
+                              stop_at_eos: bool, spec, table, positions,
+                              done, refill_mask, refill_prompts,
+                              refill_lens, refill_page_ids):
+    """``_refill_scan_decode`` over the paged layout: prefill the refill
+    prompts, scatter their page blocks into the pool storage (masked-out
+    rows scatter to trash), reset the masked rows, then run the segment."""
+    COMPILE_COUNTS["paged_refill_scan_decode"] += 1
+    logits, new = M.prefill(params, cfg, {"tokens": refill_prompts})
+
+    flat_cache = {}
+
+    def name_leaf(path, leaf):
+        flat_cache[jax.tree_util.keystr(path)] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(name_leaf, caches)
+    caches = _scatter_prefill_caches(
+        new, lambda path, leaf: flat_cache[jax.tree_util.keystr(path)],
+        refill_page_ids, spec.page_size)
+
+    idx = (refill_lens - 1).astype(jnp.int32)[:, None, None]
+    last_new = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    last_logits = jnp.where(refill_mask[:, None],
+                            last_new.astype(jnp.float32), last_logits)
+    positions = jnp.where(refill_mask, refill_lens.astype(jnp.int32),
+                          positions)
+    done = jnp.where(refill_mask, False, done)
+    out = _run_scan(params, cfg, last_logits, caches, key, steps,
+                    temperature, stop_at_eos, positions, done,
+                    paged=(spec, table))
+    return out + (positions,)
+
+
+# ---------------------------------------------------------------------------
 # DecodeState: explicit decode carry between scan segments
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -250,6 +396,12 @@ class DecodeState:
     cost until refilled or the batch retires).  ``used`` is a host-side
     upper bound on cache occupancy, checked against ``max_len`` before a
     segment runs off the end of the allocation.
+
+    ``paged`` (a ``kv_pool.PagedKV``) switches the caches to the
+    block-paged layout: ``max_len`` then equals the paged ``kv_cap`` and
+    the batch-wide ``used`` guard is replaced by the attachment's per-row
+    ``row_high`` bound — a drained row's pages return to the pool instead
+    of idling until the whole batch retires.
     """
     caches: Any
     last_logits: jax.Array          # (b, V) float32
@@ -258,6 +410,7 @@ class DecodeState:
     key: Optional[jax.Array]        # carried sampling key (None = greedy)
     max_len: int                    # per-row cache capacity (slots)
     used: int                       # host upper bound of max(positions)
+    paged: Optional[PagedKV] = None
 
     @property
     def batch(self) -> int:
@@ -266,7 +419,10 @@ class DecodeState:
 
 def prefill_state(params, cfg: ModelConfig, prompts, *,
                   max_new_tokens: int, prompt_lens=None,
-                  rng: Optional[jax.Array] = None) -> DecodeState:
+                  rng: Optional[jax.Array] = None,
+                  kv_pool: Optional[KVPool] = None,
+                  kv_kernel: KernelType = KernelType.XLA,
+                  kv_active=None) -> DecodeState:
     """Batch prefill into a ``DecodeState`` sized for ``max_new_tokens``.
 
     ``prompts``: (b, L) int32, right-padded.  ``prompt_lens`` (b,) gives
@@ -274,15 +430,22 @@ def prefill_state(params, cfg: ModelConfig, prompts, *,
     ``prompt_lens[i]`` with attention masked at its own valid length, so a
     sub-bucket row reproduces the unpadded run exactly (attention
     backbones).  ``None`` means every row is exactly L long.
+
+    ``kv_pool`` backs the state with the block-paged KV layout instead of
+    a dense O(b x max_len) allocation: each admitted row reserves its own
+    worst case (``len + max_new_tokens`` tokens, page-rounded) and pages
+    materialize only as positions advance.  ``kv_active`` (b,) bool marks
+    the rows to admit (None = all); inactive rows own no pages — their
+    tables point at the trash page and their decoded tokens are garbage
+    to discard, exactly like a dense free slot.  ``kv_kernel`` selects the
+    paged attention implementation (``KernelType.XLA`` is bit-identical
+    to dense; PALLAS is the TPU kernel, interpreted on CPU).
     """
     prompts = jnp.asarray(prompts, jnp.int32)
     b, lp = prompts.shape
     max_len = lp + int(max_new_tokens)
-    logits, caches = _prefill(params, cfg, prompts)
-    caches = _pad_caches(caches, max_len, lp)
     if prompt_lens is None:
-        last = logits[:, -1].astype(jnp.float32)
-        positions = jnp.full((b,), lp, jnp.int32)
+        lens = None
     else:
         lens = np.asarray(prompt_lens, np.int64).reshape(-1)
         if lens.shape != (b,):
@@ -300,11 +463,42 @@ def prefill_state(params, cfg: ModelConfig, prompts, *,
                 f"{cfg.name!r} has SSM/conv layers whose prefill state "
                 "consumes right-pad tokens — use exact-fit lengths "
                 "(BucketConfig(prompt_lens=()))")
+
+    paged = None
+    if kv_pool is not None:
+        check_paged_support(cfg)
+        if kv_pool.page_size > max_len:
+            raise ValueError(
+                f"kv_page_size {kv_pool.page_size} exceeds the row "
+                f"capacity {max_len} — a page would never fill")
+        paged = kv_pool.attach(b, kv_cap=max_len,
+                               budget_steps=int(max_new_tokens),
+                               kernel=kv_kernel)
+        active = (np.ones((b,), bool) if kv_active is None
+                  else np.asarray(kv_active, bool).reshape(-1))
+        if active.shape != (b,):
+            raise ValueError(f"kv_active shape {active.shape} != ({b},)")
+        row_lens = np.full((b,), lp, np.int64) if lens is None else lens
+        for i in np.flatnonzero(active):
+            paged.admit_row(int(i), int(row_lens[i]))
+        npg = _ceil_div(lp, paged.page_size)
+        ids = jnp.asarray(paged.prompt_page_ids(active, npg).reshape(-1))
+        logits, caches = _paged_prefill(params, cfg, prompts,
+                                        kv_pool.n_pages + 1,
+                                        paged.page_size, ids)
+    else:
+        logits, caches = _prefill(params, cfg, prompts)
+        caches = _pad_caches(caches, max_len, lp)
+
+    if lens is None:
+        last = logits[:, -1].astype(jnp.float32)
+        positions = jnp.full((b,), lp, jnp.int32)
+    else:
         positions = jnp.asarray(lens, jnp.int32)
         last = _gather_last(logits, positions)
     return DecodeState(caches, last, positions,
                        done=jnp.zeros((b,), bool), key=rng,
-                       max_len=max_len, used=lp)
+                       max_len=max_len, used=lp, paged=paged)
 
 
 def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
@@ -329,9 +523,17 @@ def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
     padded refill prompts.
     """
     steps = int(steps)
+    pg = state.paged
     if steps <= 0:
         raise ValueError(f"steps must be positive, got {steps}")
-    if state.used + steps > state.max_len:
+    if pg is not None:
+        # per-row bound: a paged batch has no shared horizon, each live
+        # row just needs `steps` more slots under its own kv_cap.  With a
+        # refill the guard runs again after the drained rows are retired
+        # and re-admitted below.
+        if refill is None:
+            pg.check_steps(steps)
+    elif state.used + steps > state.max_len:
         raise ValueError(
             f"segment of {steps} steps overruns the cache: "
             f"{state.used} used of {state.max_len} slots")
@@ -342,10 +544,17 @@ def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
             "the identical key stream")
     key = state.key if state.key is not None else jax.random.PRNGKey(0)
     if refill is None:
-        gen, dec, last, caches, done, key = _scan_decode(
-            params, cfg, state.last_logits, state.caches, key, steps,
-            float(temperature), bool(stop_at_eos), state.positions,
-            state.done)
+        if pg is not None:
+            pg.ensure(steps)
+            gen, dec, last, caches, done, key = _paged_scan_decode(
+                params, cfg, state.last_logits, state.caches, key, steps,
+                float(temperature), bool(stop_at_eos), pg.spec,
+                pg.device_table(), state.positions, state.done)
+        else:
+            gen, dec, last, caches, done, key = _scan_decode(
+                params, cfg, state.last_logits, state.caches, key, steps,
+                float(temperature), bool(stop_at_eos), state.positions,
+                state.done)
         positions = state.positions
         used = state.used
     else:
@@ -368,15 +577,38 @@ def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
         _check_refill_lens(cfg, state, width, lens[mask])
         mlens = lens[mask]
         lens = np.where(mask, lens, 1)      # unmasked rows: any valid index
-        gen, dec, last, caches, done, key, positions = _refill_scan_decode(
-            params, cfg, state.last_logits, state.caches, key, steps,
-            float(temperature), bool(stop_at_eos), state.positions,
-            state.done, jnp.asarray(mask), jnp.asarray(prompts),
-            jnp.asarray(lens, jnp.int32))
+        if pg is not None:
+            # host-side admission before the launch: release whatever the
+            # refilled slots still hold (no-op if the serve loop retired
+            # them at sync), then allocate their prompt pages
+            for i in np.flatnonzero(mask):
+                if pg.row_preadmitted[i]:
+                    pg.row_preadmitted[i] = False   # reserved at admit time
+                else:
+                    pg.retire_row(int(i))
+                    pg.admit_row(int(i), int(lens[i]))
+            pg.check_steps(steps)
+            npg = _ceil_div(width, pg.page_size)
+            ids = jnp.asarray(pg.prompt_page_ids(mask, npg).reshape(-1))
+            pg.ensure(steps)
+            (gen, dec, last, caches, done, key,
+             positions) = _paged_refill_scan_decode(
+                params, cfg, state.last_logits, state.caches, key, steps,
+                float(temperature), bool(stop_at_eos), pg.spec,
+                pg.device_table(), state.positions, state.done,
+                jnp.asarray(mask), jnp.asarray(prompts),
+                jnp.asarray(lens, jnp.int32), ids)
+        else:
+            gen, dec, last, caches, done, key, positions = \
+                _refill_scan_decode(
+                    params, cfg, state.last_logits, state.caches, key, steps,
+                    float(temperature), bool(stop_at_eos), state.positions,
+                    state.done, jnp.asarray(mask), jnp.asarray(prompts),
+                    jnp.asarray(lens, jnp.int32))
         used = max(state.used, int(mlens.max()))
     new = DecodeState(caches, last, positions + steps, done,
                       key if state.key is not None else None,
-                      state.max_len, used + steps)
+                      state.max_len, used + steps, paged=pg)
     return new, gen, dec
 
 
@@ -420,13 +652,31 @@ def refill_slots(params, cfg: ModelConfig, state: DecodeState,
     if lens.shape != (r,):
         raise ValueError(f"prompt_lens shape {lens.shape} != ({r},)")
     _check_refill_lens(cfg, state, width, lens)
-    logits, caches = _prefill(params, cfg, jnp.asarray(arr))
-    caches = _pad_caches(caches, state.max_len, width)
     ridx = jnp.asarray(rows)
-    merged = jax.tree.map(
-        lambda full, new: full.at[:, ridx].set(
-            new[:, :r].astype(full.dtype)),
-        state.caches, caches)
+    if state.paged is not None:
+        pg = state.paged
+        for j, row in enumerate(rows):
+            if pg.row_preadmitted[row]:
+                pg.row_preadmitted[row] = False   # reserved at admit time
+            else:
+                pg.retire_row(int(row))
+                pg.admit_row(int(row), int(lens[j]))
+        npg = _ceil_div(width, pg.page_size)
+        # prompt-row j's page blocks land in slot rows[j]'s fresh pages;
+        # filler prompt rows (j >= r) scatter to trash
+        ids = np.full((p, npg), pg.pool.trash_page, np.int32)
+        for j, row in enumerate(rows):
+            ids[j] = pg.table[row, :npg]
+        logits, merged = _paged_refill_prefill(
+            params, cfg, jnp.asarray(arr), pg.page_size,
+            jnp.asarray(ids.reshape(-1)), state.caches)
+    else:
+        logits, caches = _prefill(params, cfg, jnp.asarray(arr))
+        caches = _pad_caches(caches, state.max_len, width)
+        merged = jax.tree.map(
+            lambda full, new: full.at[:, ridx].set(
+                new[:, :r].astype(full.dtype)),
+            state.caches, caches)
     plens = jnp.asarray(lens, jnp.int32)
     # gather over the first r (real) prefilled rows only
     last = _gather_last(logits[:r], plens)              # (r, V) f32

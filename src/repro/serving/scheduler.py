@@ -65,7 +65,14 @@ def decode_compile_counts() -> Dict[str, int]:
     return {"prefill": int(sampler.COMPILE_COUNTS["prefill"]),
             "scan_decode": int(sampler.COMPILE_COUNTS["scan_decode"]),
             "refill_scan_decode":
-                int(sampler.COMPILE_COUNTS["refill_scan_decode"])}
+                int(sampler.COMPILE_COUNTS["refill_scan_decode"]),
+            "paged_prefill": int(sampler.COMPILE_COUNTS["paged_prefill"]),
+            "paged_scan_decode":
+                int(sampler.COMPILE_COUNTS["paged_scan_decode"]),
+            "paged_refill_prefill":
+                int(sampler.COMPILE_COUNTS["paged_refill_prefill"]),
+            "paged_refill_scan_decode":
+                int(sampler.COMPILE_COUNTS["paged_refill_scan_decode"])}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +141,20 @@ class SchedulerStats:
     #                                 those slot-steps at PAD
     slot_steps_total: int = 0       # batch x decode-steps actually run
     slot_steps_active: int = 0      # of those, steps holding a live request
+    # paged-KV accounting (segment granularity, folded in by
+    # SlotRun.account / SlotRuntime._admit).  pages_in_use / kv_live_tokens
+    # are gauges (last retire's snapshot); the peaks are monotonic maxima.
+    # kv_peak_tokens is also set on the dense path (batch x max_len per
+    # run), so paged-vs-dense KV footprints compare through one counter.
+    kv_page_size: int = 0
+    pages_in_use: int = 0
+    pages_peak: int = 0
+    kv_live_tokens: int = 0
+    kv_peak_tokens: int = 0
+    admissions_deferred_on_pages: int = 0    # boundaries that idled a free
+    #                                          slot waiting for pool pages
+    admissions_deferred_on_horizon: int = 0  # dense counterpart (remaining
+    #                                          horizon below one budget)
     occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)       # (batch, len) bucket -> microbatch count
     queue_ages: Deque[float] = dataclasses.field(
@@ -149,6 +170,14 @@ class SchedulerStats:
         """Fraction of decode slot-steps that served a live request."""
         return (self.slot_steps_active / self.slot_steps_total
                 if self.slot_steps_total else 0.0)
+
+    @property
+    def page_fragmentation(self) -> float:
+        """Fraction of peak-allocated page capacity that never held a live
+        token — intra-page waste from partial last pages plus reserved-but-
+        unwritten budget headroom.  0.0 when no paged run has retired."""
+        cap = self.pages_peak * self.kv_page_size
+        return 1.0 - self.kv_peak_tokens / cap if cap else 0.0
 
     def queue_age_percentiles(self) -> Dict[str, float]:
         """Seconds spent queued, per emitted prompt (p50/p95/max)."""
@@ -174,6 +203,17 @@ class SchedulerStats:
                 "slot_steps": {"total": self.slot_steps_total,
                                "active": self.slot_steps_active},
                 "slot_occupancy": round(self.slot_occupancy, 4),
+                "kv_pages": {"page_size": self.kv_page_size,
+                             "in_use": self.pages_in_use,
+                             "peak": self.pages_peak,
+                             "live_tokens": self.kv_live_tokens,
+                             "peak_tokens": self.kv_peak_tokens,
+                             "fragmentation":
+                                 round(self.page_fragmentation, 4),
+                             "deferred_on_pages":
+                                 self.admissions_deferred_on_pages,
+                             "deferred_on_horizon":
+                                 self.admissions_deferred_on_horizon},
                 "queue_age_ms": {k: round(v * 1e3, 3)
                                  for k, v in ages.items()},
                 "buckets": {f"{b}x{l}": c
@@ -315,6 +355,14 @@ class MicrobatchScheduler:
             st.pad_tokens += width - len(it.prompt)
         st.queue_ages.append(self._clock() - it.t_submit)
         return it.tag, it.prompt, len(it.prompt)
+
+    def peek_one(self, width: Optional[int] = None) -> bool:
+        """Whether ``pop_one(width)`` would return a prompt — a
+        non-destructive probe so the serve runtime can tell an idle queue
+        apart from an admission deferred on capacity (and count only the
+        latter)."""
+        return any(q and (width is None or len(q[0].prompt) <= width)
+                   for q in self._queues.values())
 
     def ready(self) -> List[Microbatch]:
         """Pop every full largest-bucket microbatch currently assembled."""

@@ -198,3 +198,95 @@ def test_decode_attention_pallas_per_batch_lengths():
     got = da_pallas(q, kc, vc, lens, block_k=32)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
                                rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention: XLA gather path vs dense oracle (bit-exact), the
+# Pallas paged kernel vs both (interpret tolerance)
+# ---------------------------------------------------------------------------
+def _paged_layout(key, b, hkv, S, d, page_size, n_pages, perm_seed=0):
+    """A dense (b, hkv, S, d) cache scattered into a (n_pages+1, ...) page
+    store under a deliberately permuted page table — physical order must
+    not matter."""
+    kk, kv = jax.random.split(key)
+    kc = jax.random.normal(kk, (b, hkv, S, d)) * 0.5
+    vc = jax.random.normal(kv, (b, hkv, S, d)) * 0.5
+    n_w = S // page_size
+    assert b * n_w <= n_pages
+    rng = np.random.default_rng(perm_seed)
+    phys = rng.permutation(n_pages)[: b * n_w].reshape(b, n_w)
+    k_pages = jnp.zeros((n_pages + 1, hkv, page_size, d))
+    v_pages = jnp.zeros((n_pages + 1, hkv, page_size, d))
+    for i in range(b):
+        for w in range(n_w):
+            sl = slice(w * page_size, (w + 1) * page_size)
+            k_pages = k_pages.at[phys[i, w]].set(kc[i, :, sl])
+            v_pages = v_pages.at[phys[i, w]].set(vc[i, :, sl])
+    return kc, vc, k_pages, v_pages, jnp.asarray(phys, jnp.int32)
+
+
+PAGED_CASES = [
+    # b, hq, hkv, S, d, page_size, lens, softcap
+    (2, 4, 2, 128, 32, 16, (100, 128), 0.0),
+    (1, 8, 4, 64, 64, 8, (40,), 50.0),
+    (3, 4, 2, 96, 32, 32, (10, 77, 96), 0.0),
+]
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_decode_xla_bit_identical_to_dense(case):
+    """The gather-based paged path reconstructs the dense layout exactly
+    and feeds the same kernel: bitwise-equal outputs, any page
+    permutation, per-row lengths included."""
+    b, hq, hkv, S, d, page, lens, cap = case
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (b, hq, 1, d)) * 0.5
+    kc, vc, kp, vp, table = _paged_layout(
+        jax.random.PRNGKey(12), b, hkv, S, d, page, n_pages=64)
+    clen = jnp.asarray(lens, jnp.int32)
+    want = ops.decode_attention(q, kc, vc, clen, softcap=cap, impl="xla")
+    got = ops.paged_decode_attention(q, kp, vp, clen, table,
+                                     page_size=page, kv_cap=S, softcap=cap)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_decode_pallas_vs_xla(case):
+    from repro.kernels.decode_attention import KernelType
+    b, hq, hkv, S, d, page, lens, cap = case
+    key = jax.random.PRNGKey(13)
+    q = jax.random.normal(key, (b, hq, 1, d)) * 0.5
+    _, _, kp, vp, table = _paged_layout(
+        jax.random.PRNGKey(14), b, hkv, S, d, page, n_pages=64)
+    clen = jnp.asarray(lens, jnp.int32)
+    want = ops.paged_decode_attention(q, kp, vp, clen, table,
+                                      page_size=page, kv_cap=S, softcap=cap)
+    got = ops.paged_decode_attention(q, kp, vp, clen, table,
+                                     page_size=page, kv_cap=S, softcap=cap,
+                                     kernel=KernelType.PALLAS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_trash_page_is_inert():
+    """Garbage in the trash page (or any unreferenced page) cannot leak
+    into the output: only table-referenced, length-valid positions
+    contribute."""
+    b, hq, hkv, S, d, page = 1, 4, 2, 64, 32, 16
+    q = jax.random.normal(jax.random.PRNGKey(15), (b, hq, 1, d)) * 0.5
+    _, _, kp, vp, table = _paged_layout(
+        jax.random.PRNGKey(16), b, hkv, S, d, page, n_pages=32)
+    clen = jnp.asarray([40], jnp.int32)
+    base = ops.paged_decode_attention(q, kp, vp, clen, table,
+                                      page_size=page, kv_cap=S)
+    # poison the trash page and every page the table does not reference
+    used = set(np.asarray(table).ravel().tolist())
+    poison_k, poison_v = kp, vp
+    for pid in range(33):
+        if pid not in used:
+            poison_k = poison_k.at[pid].set(1e9)
+            poison_v = poison_v.at[pid].set(1e9)
+    # positions past clen inside a referenced page are masked to exact 0
+    got = ops.paged_decode_attention(q, poison_k, poison_v, clen, table,
+                                     page_size=page, kv_cap=S)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))

@@ -355,3 +355,91 @@ def test_tick_min_fill_caps_queue_occupancy(n, fill):
     assert all(mb.bucket[0] in cfg.batch_sizes for mb in mbs)
     mbs += sched.flush()
     assert sorted(t for mb in mbs for t in mb.tags) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV allocator (serving.kv_pool)
+# ---------------------------------------------------------------------------
+def _pool_trace():
+    """Op traces over a small PagedKV batch: admissions with arbitrary
+    prompt lengths, decode advances, retirements."""
+    return st.lists(st.one_of(
+        st.tuples(st.just("admit"), st.integers(0, 3), st.integers(1, 24)),
+        st.tuples(st.just("ensure"), st.integers(1, 6), st.just(0)),
+        st.tuples(st.just("retire"), st.integers(0, 3), st.just(0))),
+        min_size=1, max_size=50)
+
+
+@given(_pool_trace())
+@settings(max_examples=200, deadline=None)
+def test_kv_pool_alloc_release_invariants(ops):
+    """Any interleaving of admit / decode-advance / retire keeps the pool
+    consistent: no page is handed out twice, every live row's page table
+    covers exactly [0, row_high) with distinct non-trash pages, retired
+    rows point wholly at trash, and a fully-retired pool is whole again."""
+    from repro.serving.kv_pool import KVPool
+    pool = KVPool(n_pages=24, page_size=4)
+    pg = pool.attach(4, kv_cap=32, budget_steps=8)
+    live = set()
+    for op, row, arg in ops:
+        if op == "admit":
+            if pg.row_live[row] or not pg.can_admit(arg):
+                continue
+            pg.admit_row(row, arg)
+            live.add(row)
+        elif op == "ensure":
+            # mirror decode_segment's host guard before advancing
+            if live and int(pg.row_high[list(live)].max()) + row > pg.kv_cap:
+                continue
+            try:
+                pg.ensure(row)
+            except RuntimeError:
+                # a row past its own budget found the unreserved pool dry
+                # (legal, loud); the pool must stay consistent regardless
+                pass
+        else:
+            pg.retire_row(row)
+            live.discard(row)
+        # -- invariants after every op --
+        owned = [pid for r in range(4) for pid in pg.row_pages[r]]
+        assert len(owned) == len(set(owned)), "page double-allocated"
+        assert not (set(owned) & set(pool._free)), "owned page also free"
+        assert pool.trash_page not in owned
+        assert len(owned) + len(pool._free) == pool.n_pages, "page leaked"
+        assert pool.reserved >= 0 and pool.available() >= 0
+        for r in range(4):
+            n_covered = -(-int(pg.row_high[r]) // pg.page_size)
+            if pg.row_live[r]:
+                # table[:n_covered] are that row's distinct real pages...
+                ids = pg.table[r, :n_covered].tolist()
+                assert sorted(ids) == sorted(pg.row_pages[r][:n_covered])
+                assert pool.trash_page not in ids
+                # ...and nothing past the covered prefix is a real page
+                assert (pg.table[r, n_covered:] == pool.trash_page).all()
+            else:
+                assert (pg.table[r] == pool.trash_page).all()
+                assert not pg.row_pages[r]
+    for r in range(4):
+        pg.retire_row(r)
+    assert pool.pages_in_use == 0 and pool.reserved == 0
+    assert pool.available() == pool.n_pages
+    assert sorted(pool._free) == list(range(pool.n_pages))
+
+
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(0, 200))
+@settings(max_examples=200, deadline=None)
+def test_kv_pool_free_rejects_double_and_foreign(n_pages, page_size, seed):
+    """free() is exactly-once: double frees and out-of-range ids raise
+    instead of corrupting the free list."""
+    from repro.serving.kv_pool import KVPool
+    pool = KVPool(n_pages=n_pages, page_size=page_size)
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, n_pages + 1))
+    ids = pool.alloc(n)
+    pool.free(ids[: n // 2])
+    with pytest.raises(RuntimeError, match="free"):
+        pool.free([ids[0]] if n // 2 else [pool.n_pages])
+    with pytest.raises(RuntimeError, match="invalid"):
+        pool.free([pool.n_pages])       # the trash page is never pool-owned
+    pool.free(ids[n // 2:])
+    assert pool.available() == pool.n_pages

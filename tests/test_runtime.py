@@ -395,11 +395,11 @@ def real_engine(tiny_trained, world, retriever, library):
     cfg, params, _ = tiny_trained
     data = build_scope_data(world, n_queries=160, seed=9)
 
-    def mk():
+    def mk(**kw):
         return ScopeEngine.build(EngineConfig(
             estimator=ReasoningEstimator(cfg, params, max_new_tokens=6),
             retriever=retriever, library=library,
-            models_meta={m: world.models[m] for m in data.models}))
+            models_meta={m: world.models[m] for m in data.models}, **kw))
     return mk, data
 
 
@@ -705,3 +705,273 @@ def test_stream_deadline_flush_bounds_queue_age(real_engine):
     np.testing.assert_allclose(
         np.concatenate([p.p_hat for p in pools]), ref.p_hat,
         atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: sampler-level parity vs the dense oracle
+# ---------------------------------------------------------------------------
+def _paged_pair(cfg, params, prompts, lens, *, budget, pool_pages=64,
+                page_size=8, kernel=None):
+    """(dense state, paged state) over the same prompts — the paged kv_cap
+    equals the dense cache width, so the XLA paged path is bit-identical
+    by construction (gather -> slice -> the dense kernel)."""
+    from repro.kernels.decode_attention import KernelType
+    from repro.serving.kv_pool import KVPool
+    dense = sampler.prefill_state(params, cfg, prompts,
+                                  max_new_tokens=budget, prompt_lens=lens)
+    pool = KVPool(n_pages=pool_pages, page_size=page_size)
+    paged = sampler.prefill_state(params, cfg, prompts,
+                                  max_new_tokens=budget, prompt_lens=lens,
+                                  kv_pool=pool,
+                                  kv_kernel=kernel or KernelType.XLA)
+    return dense, paged, pool
+
+
+def test_paged_prefill_and_segments_bit_identical(tiny_trained):
+    """XLA paged decode == dense decode, bit for bit: ragged prompt lens,
+    multiple scan segments, per-row positions."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(10)
+    prompts = rng.integers(3, 100, size=(3, 20)).astype(np.int32)
+    lens = [20, 13, 7]
+    dense, paged, _ = _paged_pair(cfg, params, prompts, lens, budget=12)
+    np.testing.assert_array_equal(np.asarray(dense.last_logits),
+                                  np.asarray(paged.last_logits))
+    for steps in (5, 4, 3):
+        dense, g0, d0 = sampler.decode_segment(params, cfg, dense, steps)
+        paged, g1, d1 = sampler.decode_segment(params, cfg, paged, steps)
+        np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    np.testing.assert_array_equal(np.asarray(dense.positions),
+                                  np.asarray(paged.positions))
+    np.testing.assert_array_equal(np.asarray(dense.done),
+                                  np.asarray(paged.done))
+
+
+def test_paged_refill_segment_bit_identical(tiny_trained):
+    """The fused refill+decode executable matches dense under paging: the
+    refilled row restarts from its true length in fresh pages, the
+    untouched rows keep decoding bit-identically."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(3, 100, size=(3, 16)).astype(np.int32)
+    dense, paged, pool = _paged_pair(cfg, params, prompts, [16, 11, 16],
+                                     budget=14)
+    dense, g0, _ = sampler.decode_segment(params, cfg, dense, 4)
+    paged, g1, _ = sampler.decode_segment(params, cfg, paged, 4)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    fresh = rng.integers(3, 100, size=(16,)).astype(np.int32)
+    mask = np.array([False, True, False])
+    mat = np.zeros((3, 16), np.int32)
+    mat[1] = fresh
+    refill = (mask, mat, np.array([1, 12, 1], np.int64))
+    dense, g0, d0 = sampler.decode_segment(params, cfg, dense, 4,
+                                           refill=refill)
+    paged, g1, d1 = sampler.decode_segment(params, cfg, paged, 4,
+                                           refill=refill)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_paged_refill_slots_bit_identical(tiny_trained):
+    """``refill_slots`` (the standalone prefill-merge path) re-pages the
+    refilled rows and matches the dense scatter bit-for-bit."""
+    cfg, params, _ = tiny_trained
+    rng = np.random.default_rng(12)
+    prompts = rng.integers(3, 100, size=(3, 14)).astype(np.int32)
+    dense, paged, _ = _paged_pair(cfg, params, prompts, None, budget=10)
+    dense, _, _ = sampler.decode_segment(params, cfg, dense, 3)
+    paged, _, _ = sampler.decode_segment(params, cfg, paged, 3)
+    fresh = rng.integers(3, 100, size=(2, 14)).astype(np.int32)
+    dense = sampler.refill_slots(params, cfg, dense, [0, 2], fresh,
+                                 prompt_lens=[14, 9])
+    paged = sampler.refill_slots(params, cfg, paged, [0, 2], fresh,
+                                 prompt_lens=[14, 9])
+    np.testing.assert_array_equal(np.asarray(dense.last_logits),
+                                  np.asarray(paged.last_logits))
+    for steps in (4, 3):
+        dense, g0, d0 = sampler.decode_segment(params, cfg, dense, steps)
+        paged, g1, d1 = sampler.decode_segment(params, cfg, paged, steps)
+        np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_paged_pallas_kernel_matches_dense(tiny_trained):
+    """The Pallas paged kernel (interpret mode on CPU) reproduces the dense
+    token stream exactly; logits agree to kernel tolerance."""
+    cfg, params, _ = tiny_trained
+    from repro.kernels.decode_attention import KernelType
+    rng = np.random.default_rng(13)
+    prompts = rng.integers(3, 100, size=(3, 20)).astype(np.int32)
+    dense, paged, _ = _paged_pair(cfg, params, prompts, [20, 13, 7],
+                                  budget=10, kernel=KernelType.PALLAS)
+    for steps in (5, 5):
+        dense, g0, d0 = sampler.decode_segment(params, cfg, dense, steps)
+        paged, g1, d1 = sampler.decode_segment(params, cfg, paged, steps)
+        np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+        np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_pool_accounting_and_release(tiny_trained):
+    """Pages flow free-list -> rows -> free-list: prompt pages allocated at
+    admission, decode pages drawn from the row's reservation per segment,
+    everything returned on retire; peaks track live tokens, not slots."""
+    cfg, params, _ = tiny_trained
+    from repro.serving.kv_pool import KVPool
+    prompts = np.random.default_rng(14).integers(
+        3, 100, size=(2, 16)).astype(np.int32)
+    pool = KVPool(n_pages=12, page_size=8)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8,
+                                  kv_pool=pool)
+    # 16-token prompts: 2 pages allocated, 3 reserved (24-token worst case)
+    assert pool.pages_in_use == 4 and pool.reserved == 2
+    assert pool.live_tokens == 32
+    state, _, _ = sampler.decode_segment(params, cfg, state, 8)
+    assert pool.pages_in_use == 6 and pool.reserved == 0
+    assert pool.live_tokens == 48 and pool.tokens_peak == 48
+    pg = state.paged
+    pg.retire_row(0)
+    pg.retire_row(1)
+    assert pool.pages_in_use == 0 and pool.available() == 12
+    assert pool.live_tokens == 0 and pool.tokens_peak == 48
+    assert (pg.table == pool.trash_page).all()
+
+
+def test_paged_guards(tiny_trained):
+    cfg, params, _ = tiny_trained
+    from repro.serving.kv_pool import KVPool, check_paged_support
+    prompts = np.random.default_rng(15).integers(
+        3, 100, size=(2, 10)).astype(np.int32)
+    # a pool too small for even one full-budget row fails loudly at admit
+    with pytest.raises(ValueError, match="full-budget row"):
+        sampler.prefill_state(params, cfg, prompts, max_new_tokens=64,
+                              kv_pool=KVPool(n_pages=4, page_size=8))
+    # page size wider than the whole cache is a config error
+    with pytest.raises(ValueError, match="kv_page_size"):
+        sampler.prefill_state(params, cfg, prompts, max_new_tokens=4,
+                              kv_pool=KVPool(n_pages=8, page_size=64))
+    # decoding past a row's kv_cap is caught host-side before the launch
+    pool = KVPool(n_pages=16, page_size=8)
+    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=6,
+                                  kv_pool=pool)
+    with pytest.raises(ValueError, match="paged row"):
+        sampler.decode_segment(params, cfg, state, 7)
+    # non-GQA backbones are rejected up front
+    from repro.configs import get_config
+    with pytest.raises(ValueError, match="paged"):
+        check_paged_support(get_config("mamba2-1.3b").reduced())
+    with pytest.raises(ValueError, match="paged"):
+        check_paged_support(get_config("deepseek-v2-lite-16b").reduced())
+
+
+def test_slot_run_paged_matches_dense(tiny_trained):
+    """A paged SlotRun serves the same request set as the dense-horizon
+    run with identical parses, and drains the pool on retirement."""
+    cfg, params, _ = tiny_trained
+    from repro.serving.kv_pool import KVPool
+    est = ReasoningEstimator(cfg, params, max_new_tokens=8)
+    rng = np.random.default_rng(16)
+    prompts = rng.integers(3, 100, size=(4, 18)).astype(np.int32)
+    extra = [("e", list(rng.integers(3, 100, size=18).astype(np.int32))),
+             ("f", list(rng.integers(3, 100, size=18).astype(np.int32)))]
+
+    def drive(**kw):
+        run = est.open_slots(prompts, tags=["a", "b", "c", "d"],
+                             segment_len=4, **kw)
+        queue = list(extra)
+        results = {}
+        while not run.finished or queue:
+            if queue and run.free_rows() and run.can_admit():
+                n = min(len(queue), len(run.free_rows()))
+                run.admit([(t, p, len(p)) for t, p in queue[:n]])
+                del queue[:n]
+            tags_done, batch = run.step()
+            for i, t in enumerate(tags_done):
+                results[t] = (batch.y_hat[i], batch.len_hat[i],
+                              batch.pred_tokens[i], batch.p_conf[i])
+        return results
+
+    dense = drive()
+    pool = KVPool(n_pages=32, page_size=8)
+    paged = drive(kv_pool=pool)
+    assert set(dense) == set(paged) == set("abcdef")
+    for t in dense:
+        assert dense[t][:3] == paged[t][:3], t
+        np.testing.assert_allclose(dense[t][3], paged[t][3],
+                                   atol=1e-6, rtol=1e-6, err_msg=t)
+    # every page returned once the run retired
+    assert pool.pages_in_use == 0 and pool.reserved == 0
+    assert pool.pages_peak > 0 and pool.tokens_peak > 0
+
+
+def test_slot_run_paged_admission_gates_on_pages(tiny_trained):
+    """can_admit() in paged mode reflects the pool, not a horizon: a pool
+    sized for the opening rows only defers further admissions until a row
+    retires and frees its pages."""
+    cfg, params, _ = tiny_trained
+    from repro.serving.kv_pool import KVPool
+    est = ReasoningEstimator(cfg, params, max_new_tokens=8)
+    prompts = np.random.default_rng(17).integers(
+        3, 100, size=(3, 16)).astype(np.int32)
+    # exactly two worst-case rows: ceil((16+8)/8) = 3 pages each
+    pool = KVPool(n_pages=6, page_size=8)
+    run = est.open_slots(prompts, tags=["a"], kv_pool=pool, segment_len=4)
+    assert run.horizon is None and run.deferral_reason == "pages"
+    # rows 1-2 are free, but the live row's reservation leaves only 3
+    # pages — one more worst-case row: admit it, then the pool is dry
+    # even though a free slot remains
+    assert run.can_admit()
+    run.admit([("b", [5] * 10, 10)])
+    assert not run.can_admit() and run.free_rows() == [2]
+    with pytest.raises(ValueError, match="no room"):
+        run.admit([("c", [5] * 4, 4)])
+    while not run.finished:
+        run.step()
+    assert pool.pages_in_use == 0 and pool.reserved == 0
+
+
+def test_stream_paged_matches_dense_refill(real_engine):
+    """kv_paged engine streams route identically to the dense refill
+    stream, account page stats at segment granularity, and never exceed
+    the dense KV footprint."""
+    mk, data = real_engine
+    queries = [data.queries[int(q)] for q in data.test_qids[:7]]
+    ticks = [queries[:2], queries[2:3], queries[3:7]]
+
+    pools, scheds = {}, {}
+    for paged in (False, True):
+        sched = MicrobatchScheduler(BucketConfig(batch_sizes=(1, 2, 4, 8)))
+        kw = ({"kv_paged": True, "kv_page_size": 8} if paged else {})
+        pools[paged] = list(mk(refill=True, **kw).predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            segment_len=3))
+        scheds[paged] = sched
+    for field in ("y_hat", "len_hat", "well_formed", "cost_hat",
+                  "pred_overhead"):
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(getattr(p, field)) for p in
+                            pools[True]]),
+            np.concatenate([np.asarray(getattr(p, field)) for p in
+                            pools[False]]), err_msg=field)
+    np.testing.assert_allclose(
+        np.concatenate([p.p_hat for p in pools[True]]),
+        np.concatenate([p.p_hat for p in pools[False]]),
+        atol=1e-6, rtol=1e-6)
+    st = scheds[True].stats
+    assert st.kv_page_size == 8 and st.pages_peak > 0
+    assert st.kv_peak_tokens > 0
+    assert 0.0 <= st.page_fragmentation < 1.0
+    # paged peak KV never exceeds the dense whole-horizon commitment
+    assert st.kv_peak_tokens <= scheds[False].stats.kv_peak_tokens
+    d = st.as_dict()
+    assert d["kv_pages"]["peak"] == st.pages_peak
+
+
+def test_stream_paged_requires_refill(real_engine):
+    mk, data = real_engine
+    engine = mk(kv_paged=True)
+    with pytest.raises(ValueError, match="refill"):
+        list(engine.predict_stream(
+            iter([RouteRequest([data.queries[int(data.test_qids[0])]])]),
+            refill=False))
