@@ -28,6 +28,14 @@ Sections:
                     the refill stream beats whole-retire q/s at higher
                     occupancy with zero recompiles after warmup, and that
                     both streams make identical routing decisions
+  engine_chaos    — the refill workload under a deterministic
+                    ``FaultPlan``: segment teardowns retry/quarantine,
+                    a simulated KV-pool exhaustion fails one row, a parse
+                    group is scrambled, and a clock stall blows SLO
+                    deadlines; --smoke asserts exactly-once delivery, a
+                    consistent fault ledger, zero recompiles after
+                    warmup, and that the zero-fault plan is bit-identical
+                    to running with no plan at all
   stream_naive    — ``predict`` called per ragged tick (the pre-scheduler
                     behavior): every distinct tick size compiles a fresh
                     (batch, len) executable
@@ -464,6 +472,121 @@ def bench_paged(dense_engine, paged_engine, queries, *, bucket_sizes,
     ]
 
 
+def bench_chaos(engine, queries, *, bucket_sizes, segment_len: int = 4,
+                smoke: bool = False) -> List[Dict]:
+    """Fault-tolerant serving under a deterministic chaos plan.
+
+    Runs the ``engine_refill`` workload three ways on the paged engine:
+    no fault plan at all, ``FaultPlan.none()`` (must be bit-identical —
+    the asserted no-op), and a deterministic chaos plan mixing segment
+    teardowns (bounded retry + quarantine), a simulated KV-pool row
+    failure, a scrambled parse group, and one huge clock stall that blows
+    the SLO deadline of every prompt in flight.  Under chaos the smoke
+    gate asserts exactly-once delivery (every (query, model) pair answered
+    once), ledger consistency (non-OK pairs == degraded + failed ==
+    quarantined + deadline-expired prompts), and zero recompiles after
+    warmup — the retry/requeue machinery must reuse the warmed bucket
+    shapes, never invent new ones.
+    """
+    from repro.api import RouteRequest
+    from repro.core.status import STATUS_OK
+    from repro.serving.faults import FaultPlan, FaultSpec
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+    from repro.serving.scheduler import decode_compile_counts
+
+    seg = max(1, min(segment_len, int(engine.estimator.max_new_tokens)))
+    ticks = _as_ticks(queries, _tick_sizes(len(queries), max_tick=3))
+    cfg = BucketConfig(batch_sizes=bucket_sizes)
+    n_models = len(engine.registry.routable())
+
+    def stream():
+        sched = MicrobatchScheduler(cfg)
+        t0 = time.perf_counter()
+        pools = list(engine.predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            use_cache=False, refill=True, segment_len=seg))
+        return pools, time.perf_counter() - t0, sched
+
+    def cat(pools, field):
+        return np.concatenate([np.asarray(getattr(p, field)).reshape(-1)
+                               for p in pools])
+
+    # -- the asserted no-op: an empty plan must not perturb the stream --
+    engine.config.fault_plan = None
+    base_pools, _, _ = stream()
+    engine.config.fault_plan = FaultPlan.none()
+    none_pools, _, _ = stream()
+    noop_identical = all(
+        np.array_equal(cat(none_pools, f), cat(base_pools, f))
+        for f in ("p_hat", "y_hat", "len_hat", "well_formed", "cost_hat",
+                  "pred_overhead", "status"))
+
+    # -- deterministic chaos: replays identically on identical traffic -
+    chaos = FaultPlan([FaultSpec("segment", 1), FaultSpec("segment", 2),
+                       FaultSpec("segment", 4),
+                       FaultSpec("pool", 3, arg=1.0),
+                       FaultSpec("parse", 2),
+                       FaultSpec("stall", 8, arg=1e6)])
+    engine.config.fault_plan = chaos
+    engine.config.deadline_ms = 60_000.0
+    engine.config.max_retries = 1
+    try:
+        stream()                        # warm the retry/flush shapes
+        warmed = decode_compile_counts()
+        pools, dt, sched = stream()
+        recompiles = _compile_delta(warmed, decode_compile_counts())
+    finally:
+        engine.config.fault_plan = None
+        engine.config.deadline_ms = None
+        engine.config.max_retries = 2
+    st = sched.stats
+    status = cat(pools, "status")
+    n_pairs = len(queries) * n_models
+    exactly_once = status.size == n_pairs
+    n_degraded = int((status != STATUS_OK).sum())
+    ledger_consistent = (
+        n_degraded == st.degraded + st.failed_pairs
+        == st.quarantined + st.deadline_expired)
+    if smoke:
+        assert noop_identical, (
+            "FaultPlan.none() perturbed the stream — the zero-fault path "
+            "must be bit-identical to running without a plan")
+        assert exactly_once, (
+            f"chaos stream answered {status.size} pairs for {n_pairs} "
+            f"submitted — exactly-once delivery broke")
+        assert st.injected_faults > 0 and st.retries > 0, (
+            "the chaos plan never fired / never reached the retry path")
+        assert st.quarantined > 0, (
+            "no prompt exhausted max_retries under repeated segment faults")
+        assert st.deadline_expired > 0, (
+            "the injected clock stall expired no deadlines")
+        assert st.kv_exhausted_rows > 0, (
+            "the injected pool fault failed no row")
+        assert n_degraded > 0 and ledger_consistent, (
+            f"fault ledger inconsistent: {n_degraded} non-OK pairs, "
+            f"degraded={st.degraded} failed={st.failed_pairs} "
+            f"quarantined={st.quarantined} "
+            f"deadline_expired={st.deadline_expired}")
+        assert recompiles == 0, (
+            f"chaos stream recompiled {recompiles} executables after "
+            f"warmup — retries and requeues must reuse the warmed bucket "
+            f"shapes")
+    return [{
+        "name": "serve_throughput/engine_chaos",
+        "qps": len(queries) / dt,
+        "detail": {"queries": len(queries), "pairs": n_pairs,
+                   "injected_faults": st.injected_faults,
+                   "retries": st.retries, "requeued": st.requeued,
+                   "quarantined": st.quarantined,
+                   "deadline_expired": st.deadline_expired,
+                   "kv_exhausted_rows": st.kv_exhausted_rows,
+                   "degraded_fraction": round(st.degraded_fraction, 4),
+                   "noop_identical": noop_identical,
+                   "exactly_once": exactly_once,
+                   "ledger_consistent": ledger_consistent,
+                   "recompiles_after_warmup": recompiles}}]
+
+
 def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
     """Bucketed stream with the estimator placed on the serve mesh."""
     import jax
@@ -529,6 +652,9 @@ def run(bundle) -> List[Tuple[str, float, str]]:
                          bucket_sizes=BUCKETS)
     rows += bench_paged(bundle.engine(bundle.seen),
                         bundle.engine(bundle.seen, kv_paged=True,
+                                      kv_page_size=8),
+                        queries, bucket_sizes=BUCKETS)
+    rows += bench_chaos(bundle.engine(bundle.seen, kv_paged=True,
                                       kv_page_size=8),
                         queries, bucket_sizes=BUCKETS)
     rows += bench_sharded(bundle.engine(bundle.seen), queries,
@@ -638,6 +764,8 @@ def main(argv=None) -> int:
         rows += bench_paged(trained, tpaged, tqueries,
                             bucket_sizes=(1, 2, 4, 8),
                             repeats=args.repeats or 2, smoke=True)
+        rows += bench_chaos(tpaged, tqueries, bucket_sizes=(1, 2, 4, 8),
+                            smoke=True)
         rows += bench_sharded(engine, queries, bucket_sizes=(1, 2, 4, 8))
         _emit(rows, smoke=True)
         print("# smoke asserts passed: zero recompiles after warmup, "
@@ -645,7 +773,9 @@ def main(argv=None) -> int:
               "deadline flush ships partial buckets, refill stream beats "
               "whole-retire q/s at higher slot occupancy with identical "
               "routing decisions, paged KV bit-identical to dense at "
-              "lower peak KV tokens")
+              "lower peak KV tokens, chaos stream delivers every pair "
+              "exactly once with a consistent fault ledger and the "
+              "zero-fault plan bit-identical to no plan")
     else:
         from benchmarks.common import get_bundle
         rows_csv = run(get_bundle())

@@ -18,6 +18,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.status import STATUS_OK
 from repro.data.worldsim import Query
 
 
@@ -30,13 +31,20 @@ def query_key(query: Query) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class CachedPrediction:
-    """The estimator's raw parsed output for one (query, model) pair."""
+    """The estimator's raw parsed output for one (query, model) pair.
+
+    ``status`` marks degraded-mode entries (``core.status``): a DEGRADED
+    entry is a provisional answer from retrieval priors, and the cache
+    lets a later full (OK) prediction overwrite it while never allowing
+    the reverse — the tier-0/tier-1 overwrite scheme.
+    """
     y_hat: int
     len_hat: float
     well_formed: bool
     p_conf: float
     pred_tokens: int            # overhead spent when this entry was computed
     prompt_tokens: int          # serialized prompt length (cost accounting)
+    status: int = STATUS_OK
 
 
 @dataclasses.dataclass
@@ -53,6 +61,7 @@ class CachedBatch:
     p_conf: np.ndarray          # (Q,) float
     pred_tokens: np.ndarray     # (Q,) int
     prompt_tokens: np.ndarray   # (Q,) int
+    status: np.ndarray          # (Q,) int8 (core.status codes)
 
 
 @dataclasses.dataclass
@@ -101,9 +110,22 @@ class PredictionCache:
         self.stats.hits += 1
         return entry
 
+    def _downgrades(self, key: Tuple[int, str, str],
+                    pred: CachedPrediction) -> bool:
+        """Whether writing ``pred`` would replace a full prediction with a
+        degraded one.  OK entries overwrite anything (a late real decode
+        heals the degraded entry written at quarantine/expiry); non-OK
+        entries never clobber an existing OK entry."""
+        if pred.status == STATUS_OK:
+            return False
+        old = self._store.get(key)
+        return old is not None and old.status == STATUS_OK
+
     def put(self, query_id: int, model: str, version: str,
             pred: CachedPrediction) -> None:
         key = (query_id, model, version)
+        if self._downgrades(key, pred):
+            return
         self._store[key] = pred
         self._store.move_to_end(key)
         if self.capacity is not None:
@@ -125,7 +147,7 @@ class PredictionCache:
             mask=np.zeros(n, bool), y_hat=np.zeros(n, int),
             len_hat=np.zeros(n, np.float64), well_formed=np.zeros(n, bool),
             p_conf=np.zeros(n, np.float64), pred_tokens=np.zeros(n, int),
-            prompt_tokens=np.zeros(n, int))
+            prompt_tokens=np.zeros(n, int), status=np.zeros(n, np.int8))
         store = self._store
         hits = 0
         for i, qid in enumerate(query_ids):
@@ -142,6 +164,7 @@ class PredictionCache:
             out.p_conf[i] = e.p_conf
             out.pred_tokens[i] = e.pred_tokens
             out.prompt_tokens[i] = e.prompt_tokens
+            out.status[i] = e.status
         self.stats.hits += hits
         self.stats.misses += n - hits
         return out
@@ -153,6 +176,8 @@ class PredictionCache:
             raise ValueError(f"{len(keys)} keys for {len(preds)} entries")
         store = self._store
         for key, pred in zip(keys, preds):
+            if self._downgrades(key, pred):
+                continue
             store[key] = pred
             store.move_to_end(key)
         if self.capacity is not None:

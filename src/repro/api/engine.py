@@ -24,10 +24,11 @@ query set costs O(Q) new estimator calls instead of an O(Q x M) recompute.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import (
-    TYPE_CHECKING, Deque, Dict, Iterable, Iterator, List, Optional, Sequence,
-    Tuple)
+    TYPE_CHECKING, Any, Deque, Dict, Iterable, Iterator, List, Optional,
+    Sequence, Tuple)
 
 import jax
 import numpy as np
@@ -41,6 +42,7 @@ from repro.api.types import (
 from repro.core import calibration, serialization, utility
 from repro.core.fingerprint import Fingerprint
 from repro.core.router import PoolPredictions
+from repro.core.status import STATUS_OK, status_name
 from repro.data.datasets import ScopeData
 from repro.data.worldsim import PoolModel, World
 
@@ -67,6 +69,7 @@ class _PredictState:
     missing: np.ndarray         # (n, 2) row-major (query, model) misses
     prompts: List[List[int]]    # serialized prompt per missing pair
     use_cache: bool
+    status: Optional[np.ndarray] = None     # (Q, M) core.status codes
 
 
 class _StreamEntry:
@@ -83,6 +86,7 @@ class _StreamEntry:
         self.p_conf = np.zeros(n, np.float64)
         self.pred_tokens = np.zeros(n, int)
         self.rationale_len = np.zeros(n, int)
+        self.status = np.full(n, STATUS_OK, np.int8)
 
     def fill(self, i: int, batch, row: int, *, shared: bool = False) -> None:
         """``shared=True`` marks a pair that rode an in-flight duplicate's
@@ -93,12 +97,162 @@ class _StreamEntry:
         self.p_conf[i] = batch.p_conf[row]
         self.pred_tokens[i] = 0 if shared else batch.pred_tokens[row]
         self.rationale_len[i] = batch.rationale_len[row]
+        self.status[i] = batch.status[row]
         self.remaining -= 1
 
     def parsed(self):
         from repro.core.estimator import ParsedBatch
         return ParsedBatch(self.y_hat, self.len_hat, self.well_formed,
-                           self.p_conf, self.pred_tokens, self.rationale_len)
+                           self.p_conf, self.pred_tokens, self.rationale_len,
+                           status=self.status)
+
+
+def _mb_rows(mb) -> List[Tuple[Any, List[int]]]:
+    """(tag, prompt) per real row of a failed microbatch, for requeue."""
+    return [(mb.tags[r], mb.tokens[r, : mb.lengths[r]].tolist())
+            for r in range(mb.n_real)]
+
+
+class _StreamControl:
+    """Per-stream fault tolerance: bounded retry/requeue, quarantine, SLO
+    deadlines, and degraded answers from retrieval priors.
+
+    One instance per ``predict_stream`` call.  It owns the stream's
+    ``FaultInjector`` (a no-op without an ``EngineConfig.fault_plan``) and
+    the per-prompt failure ledger: ``attempts`` counts failures per
+    in-flight dedup key, ``unresolved`` is the ordered set of keys whose
+    waiters have not been answered yet, ``t_submit``/``n_prompt`` back the
+    deadline check and late cache writes.  Exactly-once delivery is the
+    invariant everything here preserves: a key leaves ``unresolved`` the
+    moment its waiters are filled — by a real parse (``note_resolved`` via
+    ``_stream_fill``) or by ``degrade`` — and every later event on that
+    key (a requeue race, a late parse of an expired row) only touches the
+    cache, never the waiters.
+    """
+
+    def __init__(self, engine: "ScopeEngine", sched, inflight: Dict,
+                 use_cache: bool):
+        from repro.core.estimator import FallbackEstimator
+        from repro.serving.faults import FaultInjector
+        cfg = engine.config
+        self.engine = engine
+        self.sched = sched
+        self.inflight = inflight
+        self.use_cache = use_cache
+        self.injector = FaultInjector(cfg.fault_plan)
+        self.max_retries = int(cfg.max_retries)
+        self.backoff_s = float(cfg.retry_backoff_s)
+        self.deadline_s = (None if cfg.deadline_ms is None
+                           else float(cfg.deadline_ms) / 1e3)
+        self.fallback = FallbackEstimator(engine.library)
+        self.attempts: Dict[Any, int] = {}
+        self.t_submit: Dict[Any, float] = {}
+        self.n_prompt: Dict[Any, int] = {}
+        self.unresolved: Dict[Any, bool] = {}   # insertion-ordered set
+        self.sleep = time.sleep                 # injectable in tests
+
+    def now(self) -> float:
+        """Deadline time base: the scheduler's (injectable) clock plus the
+        seconds injected by fired ``stall`` faults."""
+        return self.sched.now() + self.injector.stall_offset
+
+    # -- ledger --------------------------------------------------------
+    def note_submit(self, key, prompt) -> None:
+        """A key was scheduled (fresh, or fresh again after an earlier
+        resolution): reset its deadline epoch and failure budget."""
+        self.t_submit[key] = self.now()
+        self.n_prompt[key] = len(prompt)
+        self.attempts.pop(key, None)
+        self.unresolved[key] = True
+
+    def note_resolved(self, key) -> None:
+        self.unresolved.pop(key, None)
+
+    def prompt_tokens(self, key) -> int:
+        return self.n_prompt.get(key, 0)
+
+    # -- injection hooks ------------------------------------------------
+    def pre_dispatch(self) -> None:
+        """Microbatch-launch boundary: one stall event, one dispatch event."""
+        self.injector.tick("stall")
+        self.injector.raise_if("dispatch")
+
+    def corrupt(self, batch):
+        return self.injector.corrupt_parse(batch)
+
+    # -- bounded retry / quarantine --------------------------------------
+    def on_failed(self, rows, exc: Optional[Exception] = None) -> None:
+        """Route one failure event's rows (``[(key, prompt)]``) back into
+        the scheduler, quarantining rows past their retry budget.  Keys no
+        longer unresolved (already answered degraded — e.g. a deadline
+        expiry racing the in-flight decode) are dropped: their requests
+        were served exactly once already."""
+        stats = self.sched.stats
+        stats.retries += 1
+        worst = 0
+        for key, prompt in rows:
+            if key not in self.unresolved:
+                continue
+            n = self.attempts.get(key, 0) + 1
+            self.attempts[key] = n
+            if n <= self.max_retries:
+                worst = max(worst, n)
+                self.sched.requeue(key, prompt)
+            else:
+                stats.quarantined += 1
+                self.degrade(key)
+        if worst and self.backoff_s > 0.0:
+            self.sleep(self.backoff_s * (2 ** (worst - 1)))
+
+    def on_failed_mb(self, mb, exc: Optional[Exception] = None) -> None:
+        self.on_failed(_mb_rows(mb), exc)
+
+    # -- SLO deadlines ----------------------------------------------------
+    def expire(self) -> None:
+        """Answer every unresolved key past its deadline in degraded mode.
+        Queued rows are cancelled outright; in-flight rows keep decoding
+        and their late parse heals the cache entry."""
+        if self.deadline_s is None or not self.unresolved:
+            return
+        now = self.now()
+        for key in list(self.unresolved):
+            if now - self.t_submit[key] < self.deadline_s:
+                continue
+            self.sched.cancel(key)
+            self.sched.stats.deadline_expired += 1
+            self.degrade(key)
+
+    # -- graceful degradation ---------------------------------------------
+    def degrade(self, key) -> None:
+        """Answer every waiter on ``key`` from retrieval priors (or mark
+        the pair FAILED when ``EngineConfig.degrade`` is off) and resolve
+        the key.  All waiters share one fallback row — they are the same
+        (query, model) content by construction of the dedup key."""
+        waiters = self.inflight.pop(key, None)
+        self.note_resolved(key)
+        if not waiters:
+            return
+        cfg = self.engine.config
+        stats = self.sched.stats
+        owner, miss_i = waiters[0]
+        st = owner.state
+        qi, mi = st.missing[miss_i]
+        if cfg.degrade:
+            batch = self.fallback.predict_pairs(
+                st.sims[qi:qi + 1], st.idx[qi:qi + 1], [st.models[mi]])
+            stats.degraded += 1
+        else:
+            batch = self.fallback.failed_pairs(1)
+            stats.failed_pairs += 1
+        for j, (entry, i) in enumerate(waiters):
+            entry.fill(i, batch, 0, shared=j > 0)
+        if self.use_cache and cfg.degrade:
+            self.engine.cache.put_many([key], [CachedPrediction(
+                y_hat=int(batch.y_hat[0]), len_hat=float(batch.len_hat[0]),
+                well_formed=bool(batch.well_formed[0]),
+                p_conf=float(batch.p_conf[0]), pred_tokens=0,
+                prompt_tokens=self.prompt_tokens(key),
+                status=int(batch.status[0]))])
 
 
 class ScopeEngine:
@@ -186,7 +340,8 @@ class ScopeEngine:
                                  np.zeros((Q, M), bool), np.zeros((Q, M), int),
                                  np.zeros((Q, M)), np.zeros((Q, M), bool),
                                  np.zeros((Q, M)), np.zeros((Q, M)),
-                                 np.zeros((0, 2), int), [], use_cache)
+                                 np.zeros((0, 2), int), [], use_cache,
+                                 status=np.zeros((Q, M), np.int8))
         for m in models:
             if m not in self.registry:
                 raise KeyError(f"model {m!r} is not registered; "
@@ -209,6 +364,7 @@ class ScopeEngine:
         wf = np.zeros((Q, M), bool)
         p_conf = np.zeros((Q, M))
         prompt_tok = np.zeros((Q, M))
+        status = np.full((Q, M), STATUS_OK, np.int8)
         if use_cache:
             for mi, m in enumerate(models):
                 col: CachedBatch = self.cache.get_many(qkeys, m, version)
@@ -218,6 +374,7 @@ class ScopeEngine:
                 wf[:, mi] = col.well_formed
                 p_conf[:, mi] = col.p_conf
                 prompt_tok[:, mi] = col.prompt_tokens
+                status[:, mi] = np.where(col.mask, col.status, STATUS_OK)
 
         missing = np.argwhere(~hit)                     # (n, 2) row-major
         prompts: List[List[int]] = []
@@ -229,7 +386,7 @@ class ScopeEngine:
                 sims[qi], idx[qi], queries[qi]))
         return _PredictState(models, queries, qkeys, sims, idx, hit, y_hat,
                              len_hat, wf, p_conf, prompt_tok, missing,
-                             prompts, use_cache)
+                             prompts, use_cache, status=status)
 
     def _finalize(self, st: "_PredictState", batch, *,
                   put_cache: bool = True) -> PoolPredictions:
@@ -258,6 +415,8 @@ class ScopeEngine:
             wf[mq, mm] = batch.well_formed
             p_conf[mq, mm] = batch.p_conf
             prompt_tok[mq, mm] = plens
+            if st.status is not None:
+                st.status[mq, mm] = batch.status
             # cached pairs spend no new estimator tokens on this call
             overhead[mq, mm] = batch.pred_tokens
             if st.use_cache and put_cache:
@@ -267,7 +426,8 @@ class ScopeEngine:
                     well_formed=bool(batch.well_formed[i]),
                     p_conf=float(batch.p_conf[i]),
                     pred_tokens=int(batch.pred_tokens[i]),
-                    prompt_tokens=int(plens[i]))
+                    prompt_tokens=int(plens[i]),
+                    status=int(batch.status[i]))
                     for i in range(len(missing))]
                 self.cache.put_many(
                     [(st.qkeys[qi], st.models[mi], cfg.estimator_version)
@@ -284,7 +444,8 @@ class ScopeEngine:
         return PoolPredictions(st.models, p_hat, y_hat, lh, cost_hat, wf,
                                overhead, st.sims, st.idx,
                                cache_hits=int(st.hit.sum()),
-                               cache_misses=len(missing))
+                               cache_misses=len(missing),
+                               status=st.status)
 
     def predict(self, request: RouteRequest, *,
                 rng: Optional[jax.Array] = None,
@@ -311,20 +472,36 @@ class ScopeEngine:
             return dispatch(mb.tokens, prompt_lens=mb.lengths, rng=rng)
         return self._run_estimator(mb.tokens, rng)
 
-    def _stream_fill(self, inflight, use_cache):
+    def _stream_fill(self, inflight, use_cache, control=None):
         """Parse consumer shared by the stream paths: scatter one parse
         group's rows into every waiting request (duplicates ride the first
         waiter's generation at zero extra tokens) and write the cache per
         group — the moment generations parse, before the owning request
-        drains."""
+        drains.
+
+        ``pop(key, None)``: a parsed key may have no waiters left — its
+        request was already answered degraded (a deadline expiry or an
+        abort racing the in-flight decode).  The late full result still
+        reaches the cache, healing the provisional degraded entry, and the
+        unconditional pop guarantees the dedup map never retains a key
+        past its resolution, whichever path resolved it.
+        """
         def fill(tags, batch):
             keys, entries = [], []
             for row, key in enumerate(tags):
-                waiters = inflight.pop(key)
-                for j, (entry, miss_i) in enumerate(waiters):
-                    entry.fill(miss_i, batch, row, shared=j > 0)
+                waiters = inflight.pop(key, None)
+                if control is not None:
+                    control.note_resolved(key)
+                if waiters:
+                    for j, (entry, miss_i) in enumerate(waiters):
+                        entry.fill(miss_i, batch, row, shared=j > 0)
                 if use_cache:
-                    owner, miss_i = waiters[0]          # true token spend
+                    if waiters:                         # true token spend
+                        owner, miss_i = waiters[0]
+                        n_prompt = len(owner.state.prompts[miss_i])
+                    else:                               # late heal
+                        n_prompt = (control.prompt_tokens(key)
+                                    if control is not None else 0)
                     keys.append(key)
                     entries.append(CachedPrediction(
                         y_hat=int(batch.y_hat[row]),
@@ -332,13 +509,14 @@ class ScopeEngine:
                         well_formed=bool(batch.well_formed[row]),
                         p_conf=float(batch.p_conf[row]),
                         pred_tokens=int(batch.pred_tokens[row]),
-                        prompt_tokens=len(owner.state.prompts[miss_i])))
+                        prompt_tokens=n_prompt,
+                        status=int(batch.status[row])))
             if keys:
                 self.cache.put_many(keys, entries)
         return fill
 
     def _submit_misses(self, st, entry, sched, inflight, use_cache,
-                       serial: int) -> int:
+                       serial: int, control=None) -> int:
         """Queue a request's missing (query, model) prompts; a pair whose
         key duplicates one still in flight shares that generation instead
         of being scheduled again."""
@@ -351,6 +529,8 @@ class ScopeEngine:
             if not use_cache:           # uncached: never share work
                 key, serial = ("uncached", serial), serial + 1
             inflight[key] = [(entry, miss_i)]
+            if control is not None:
+                control.note_submit(key, prompt)
             sched.submit(key, prompt)
         return serial
 
@@ -461,7 +641,8 @@ class ScopeEngine:
         # (query_key, model, version) -> waiters; the first waiter's prompt
         # is the one scheduled, later duplicates ride along
         inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
-        fill = self._stream_fill(inflight, use_cache)
+        control = _StreamControl(self, sched, inflight, use_cache)
+        fill = self._stream_fill(inflight, use_cache, control)
         serial = 0                          # unique keys for uncached pairs
         # decode-slot occupancy: whole-retire runs every bucket the full
         # budget; pad rows and post-EOS steps idle (duck-typed estimators
@@ -469,15 +650,20 @@ class ScopeEngine:
         budget = int(getattr(self.estimator, "max_new_tokens", 0) or 0)
 
         def on_parsed(mb, batch):
+            batch = control.corrupt(batch)
             fill(mb.tags, batch)
             if budget:
                 sched.stats.slot_steps_total += mb.tokens.shape[0] * budget
                 sched.stats.slot_steps_active += int(
                     batch.pred_tokens[: mb.n_real].sum())
 
+        def dispatch_fn(mb):
+            control.pre_dispatch()
+            return self._dispatch_microbatch(mb, rng)
+
         runtime = ServeRuntime(
-            lambda mb: self._dispatch_microbatch(mb, rng),
-            on_parsed=on_parsed, max_pending=max_pending)
+            dispatch_fn, on_parsed=on_parsed, max_pending=max_pending,
+            on_failed=control.on_failed_mb)
 
         def drain_completed():
             while pending and pending[0].remaining == 0:
@@ -485,17 +671,26 @@ class ScopeEngine:
                 yield self._finalize(entry.state, entry.parsed(),
                                      put_cache=False)
 
-        for request in requests:
-            st = self._prepare(request, use_cache)
-            entry = _StreamEntry(st)
-            pending.append(entry)
-            serial = self._submit_misses(st, entry, sched, inflight,
-                                         use_cache, serial)
-            runtime.dispatch(sched.tick())
-            runtime.poll()                  # free parses: device already done
-            yield from drain_completed()
-        runtime.dispatch(sched.flush())
-        runtime.finish()
+        with runtime:
+            for request in requests:
+                st = self._prepare(request, use_cache)
+                entry = _StreamEntry(st)
+                pending.append(entry)
+                serial = self._submit_misses(st, entry, sched, inflight,
+                                             use_cache, serial, control)
+                runtime.dispatch(sched.tick())
+                runtime.poll()              # free parses: device already done
+                control.expire()
+                yield from drain_completed()
+            # shutdown drains until the retry machinery settles: a failed
+            # microbatch requeues its rows mid-flush, so flush + parse
+            # until both the queue and the pipeline are empty (bounded by
+            # max_retries — every key ends parsed or quarantined)
+            while len(sched) or len(runtime):
+                runtime.dispatch(sched.flush())
+                runtime.finish()
+                control.expire()
+            sched.stats.injected_faults = control.injector.fired
         yield from drain_completed()
         assert not pending, "stream ended with unresolved requests"
 
@@ -559,10 +754,17 @@ class ScopeEngine:
 
         pending: Deque[_StreamEntry] = deque()
         inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
+        control = _StreamControl(self, sched, inflight, use_cache)
+        fill = self._stream_fill(inflight, use_cache, control)
+
+        def on_parsed(tags, batch):
+            fill(tags, control.corrupt(batch))
+
         runtime = SlotRuntime(open_fn, sched, segment_len=segment_len,
-                              on_parsed=self._stream_fill(inflight,
-                                                          use_cache),
-                              horizon=cfg.refill_horizon, rng=rng)
+                              on_parsed=on_parsed,
+                              horizon=cfg.refill_horizon, rng=rng,
+                              injector=control.injector,
+                              on_failed=control.on_failed)
         serial = 0
 
         def drain_completed():
@@ -576,10 +778,18 @@ class ScopeEngine:
             entry = _StreamEntry(st)
             pending.append(entry)
             serial = self._submit_misses(st, entry, sched, inflight,
-                                         use_cache, serial)
+                                         use_cache, serial, control)
             runtime.pump(final=False)
+            control.expire()
             yield from drain_completed()
         runtime.pump(final=True)
+        control.expire()
+        # deadline expiry between pumps may strand nothing, but a late
+        # requeue can: drain until the queue and the slot state settle
+        while len(sched) or len(runtime):
+            runtime.pump(final=True)
+            control.expire()
+        sched.stats.injected_faults = control.injector.fired
         yield from drain_completed()
         assert not pending, "stream ended with unresolved requests"
 
@@ -683,11 +893,16 @@ class ScopeEngine:
             RouteDecision(query_id=int(q), model=pool.models[int(c)],
                           alpha=decision.alpha,
                           p_hat=float(pool.p_hat[i, c]),
-                          cost_hat=float(pool.cost_hat[i, c]))
+                          cost_hat=float(pool.cost_hat[i, c]),
+                          status=("OK" if pool.status is None else
+                                  status_name(int(pool.status[i, c]))))
             for i, (q, c) in enumerate(zip(query_ids, choices))]
         share = {m: 0 for m in pool.models}
         for d in decisions:
             share[d.model] += 1
+        info = dict(decision.info, **(extra_info or {}))
+        if pool.status is not None and pool.degraded_fraction > 0.0:
+            info["degraded_fraction"] = round(pool.degraded_fraction, 4)
         return BatchReport(
             policy=policy_name, alpha=decision.alpha, decisions=decisions,
             accuracy=accuracy, total_cost=total_cost,
@@ -695,7 +910,7 @@ class ScopeEngine:
             overhead_tokens=int(pool.pred_overhead.sum()),
             per_model_share={m: v / len(decisions) for m, v in share.items()},
             cache_hits=pool.cache_hits, cache_misses=pool.cache_misses,
-            executed=executed, info=dict(decision.info, **(extra_info or {})))
+            executed=executed, info=info)
 
     # -- routing verbs -------------------------------------------------
     def route(self, request: RouteRequest, policy: RoutingPolicy, *,

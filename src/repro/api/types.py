@@ -22,6 +22,7 @@ if TYPE_CHECKING:                               # components, no runtime cycle
     from repro.core.fingerprint import FingerprintLibrary
     from repro.core.retrieval import AnchorRetriever
     from repro.data.worldsim import PoolModel
+    from repro.serving.faults import FaultPlan
 
 
 @dataclasses.dataclass
@@ -66,6 +67,19 @@ class EngineConfig:
     kv_kernel: str = "xla"          # paged decode-attention impl:
     #                                 "xla" (gather, bit-parity with dense)
     #                                 or "pallas"
+    # fault tolerance (stream paths): a failed microbatch / slot segment
+    # requeues its rows and retries up to max_retries times (exponential
+    # backoff from retry_backoff_s); rows that keep failing are
+    # quarantined and answered from retrieval priors (degrade=True) or
+    # marked FAILED.  deadline_ms bounds a request's queue + in-flight
+    # age — past it the pair is answered degraded immediately.
+    # fault_plan (serving.faults.FaultPlan) injects deterministic chaos;
+    # None and FaultPlan.none() are bit-identical no-ops.
+    max_retries: int = 2
+    retry_backoff_s: float = 0.0
+    deadline_ms: Optional[float] = None
+    degrade: bool = True
+    fault_plan: Optional["FaultPlan"] = None
 
 
 @dataclasses.dataclass
@@ -91,6 +105,8 @@ class RouteDecision:
     alpha: Optional[float]
     p_hat: float                # estimator's P(correct) for the chosen model
     cost_hat: float             # predicted $ for the chosen model
+    status: str = "OK"          # how the chosen pair was estimated
+    #                             (core.status: OK / DEGRADED / FAILED)
 
 
 @dataclasses.dataclass

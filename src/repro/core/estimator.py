@@ -19,6 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.status import STATUS_DEGRADED, STATUS_FAILED, STATUS_OK
 from repro.data import tokenizer as tok
 from repro.serving import sampler
 
@@ -35,13 +36,24 @@ class Prediction:
 
 @dataclasses.dataclass
 class ParsedBatch:
-    """Columnar predictions for N generations (the serve-path layout)."""
+    """Columnar predictions for N generations (the serve-path layout).
+
+    ``status`` (``core.status``) marks how each row was answered: OK rows
+    came off a real decode, DEGRADED rows from retrieval priors, FAILED
+    rows not at all.  Defaulting to all-OK keeps every existing
+    constructor call (and the parser) unchanged.
+    """
     y_hat: np.ndarray           # (N,) int
     len_hat: np.ndarray         # (N,) float
     well_formed: np.ndarray     # (N,) bool
     p_conf: np.ndarray          # (N,) float
     pred_tokens: np.ndarray     # (N,) int
     rationale_len: np.ndarray   # (N,) int
+    status: Optional[np.ndarray] = None     # (N,) int8, None -> all OK
+
+    def __post_init__(self):
+        if self.status is None:
+            self.status = np.full(len(self.y_hat), STATUS_OK, np.int8)
 
     def __len__(self) -> int:
         return len(self.y_hat)
@@ -157,6 +169,57 @@ def parse_generations(gen: np.ndarray, dec_logits: np.ndarray, *,
         rationale_len=np.where(cot, first_tend - first_think + 1, 0))
 
 
+class FallbackEstimator:
+    """Degraded-mode estimator: answers a (query, model) pair from
+    retrieval priors instead of a reasoning decode.
+
+    The prediction is the similarity-weighted outcome of the model's
+    fingerprint at the query's nearest anchors — the same signal the
+    serialized prompt shows the reasoning estimator, minus the reasoning:
+    ``p_conf`` is the weighted anchor correctness, ``len_hat`` the
+    weighted anchor completion tokens, and ``y_hat = p_conf >= 0.5``.
+    Zero decode tokens are spent, rows are marked ``STATUS_DEGRADED``,
+    and ``well_formed=True`` so the cost model prices the predicted
+    length rather than the malformed-estimate pessimistic fallback.
+    """
+
+    def __init__(self, library):
+        self.library = library
+
+    def predict_pairs(self, sims: np.ndarray, idx: np.ndarray,
+                      models: Sequence[str]) -> ParsedBatch:
+        """One degraded prediction per row of (N, K) ``sims``/``idx``."""
+        sims = np.atleast_2d(np.asarray(sims, np.float64))
+        idx = np.atleast_2d(np.asarray(idx, int))
+        n = len(models)
+        p = np.zeros(n, np.float64)
+        len_hat = np.zeros(n, np.float64)
+        for i, model in enumerate(models):
+            fp = self.library.get(model)
+            w = np.clip(sims[i], 0.0, None)
+            total = w.sum()
+            w = w / total if total > 0 else np.full(len(w), 1.0 / len(w))
+            p[i] = float(w @ np.asarray(fp.y, np.float64)[idx[i]])
+            len_hat[i] = float(w @ np.asarray(fp.tokens,
+                                              np.float64)[idx[i]])
+        return ParsedBatch(
+            y_hat=(p >= 0.5).astype(int), len_hat=len_hat,
+            well_formed=np.ones(n, bool), p_conf=p,
+            pred_tokens=np.zeros(n, int), rationale_len=np.zeros(n, int),
+            status=np.full(n, STATUS_DEGRADED, np.int8))
+
+    @staticmethod
+    def failed_pairs(n: int) -> ParsedBatch:
+        """All-FAILED rows for when degradation itself is disabled: the
+        malformed-estimate shape (``well_formed=False``, ``p_conf=0``)
+        so policies price these pairs at the pessimistic fallback."""
+        return ParsedBatch(
+            y_hat=np.zeros(n, int), len_hat=np.zeros(n, np.float64),
+            well_formed=np.zeros(n, bool), p_conf=np.zeros(n, np.float64),
+            pred_tokens=np.zeros(n, int), rationale_len=np.zeros(n, int),
+            status=np.full(n, STATUS_FAILED, np.int8))
+
+
 @dataclasses.dataclass
 class DecodeHandle:
     """In-flight generation: device arrays dispatched, not yet parsed.
@@ -191,10 +254,15 @@ class DecodeHandle:
 
 @dataclasses.dataclass
 class _Slot:
-    """One live request occupying a decode slot."""
+    """One live request occupying a decode slot.
+
+    ``prompt`` keeps the row's serialized tokens so a failed row can be
+    requeued into the scheduler without a reverse lookup.
+    """
     tag: object
     start: int              # decode-step offset of its window in the run
     refilled: bool
+    prompt: List[int] = dataclasses.field(default_factory=list)
 
 
 class SlotRun:
@@ -276,8 +344,11 @@ class SlotRun:
                 kv_active=np.arange(b) < len(tags))
         # rows past the real tags are free slots from the start (a
         # partially-filled opening bucket refills instead of padding)
+        true_lens = lens if lens is not None else np.full(b, L, int)
         self.slots: List[Optional[_Slot]] = [
-            _Slot(tags[i], 0, False) if i < len(tags) else None
+            _Slot(tags[i], 0, False,
+                  prompt=tokens[i, : int(true_lens[i])].tolist())
+            if i < len(tags) else None
             for i in range(b)]
         self.steps_run = 0                  # decode steps *launched*
         self.steps_done = 0                 # decode steps synced to host
@@ -373,7 +444,56 @@ class SlotRun:
                 # reserve the row's pages NOW so the next can_admit()
                 # check sees the pool as the coming launch will leave it
                 self.state.paged.pre_admit(row, int(lens[row]))
-            self.slots[row] = _Slot(tag, self.steps_run, True)
+            self.slots[row] = _Slot(tag, self.steps_run, True,
+                                    prompt=p.tolist())
+
+    # -- failure surface (serve-runtime fault tolerance) ---------------
+    @property
+    def in_flight(self) -> bool:
+        """Whether a launched segment is awaiting ``sync``."""
+        return self._inflight is not None
+
+    def live_rows(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def pick_live_row(self, k: int) -> Optional[int]:
+        """The k-th live row (mod the live count) — how an injected pool
+        fault selects its victim deterministically."""
+        live = self.live_rows()
+        return live[int(k) % len(live)] if live else None
+
+    def starved_rows(self) -> List[int]:
+        """Live rows the next segment's page allocation would starve
+        (paged mode; always empty within reserved budgets)."""
+        if not self.paged:
+            return []
+        return self.state.paged.starved_rows(self.segment_len)
+
+    def fail_row(self, row: int) -> Optional[tuple]:
+        """Row-level failure (KV pool exhaustion, injected or real):
+        release the row's pages and free its slot, returning
+        ``(tag, prompt)`` for requeue.  The slot decodes PAD into the
+        trash page until the state retires — exactly a retired row."""
+        slot = self.slots[row]
+        if slot is None:
+            return None
+        self.slots[row] = None
+        if self.paged:
+            self.state.paged.retire_row(row)
+        return (slot.tag, slot.prompt)
+
+    def abort(self) -> List[tuple]:
+        """Tear down a poisoned run: release every live row's pages,
+        drop pending refills and in-flight futures, and return the live
+        ``(tag, prompt)`` pairs for requeue.  The state is dead afterwards
+        (``finished`` is True); rows already completed by ``sync`` are
+        *not* returned — they parsed (or will parse) normally."""
+        failed = []
+        for row in self.live_rows():
+            failed.append(self.fail_row(row))
+        self._pending = None
+        self._inflight = None
+        return failed
 
     # -- decode --------------------------------------------------------
     def launch(self) -> None:

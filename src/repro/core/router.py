@@ -10,9 +10,11 @@ engine + policy surface.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import numpy as np
+
+from repro.core.status import STATUS_OK
 
 
 @dataclasses.dataclass
@@ -29,3 +31,13 @@ class PoolPredictions:
     idx: np.ndarray             # (Q, K) retrieved anchor ids
     cache_hits: int = 0         # pairs served from the PredictionCache
     cache_misses: int = 0       # pairs that ran the estimator
+    status: Optional[np.ndarray] = None     # (Q, M) core.status codes;
+    #                                         None -> all OK (batch path)
+
+    @property
+    def degraded_fraction(self) -> float:
+        """Fraction of (query, model) pairs not answered by a full
+        estimator decode (DEGRADED or FAILED)."""
+        if self.status is None or self.status.size == 0:
+            return 0.0
+        return float((self.status != STATUS_OK).mean())

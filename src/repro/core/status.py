@@ -1,0 +1,27 @@
+"""Result status codes threaded through the serve stack.
+
+Every answered (query, model) pair carries one of three statuses:
+
+  OK        — the reasoning estimator decoded and parsed the pair
+  DEGRADED  — the pair was answered from retrieval priors
+              (``FallbackEstimator``): it was quarantined after repeated
+              failures, expired past its SLO deadline, or degradation was
+              requested directly
+  FAILED    — the pair could not be answered at all (degradation disabled);
+              its prediction fields are the malformed-estimate fallback
+
+The codes are small ints so they travel as numpy columns through
+``ParsedBatch`` / ``PoolPredictions`` / ``CachedBatch``; ``status_name``
+maps them back to the string surfaced on ``RouteDecision``.
+"""
+from __future__ import annotations
+
+STATUS_OK = 0
+STATUS_DEGRADED = 1
+STATUS_FAILED = 2
+
+STATUS_NAMES = ("OK", "DEGRADED", "FAILED")
+
+
+def status_name(code: int) -> str:
+    return STATUS_NAMES[int(code)]

@@ -17,6 +17,8 @@ retraining — and serves a batch of queries under a chosen routing policy.
       --refill --kv-paged --kv-page-size 16
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
       --max-pending 2
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --chaos 0 --max-retries 2 --deadline-ms 500
 """
 from __future__ import annotations
 
@@ -106,6 +108,21 @@ def main(argv=None):
                     help="shard the estimator over the local serve mesh "
                          "(multiply CPU devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="failed microbatch/segment rows are requeued and "
+                         "retried up to this many times before quarantine")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO: a prompt older than this "
+                         "(queued + in flight) is answered immediately in "
+                         "degraded mode from retrieval priors")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="mark quarantined/expired pairs FAILED instead of "
+                         "answering them from retrieval priors")
+    ap.add_argument("--chaos", type=int, default=None,
+                    help="inject a deterministic fault plan seeded with "
+                         "this value (FaultPlan.seeded: dispatch/segment/"
+                         "parse/pool failures at ~10%% rates) into the "
+                         "stream — requires --stream-ticks")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -126,11 +143,23 @@ def main(argv=None):
     if args.kv_page_size < 1:
         ap.error(f"--kv-page-size must be >= 1, got {args.kv_page_size}")
 
+    fault_plan = None
+    if args.chaos is not None:
+        if args.stream_ticks <= 0:
+            ap.error("--chaos requires --stream-ticks (faults are injected "
+                     "at the streaming serve boundaries)")
+        from repro.serving.faults import FaultPlan
+        fault_plan = FaultPlan.seeded(
+            args.chaos, rates={"dispatch": 0.1, "segment": 0.1,
+                               "parse": 0.1, "pool": 0.1})
+
     engine = ScopeEngine.build(EngineConfig(
         estimator=ReasoningEstimator(cfg, params), retriever=retr,
         library=lib, models_meta={m: world.models[m] for m in data.models},
         kv_paged=args.kv_paged, kv_page_size=args.kv_page_size,
-        kv_pool_pages=args.kv_pool_pages))
+        kv_pool_pages=args.kv_pool_pages,
+        max_retries=args.max_retries, deadline_ms=args.deadline_ms,
+        degrade=not args.no_degrade, fault_plan=fault_plan))
 
     if args.kv_paged and args.kv_pool_pages is not None:
         # a request admitted at a boundary may decode its whole budget:

@@ -300,6 +300,35 @@ class PagedKV:
                     f"segment of {steps} steps overruns a paged row: "
                     f"{high} of {self.kv_cap} token capacity used")
 
+    def starved_rows(self, steps: int) -> List[int]:
+        """Live rows whose share of the next ``ensure(steps)`` would raise
+        on true pool exhaustion — a dry run of ``ensure``'s allocation
+        order with no side effects.
+
+        Within its reserved budget a row can never starve (admission took
+        its worst case up front), so this only names rows decoding *past*
+        their budget under a drained pool.  The serve runtime fails those
+        rows at the segment boundary (pages released, row requeued)
+        instead of letting ``ensure`` kill the whole stream.
+        """
+        free = len(self.pool._free)
+        reserved = self.pool.reserved
+        out = []
+        for row in range(self.batch):
+            if not self.row_live[row]:
+                continue
+            target = min(int(self.row_high[row]) + steps, self.kv_cap)
+            need = _ceil_div(target, self.page_size) - len(self.row_pages[row])
+            if need <= 0:
+                continue
+            from_res = min(need, self.row_reserved[row])
+            if need > free - (reserved - from_res):
+                out.append(row)
+                continue
+            free -= need
+            reserved -= from_res
+        return out
+
     def ensure(self, steps: int) -> None:
         """Allocate the pages ``steps`` more decode writes need and
         advance ``row_high``.

@@ -55,6 +55,7 @@ class RuntimeStats:
     parsed: int = 0
     overlapped: int = 0      # parses that found the device already done
     max_in_flight: int = 0
+    failed: int = 0          # microbatches routed to on_failed
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -66,15 +67,26 @@ class ServeRuntime:
     ``dispatch_fn(mb)`` launches one microbatch and returns a handle (or a
     finished result); ``on_parsed(mb, result)`` consumes each parsed batch
     in dispatch order.
+
+    ``on_failed(mb, exc)``, when given, receives any microbatch whose
+    dispatch or parse raised instead of the exception propagating — the
+    engine's retry path requeues the batch's rows.  Without it every
+    exception stays loud (the pre-fault-tolerance behavior).  The runtime
+    is also a context manager: on clean exit it drains (``finish``), on
+    error it ``abort``s, so an exception mid-stream can never leak an
+    in-flight executable into the next stream.
     """
 
     def __init__(self, dispatch_fn: Callable[[Microbatch], Any], *,
                  on_parsed: Callable[[Microbatch, Any], None],
-                 max_pending: int = 1):
+                 max_pending: int = 1,
+                 on_failed: Optional[Callable[[Microbatch, Exception],
+                                              None]] = None):
         if max_pending < 0:
             raise ValueError(f"max_pending must be >= 0, got {max_pending}")
         self._dispatch_fn = dispatch_fn
         self._on_parsed = on_parsed
+        self._on_failed = on_failed
         self.max_pending = max_pending
         self._inflight: Deque[Tuple[Microbatch, Any]] = deque()
         self.stats = RuntimeStats()
@@ -84,9 +96,18 @@ class ServeRuntime:
 
     def _parse_oldest(self) -> None:
         mb, handle = self._inflight.popleft()
-        self.stats.overlapped += int(_is_ready(handle))
+        ready = _is_ready(handle)
+        try:
+            result = _parse(handle)
+        except Exception as exc:
+            if self._on_failed is None:
+                raise
+            self.stats.failed += 1
+            self._on_failed(mb, exc)
+            return
+        self.stats.overlapped += int(ready)
         self.stats.parsed += 1
-        self._on_parsed(mb, _parse(handle))
+        self._on_parsed(mb, result)
 
     def dispatch(self, batches: Iterable[Microbatch]) -> None:
         """Launch each microbatch, blocking only when over capacity.
@@ -102,7 +123,14 @@ class ServeRuntime:
         for mb in batches:
             while self._inflight and len(self._inflight) >= self.max_pending:
                 self._parse_oldest()
-            handle = self._dispatch_fn(mb)
+            try:
+                handle = self._dispatch_fn(mb)
+            except Exception as exc:
+                if self._on_failed is None:
+                    raise
+                self.stats.failed += 1
+                self._on_failed(mb, exc)
+                continue
             self._inflight.append((mb, handle))
             self.stats.dispatched += 1
             self.stats.max_in_flight = max(self.stats.max_in_flight,
@@ -123,6 +151,35 @@ class ServeRuntime:
         """Block-parse everything still in flight (stream shutdown)."""
         while self._inflight:
             self._parse_oldest()
+
+    def abort(self) -> int:
+        """Drop every in-flight handle without parsing (error shutdown);
+        returns how many were dropped.  The device work completes on its
+        own and its buffers are released — nothing double-buffered
+        survives into the caller's next stream."""
+        n = len(self._inflight)
+        self._inflight.clear()
+        return n
+
+    def close(self, *, drain: bool = True) -> None:
+        """Shut the pipeline down: drain (parse) what is in flight, or
+        abort it.  If draining itself raises, the remainder is aborted
+        before the exception propagates, so close() never leaks handles."""
+        if not drain:
+            self.abort()
+            return
+        try:
+            self.finish()
+        except Exception:
+            self.abort()
+            raise
+
+    def __enter__(self) -> "ServeRuntime":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close(drain=exc_type is None)
+        return False
 
 
 class SlotRuntime:
@@ -148,7 +205,10 @@ class SlotRuntime:
     def __init__(self, open_slots: Callable[..., Any], scheduler, *,
                  segment_len: int, on_parsed: Callable[[list, Any], None],
                  horizon: Optional[int] = None, rng: Any = None,
-                 kv_pool: Any = None, kv_kernel: Any = None):
+                 kv_pool: Any = None, kv_kernel: Any = None,
+                 injector: Any = None,
+                 on_failed: Optional[Callable[[list, Optional[Exception]],
+                                              None]] = None):
         self._open_slots = open_slots
         self._sched = scheduler
         self._segment_len = int(segment_len)
@@ -157,6 +217,8 @@ class SlotRuntime:
         self._rng = rng
         self._kv_pool = kv_pool
         self._kv_kernel = kv_kernel
+        self._injector = injector
+        self._on_failed = on_failed
         self._open_queue: Deque[Microbatch] = deque()
         self._run: Any = None
 
@@ -191,6 +253,58 @@ class SlotRuntime:
             items.append(item)
         run.admit(items)
 
+    def _fail_row(self, run, row: Optional[int]) -> None:
+        """Row-level failure (KV pool exhaustion, real or injected): fail
+        the row out of the state and route it to the retry path.  Without
+        an ``on_failed`` route the loud pre-fault behavior is preserved —
+        the stream still dies rather than silently dropping a request."""
+        if row is None:
+            return
+        if self._on_failed is None:
+            raise RuntimeError(
+                f"kv pool exhausted for slot row {row} and no failure "
+                "route is configured")
+        failed = run.fail_row(row)
+        if failed is not None:
+            self._sched.stats.kv_exhausted_rows += 1
+            self._on_failed([failed], None)
+
+    def _launch(self, run) -> None:
+        """Launch the next segment, first applying the boundary's fault
+        checks: injected pool/segment faults and real page starvation
+        (rows decoding past their reserved budget under a drained pool)
+        fail at row or state granularity instead of inside the sampler."""
+        inj = self._injector
+        if inj is not None:
+            inj.tick("stall")
+            spec = inj.tick("pool")
+            if spec is not None and run.paged:
+                self._fail_row(run, run.pick_live_row(int(spec.arg)))
+            spec = inj.tick("segment")
+            if spec is not None:
+                from repro.serving.faults import InjectedFault
+                raise InjectedFault(
+                    f"injected segment fault (event {spec.index})")
+        for row in run.starved_rows():
+            self._fail_row(run, row)
+        if not run.finished:
+            run.launch()
+
+    def _recover(self, run, completed, exc: Exception) -> None:
+        """Segment failure: deliver what completed before the fault, tear
+        the state down, and hand the live rows to the retry path."""
+        if self._on_failed is None:
+            raise exc
+        if completed:
+            # rows sync() freed before the fault decoded fully — they
+            # parse and deliver normally (exactly-once: they are not in
+            # the abort set)
+            self._on_parsed(*run.parse_completed(completed))
+        failed = run.abort()
+        run.account(self._sched.stats)
+        self._run = None
+        self._on_failed(failed, exc)
+
     def pump(self, final: bool = False) -> None:
         while True:
             if self._run is None:
@@ -211,14 +325,27 @@ class SlotRuntime:
                 # slots: refill them before the first segment launches
                 self._admit(self._run)
             run = self._run
-            # sync the in-flight segment, refill the slots it drained, and
-            # launch the next segment BEFORE parsing — the host assembles
-            # results (window parse, cache writes, request completion)
-            # while the device decodes ahead
-            completed = run.sync()
+            # launch the first segment of a fresh state, sync the
+            # in-flight one, refill the slots it drained, and launch the
+            # next segment BEFORE parsing — the host assembles results
+            # (window parse, cache writes, request completion) while the
+            # device decodes ahead
+            completed = []
+            try:
+                if not run.in_flight:
+                    self._launch(run)
+                if run.in_flight:
+                    completed = run.sync()
+            except Exception as exc:
+                self._recover(run, completed, exc)
+                continue
             self._admit(run)
-            if not run.finished:
-                run.launch()
+            try:
+                if not run.finished:
+                    self._launch(run)
+            except Exception as exc:
+                self._recover(run, completed, exc)
+                continue
             if completed:
                 self._on_parsed(*run.parse_completed(completed))
             if run.finished:

@@ -155,6 +155,20 @@ class SchedulerStats:
     #                                          slot waiting for pool pages
     admissions_deferred_on_horizon: int = 0  # dense counterpart (remaining
     #                                          horizon below one budget)
+    # fault tolerance (bounded retry / quarantine / SLO deadlines /
+    # degraded answers).  ``submitted`` counts each prompt once, so
+    # exactly-once accounting reads: every submitted prompt ends either
+    # parsed (OK) or degraded/failed — ``requeued`` re-emissions never
+    # re-submit.  ``degraded``/``failed_pairs`` count *prompts* (in-flight
+    # dedup keys), not the waiter fan-out behind them.
+    retries: int = 0                # failure events routed into retry
+    requeued: int = 0               # rows put back in the queue
+    quarantined: int = 0            # prompts that exhausted max_retries
+    deadline_expired: int = 0       # prompts answered past their deadline
+    degraded: int = 0               # prompts answered from retrieval priors
+    failed_pairs: int = 0           # prompts answered FAILED (no fallback)
+    injected_faults: int = 0        # FaultInjector events that fired
+    kv_exhausted_rows: int = 0      # rows failed by KV pool exhaustion
     occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)       # (batch, len) bucket -> microbatch count
     queue_ages: Deque[float] = dataclasses.field(
@@ -178,6 +192,14 @@ class SchedulerStats:
         unwritten budget headroom.  0.0 when no paged run has retired."""
         cap = self.pages_peak * self.kv_page_size
         return 1.0 - self.kv_peak_tokens / cap if cap else 0.0
+
+    @property
+    def degraded_fraction(self) -> float:
+        """Fraction of submitted prompts answered without a full estimator
+        decode (degraded from retrieval priors or failed outright)."""
+        if not self.submitted:
+            return 0.0
+        return (self.degraded + self.failed_pairs) / self.submitted
 
     def queue_age_percentiles(self) -> Dict[str, float]:
         """Seconds spent queued, per emitted prompt (p50/p95/max)."""
@@ -214,6 +236,16 @@ class SchedulerStats:
                                  self.admissions_deferred_on_pages,
                              "deferred_on_horizon":
                                  self.admissions_deferred_on_horizon},
+                "faults": {"retries": self.retries,
+                           "requeued": self.requeued,
+                           "quarantined": self.quarantined,
+                           "deadline_expired": self.deadline_expired,
+                           "degraded": self.degraded,
+                           "failed": self.failed_pairs,
+                           "injected": self.injected_faults,
+                           "kv_exhausted_rows": self.kv_exhausted_rows,
+                           "degraded_fraction":
+                               round(self.degraded_fraction, 4)},
                 "queue_age_ms": {k: round(v * 1e3, 3)
                                  for k, v in ages.items()},
                 "buckets": {f"{b}x{l}": c
@@ -286,6 +318,11 @@ class MicrobatchScheduler:
                      default=None)
         return 0.0 if oldest is None else self._clock() - oldest
 
+    def now(self) -> float:
+        """The scheduler's monotonic clock — the time base for queue ages
+        and (in the engine) SLO deadlines, so tests inject one clock."""
+        return self._clock()
+
     def submit(self, tag: Any, prompt: Sequence[int]) -> None:
         prompt = list(prompt)
         if not prompt:
@@ -294,6 +331,35 @@ class MicrobatchScheduler:
         self._queues.setdefault(ell, []).append(
             _Pending(tag, prompt, self._clock()))
         self.stats.submitted += 1
+
+    def requeue(self, tag: Any, prompt: Sequence[int]) -> None:
+        """Re-enqueue a failed row at the back of its length class.
+
+        Accounted under ``requeued``, never ``submitted`` — the prompt was
+        already counted once at ``submit``, so exactly-once accounting
+        (every submitted prompt is answered exactly once) survives any
+        number of retries.  Re-enqueueing at the back keeps per-class FIFO
+        exact for rows that never fail; a retried row re-enters behind
+        the prompts that arrived while it was in flight.
+        """
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        ell = self.config.len_bucket(len(prompt))
+        self._queues.setdefault(ell, []).append(
+            _Pending(tag, prompt, self._clock()))
+        self.stats.requeued += 1
+
+    def cancel(self, tag: Any) -> Optional[List[int]]:
+        """Remove one queued prompt by tag (SLO expiry of a row that never
+        reached the device); returns its prompt, or ``None`` if the tag is
+        not queued (already emitted, or unknown)."""
+        for q in self._queues.values():
+            for i, it in enumerate(q):
+                if it.tag == tag:
+                    del q[i]
+                    return it.prompt
+        return None
 
     # -- assembly ------------------------------------------------------
     def _emit(self, ell: int, items: List[_Pending]) -> Microbatch:

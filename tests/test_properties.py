@@ -443,3 +443,127 @@ def test_kv_pool_free_rejects_double_and_foreign(n_pages, page_size, seed):
         pool.free([pool.n_pages])       # the trash page is never pool-owned
     pool.free(ids[n // 2:])
     assert pool.available() == pool.n_pages
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: bounded retry/requeue + SLO cancels over the scheduler
+# ---------------------------------------------------------------------------
+@st.composite
+def _fault_trace(draw):
+    """Interleaved submits, bucket ticks with injected microbatch
+    failures, and SLO cancels — the operation mix of the fault-tolerant
+    serve path (engine._StreamControl over MicrobatchScheduler)."""
+    ops = draw(st.lists(st.one_of(
+        st.tuples(st.just("submit"), st.integers(1, 12)),   # prompt length
+        st.tuples(st.just("tick"), st.integers(0, 3)),      # mbs to fail
+        st.tuples(st.just("cancel"), st.integers(0, 60))),  # tag to expire
+        min_size=1, max_size=40))
+    max_retries = draw(st.integers(0, 2))
+    return ops, max_retries
+
+
+@given(_fault_trace())
+@settings(max_examples=150, deadline=None)
+def test_retry_requeue_exactly_once_and_fifo(trace):
+    """Bounded retry: under any interleaving of submits, emissions,
+    injected microbatch failures (rows requeued up to max_retries, then
+    quarantined) and SLO cancels, every submitted prompt resolves exactly
+    once — delivered, quarantined, or cancelled — rows that never failed
+    keep per-class FIFO order, and the requeue ledger balances."""
+    sm = _scheduler_mod()
+    ops, max_retries = trace
+    cfg = sm.BucketConfig(batch_sizes=(2, 4))
+    sched = sm.MicrobatchScheduler(cfg, clock=lambda: 0.0)
+    i, requeues = 0, 0
+    cls, attempts = {}, {}
+    delivered, quarantined, cancelled = [], [], []
+
+    def fail_mb(mb):
+        """engine._StreamControl.on_failed over one microbatch."""
+        nonlocal requeues
+        for r in range(mb.n_real):
+            tag = mb.tags[r]
+            n = attempts.get(tag, 0) + 1
+            attempts[tag] = n
+            if n <= max_retries:
+                sched.requeue(tag, mb.tokens[r, : mb.lengths[r]].tolist())
+                requeues += 1
+            else:
+                quarantined.append(tag)
+
+    for op, arg in ops:
+        if op == "submit":
+            prompt = [7 + (i % 5)] * arg
+            cls[i] = cfg.len_bucket(len(prompt))
+            sched.submit(i, prompt)
+            i += 1
+        elif op == "tick":
+            for k, mb in enumerate(sched.tick()):
+                fail_mb(mb) if k < arg else delivered.extend(mb.tags)
+        elif sched.cancel(arg) is not None:     # op == "cancel"
+            cancelled.append(arg)
+    while len(sched):               # shutdown drain (bounded: attempts
+        for mb in sched.flush():    # cap at max_retries + 1 per tag)
+            delivered.extend(mb.tags)
+
+    assert sorted(delivered + quarantined + cancelled) == list(range(i))
+    per_class = {}
+    for t in delivered:
+        if attempts.get(t, 0) == 0:             # never touched a failure
+            per_class.setdefault(cls[t], []).append(t)
+    for tags in per_class.values():             # per-class FIFO survives
+        assert tags == sorted(tags)
+    assert sched.stats.submitted == i           # exactly-once accounting:
+    assert sched.stats.requeued == requeues     # retries never re-count
+    # every emission is a delivery or a failure event, nothing else
+    assert sched.stats.emitted == len(delivered) + sum(attempts.values())
+
+
+def _chaos_pool_trace():
+    """Op traces mixing admissions, segment growth with the runtime's
+    fail-starved-rows recovery, and re-admission of failed rows."""
+    return st.lists(st.one_of(
+        st.tuples(st.just("admit"), st.integers(0, 3), st.integers(1, 24)),
+        st.tuples(st.just("grow"), st.integers(1, 6), st.just(0)),
+        st.tuples(st.just("recover"), st.integers(0, 3), st.integers(1, 24))),
+        min_size=1, max_size=50)
+
+
+@given(_chaos_pool_trace())
+@settings(max_examples=200, deadline=None)
+def test_kv_pool_starved_fail_recover_conserves_pages(ops):
+    """starved_rows() is an exact dry run of ensure(): failing precisely
+    the rows it names (the runtime's row-level KV-exhaustion path — pages
+    released, row requeued) always lets the survivors' ensure() succeed,
+    and any number of fail / re-admit cycles never leaks or double-books
+    a page."""
+    from repro.serving.kv_pool import KVPool
+    pool = KVPool(n_pages=24, page_size=4)
+    pg = pool.attach(4, kv_cap=32, budget_steps=8)
+    failed = []
+    for op, row, arg in ops:
+        if op == "admit":
+            if not pg.row_live[row] and pg.can_admit(arg):
+                pg.admit_row(row, arg)
+        elif op == "grow":
+            steps = row
+            if pg.row_live.any() and \
+                    int(pg.row_high[pg.row_live].max()) + steps > pg.kv_cap:
+                continue                # decode_segment's kv_cap guard
+            for r in pg.starved_rows(steps):
+                pg.retire_row(r)        # SlotRuntime._fail_row
+                failed.append(r)
+            pg.ensure(steps)            # survivors must never raise
+        else:                           # "recover": retried row re-admits
+            if failed and not pg.row_live[failed[0]] \
+                    and pg.can_admit(arg):
+                pg.admit_row(failed.pop(0), arg)
+        owned = [pid for r in range(4) for pid in pg.row_pages[r]]
+        assert len(owned) == len(set(owned)), "page double-allocated"
+        assert not (set(owned) & set(pool._free)), "owned page also free"
+        assert len(owned) + len(pool._free) == pool.n_pages, "page leaked"
+        assert pool.reserved >= 0 and pool.available() >= 0
+    for r in range(4):
+        pg.retire_row(r)
+    assert pool.pages_in_use == 0 and pool.reserved == 0
+    assert sorted(pool._free) == list(range(pool.n_pages))
