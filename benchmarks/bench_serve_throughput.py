@@ -613,7 +613,8 @@ def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
              "qps": len(queries) / dt,
              "detail": {"devices": n_dev,
                         "mesh": dict(zip(mesh.axis_names,
-                                         mesh.devices.shape))}}]
+                                         mesh.devices.shape,
+                                         strict=True))}}]
 
 
 # ---------------------------------------------------------------------------

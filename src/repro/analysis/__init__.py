@@ -1,0 +1,22 @@
+"""scopelint: static analysis enforcing the serve-path invariants.
+
+Two layers:
+
+- **AST rules** (``astpass`` + ``rules_*``): host syncs, serve-time
+  nondeterminism, recompile hazards, traced-body side effects, and the
+  Pallas kernel contract, checked over the source with a traced-body
+  index and value taint so static-config idioms don't false-positive.
+- **jaxpr pass** (``jaxpr_pass``): the registered hot-path executables
+  are traced with abstract inputs and their jaxprs walked for host
+  callbacks, f64 promotions, and staged host transfers — what XLA sees,
+  not what the source says.
+
+CLI: ``python -m repro.analysis [--self-test] [--list-rules] [paths]``.
+Suppress a finding with ``# scopelint: allow[rule-id] -- reason``.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.astpass import ModuleContext, Rule
+from repro.analysis.runner import all_rules, main, scan_paths, scan_source
+
+__all__ = ["Finding", "ModuleContext", "Rule", "all_rules", "main",
+           "scan_paths", "scan_source"]

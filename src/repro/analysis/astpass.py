@@ -1,0 +1,378 @@
+"""Layer-1 infrastructure: module parsing, traced-body index, taint, rule ABC.
+
+The AST rules need to answer two questions precisely, or they drown the
+repo in false positives:
+
+1. **Which function bodies run under a JAX trace?**  Jitted functions
+   (``@jax.jit`` / ``@functools.partial(jax.jit, static_argnums=...)``),
+   bodies handed to traced control flow (``lax.scan`` / ``while_loop`` /
+   ``cond`` / ``fori_loop`` / ``switch`` / ``map``), Pallas kernels handed
+   to ``pl.pallas_call`` (possibly through a ``functools.partial``
+   assignment), functions nested inside any of those, and — transitively —
+   module-level functions *called* from a traced body (``_run_scan`` called
+   from the jitted ``_scan_decode``).
+
+2. **Which names hold traced values?**  Non-static jit parameters and
+   traced-control-flow body parameters seed the taint set; assignment
+   propagates it; ``.shape`` / ``.ndim`` / ``.dtype`` / ``.size`` access
+   and ``len()`` stop it (static under tracing).  Parameters of functions
+   that are only *transitively* traced are deliberately left untainted:
+   their call sites may pass static values (``_run_scan``'s ``temperature``
+   is a closed-over static), so branching on them is legitimate.
+
+Each rule carries its own self-test corpus (``triggers`` must fire,
+``non_triggers`` must stay silent) so ``--self-test`` proves every rule
+alive without fixtures.
+"""
+from __future__ import annotations
+
+import abc
+import ast
+import dataclasses
+from typing import (ClassVar, Dict, FrozenSet, Iterator, List, Optional,
+                    Set, Tuple)
+
+from repro.analysis.findings import Finding
+from repro.analysis.manifest import is_hot_path
+from repro.analysis.suppress import Suppressions
+
+# dotted names of jit entry points
+_JIT_NAMES = frozenset({"jax.jit", "jit"})
+_PARTIAL_NAMES = frozenset({"functools.partial", "partial"})
+# traced higher-order control flow: dotted name -> indices of function args
+_TRACED_HOF: Dict[str, Tuple[int, ...]] = {
+    "jax.lax.scan": (0,), "lax.scan": (0,),
+    "jax.lax.while_loop": (0, 1), "lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,), "lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2), "lax.cond": (1, 2),
+    "jax.lax.switch": (1, 2, 3, 4), "lax.switch": (1, 2, 3, 4),
+    "jax.lax.map": (0,), "lax.map": (0,),
+    "jax.lax.associative_scan": (0,), "lax.associative_scan": (0,),
+    "jax.checkpoint": (0,), "jax.remat": (0,),
+}
+_PALLAS_CALL = frozenset({"pl.pallas_call", "pallas_call",
+                          "pltpu.pallas_call"})
+# attribute reads that are static under tracing and stop taint propagation
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "aval",
+                          "sharding", "itemsize"})
+_STATIC_CALLS = frozenset({"len", "isinstance", "type", "id", "repr",
+                           "str", "hasattr", "getattr"})
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _literal(node: ast.AST):
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, TypeError, SyntaxError, MemoryError):
+        return None
+
+
+def jit_statics(dec: ast.AST) -> Optional[Tuple[Set[int], Set[str]]]:
+    """If ``dec`` is a jit decorator, return (static positions, names)."""
+    if dotted(dec) in _JIT_NAMES:
+        return set(), set()
+    if not isinstance(dec, ast.Call):
+        return None
+    fn = dotted(dec.func)
+    kws = dec.keywords
+    if fn in _PARTIAL_NAMES:
+        if not (dec.args and dotted(dec.args[0]) in _JIT_NAMES):
+            return None
+    elif fn not in _JIT_NAMES:
+        return None
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    for kw in kws:
+        if kw.arg == "static_argnums":
+            val = _literal(kw.value)
+            if isinstance(val, int):
+                nums.add(val)
+            elif isinstance(val, (tuple, list)):
+                nums.update(v for v in val if isinstance(v, int))
+        elif kw.arg == "static_argnames":
+            val = _literal(kw.value)
+            if isinstance(val, str):
+                names.add(val)
+            elif isinstance(val, (tuple, list)):
+                names.update(v for v in val if isinstance(v, str))
+    return nums, names
+
+
+_FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+_NO_STATICS: FrozenSet[int] = frozenset()
+
+
+@dataclasses.dataclass
+class TracedFn:
+    node: ast.FunctionDef
+    kind: str                       # jit | scan-body | pallas-kernel |
+    #                                 nested | transitive
+    traced_params: FrozenSet[str]
+    statics: FrozenSet[int] = frozenset()   # positional static indices (jit)
+
+
+class ModuleContext:
+    """One parsed module plus the derived indices the rules consume."""
+
+    def __init__(self, source: str, path: str,
+                 hot_path: Optional[bool] = None):
+        self.source = source
+        self.path = path
+        self.tree = ast.parse(source)
+        self.hot_path = is_hot_path(path) if hot_path is None else hot_path
+        self.suppressions = Suppressions.parse(source)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        self.traced: Dict[ast.AST, TracedFn] = {}
+        self._taint_cache: Dict[ast.AST, FrozenSet[str]] = {}
+        self._build_traced_index()
+
+    # -- traced-body index -------------------------------------------------
+    def _functions(self) -> List[ast.FunctionDef]:
+        return [n for n in ast.walk(self.tree)
+                if isinstance(n, _FunctionNode)]
+
+    def _positional_params(self, fn: ast.FunctionDef) -> List[str]:
+        a = fn.args
+        return [p.arg for p in (a.posonlyargs + a.args)]
+
+    def _kwonly_params(self, fn: ast.FunctionDef) -> List[str]:
+        return [p.arg for p in fn.args.kwonlyargs]
+
+    def _resolve_fn_arg(self, arg: ast.AST,
+                        scope: ast.AST) -> Optional[ast.FunctionDef]:
+        """Resolve a function-valued call argument to its local def.
+
+        Handles a bare Name, ``functools.partial(name, ...)`` inline, and a
+        Name previously assigned from ``functools.partial(name, ...)``.
+        """
+        if isinstance(arg, ast.Call) and dotted(arg.func) in _PARTIAL_NAMES:
+            return self._resolve_fn_arg(arg.args[0], scope) if arg.args \
+                else None
+        name = dotted(arg)
+        if name is None or "." in name:
+            return None
+        # nearest definition: walk enclosing function scopes, then module
+        node: Optional[ast.AST] = scope
+        while node is not None:
+            if isinstance(node, _FunctionNode + (ast.Module,)):
+                for stmt in ast.walk(node):
+                    if isinstance(stmt, _FunctionNode) and \
+                            stmt.name == name:
+                        return stmt
+                    if isinstance(stmt, ast.Assign):
+                        for tgt in stmt.targets:
+                            if isinstance(tgt, ast.Name) and \
+                                    tgt.id == name and \
+                                    isinstance(stmt.value, ast.Call) and \
+                                    dotted(stmt.value.func) in \
+                                    _PARTIAL_NAMES and stmt.value.args:
+                                return self._resolve_fn_arg(
+                                    stmt.value.args[0], node)
+            node = self.parents.get(node)
+        return None
+
+    def _mark(self, fn: ast.FunctionDef, kind: str,
+              traced_params: Set[str],
+              statics: FrozenSet[int] = _NO_STATICS) -> None:
+        if fn in self.traced:
+            return
+        self.traced[fn] = TracedFn(fn, kind, frozenset(traced_params),
+                                   statics)
+
+    def _build_traced_index(self) -> None:
+        fns = self._functions()
+        # 1) jit roots
+        for fn in fns:
+            for dec in fn.decorator_list:
+                st = jit_statics(dec)
+                if st is None:
+                    continue
+                nums, names = st
+                params = self._positional_params(fn)
+                traced = {p for i, p in enumerate(params)
+                          if i not in nums and p not in names}
+                traced |= {p for p in self._kwonly_params(fn)
+                           if p not in names}
+                self._mark(fn, "jit", traced, frozenset(nums))
+                break
+        # 2) traced-control-flow bodies and pallas kernels (traced
+        #    regardless of jit context: lax.scan/pallas_call always trace)
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            fname = dotted(call.func)
+            scope = self.enclosing_function(call) or self.tree
+            if fname in _TRACED_HOF:
+                for ix in _TRACED_HOF[fname]:
+                    if ix < len(call.args):
+                        tgt = self._resolve_fn_arg(call.args[ix], scope)
+                        if tgt is not None:
+                            # kwonly params are bound by functools.partial
+                            # at trace time — static config, not tracers
+                            self._mark(tgt, "scan-body",
+                                       set(self._positional_params(tgt)))
+            elif fname in _PALLAS_CALL and call.args:
+                tgt = self._resolve_fn_arg(call.args[0], scope)
+                if tgt is not None:
+                    self._mark(tgt, "pallas-kernel",
+                               set(self._positional_params(tgt)))
+        # 3) fixpoint: nested defs + same-module transitive callees
+        changed = True
+        while changed:
+            changed = False
+            for fn in fns:
+                if fn in self.traced:
+                    continue
+                enc = self.enclosing_function(fn)
+                if enc is not None and enc in self.traced:
+                    self._mark(fn, "nested", set())
+                    changed = True
+            module_fns = {f.name: f for f in self.tree.body
+                          if isinstance(f, _FunctionNode)}
+            for fn in list(self.traced):
+                for call in ast.walk(fn):
+                    if isinstance(call, ast.Call) and \
+                            isinstance(call.func, ast.Name):
+                        tgt = module_fns.get(call.func.id)
+                        if tgt is not None and tgt not in self.traced:
+                            # params stay untainted: call sites may pass
+                            # static values (closed-over temperature etc.)
+                            self._mark(tgt, "transitive", set())
+                            changed = True
+
+    # -- queries -----------------------------------------------------------
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, _FunctionNode):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def traced_fn(self, node: ast.AST) -> Optional[TracedFn]:
+        """Innermost traced function whose body contains ``node``."""
+        fn = node if isinstance(node, _FunctionNode) else \
+            self.enclosing_function(node)
+        while fn is not None:
+            if fn in self.traced:
+                return self.traced[fn]
+            fn = self.enclosing_function(fn)
+        return None
+
+    def traced_root(self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        """Outermost traced function containing ``node`` (trace boundary)."""
+        root = None
+        fn = node if isinstance(node, _FunctionNode) else \
+            self.enclosing_function(node)
+        while fn is not None:
+            if fn in self.traced:
+                root = fn
+            fn = self.enclosing_function(fn)
+        return root
+
+    def in_traced_body(self, node: ast.AST) -> bool:
+        return self.traced_fn(node) is not None
+
+    # -- taint -------------------------------------------------------------
+    def tainted_names(self, fn: ast.FunctionDef) -> FrozenSet[str]:
+        """Names (likely) bound to traced values inside ``fn``'s own body.
+
+        Seeded with the function's traced params plus taint inherited from
+        the enclosing traced scope (closures see traced outer locals), then
+        propagated through assignments to a fixpoint.
+        """
+        cached = self._taint_cache.get(fn)
+        if cached is not None:
+            return cached
+        info = self.traced.get(fn)
+        taint: Set[str] = set(info.traced_params) if info else set()
+        enc = self.enclosing_function(fn)
+        if enc is not None and enc in self.traced:
+            taint |= self.tainted_names(enc)
+        own = [n for n in ast.walk(fn)
+               if self.enclosing_function(n) is fn]
+        changed = True
+        while changed:
+            changed = False
+            for node in own:
+                targets: List[ast.AST] = []
+                value: Optional[ast.AST] = None
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.NamedExpr):
+                    targets, value = [node.target], node.value
+                if value is None or not expr_tainted(value, taint):
+                    continue
+                for tgt in targets:
+                    for name in ast.walk(tgt):
+                        if isinstance(name, ast.Name) and \
+                                name.id not in taint:
+                            taint.add(name.id)
+                            changed = True
+        out = frozenset(taint)
+        self._taint_cache[fn] = out
+        return out
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule, self.path, getattr(node, "lineno", 0), message)
+
+
+def expr_tainted(node: ast.AST, taint: FrozenSet[str]) -> bool:
+    """Does evaluating ``node`` read a tainted name as a (device) value?
+
+    ``x.shape[0]``, ``len(x)``, ``isinstance(x, T)`` read only static
+    metadata and do not count.
+    """
+    if isinstance(node, ast.Name):
+        return node.id in taint
+    if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call):
+        fname = dotted(node.func)
+        if fname in _STATIC_CALLS:
+            return False
+        kids: List[ast.AST] = list(node.args) + \
+            [kw.value for kw in node.keywords]
+        # a method call on a tainted receiver yields a tainted value
+        if isinstance(node.func, ast.Attribute):
+            kids.append(node.func.value)
+        return any(expr_tainted(k, taint) for k in kids)
+    return any(expr_tainted(c, taint) for c in ast.iter_child_nodes(node))
+
+
+class Rule(abc.ABC):
+    """One scopelint rule: a checker plus its self-test corpus.
+
+    ``triggers`` are minimal snippets the rule MUST flag; ``non_triggers``
+    are near-identical twins it MUST leave alone.  ``--self-test`` runs
+    both sets for every registered rule, so a refactor that silently
+    lobotomises a rule fails CI even with a clean tree.
+    """
+    id: ClassVar[str]
+    description: ClassVar[str]
+    hot_path_only: ClassVar[bool] = False
+    triggers: ClassVar[Tuple[str, ...]] = ()
+    non_triggers: ClassVar[Tuple[str, ...]] = ()
+
+    @abc.abstractmethod
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        ...
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return ctx.hot_path or not self.hot_path_only

@@ -1,0 +1,35 @@
+"""Hot-path manifest: which modules carry serve-path invariants.
+
+The serve hot path is everything a request touches between admission and
+its routing decision: the serving package (scheduler, runtime, sampler,
+KV pool, faults), the Pallas/XLA kernels, and the engine facade that
+dispatches them.  Rules marked ``hot_path_only`` fire only in these
+modules — a wall-clock read in ``training/`` is fine, in ``serving/`` it
+is a determinism bug.
+
+Paths are matched structurally (posix suffix under ``repro/``) so the
+manifest works for both ``src/repro/...`` checkouts and installed trees.
+"""
+from __future__ import annotations
+
+import pathlib
+
+HOT_PATH_PREFIXES = (
+    "repro/serving/",
+    "repro/kernels/",
+)
+HOT_PATH_FILES = (
+    "repro/api/engine.py",
+)
+
+
+def is_hot_path(path: str) -> bool:
+    p = pathlib.PurePath(path).as_posix()
+    # normalise to the part under the package root
+    idx = p.rfind("repro/")
+    if idx < 0:
+        return False
+    rel = p[idx:]
+    if rel in HOT_PATH_FILES:
+        return True
+    return any(rel.startswith(pfx) for pfx in HOT_PATH_PREFIXES)

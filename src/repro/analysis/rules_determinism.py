@@ -1,0 +1,117 @@
+"""Rule: serve-time-nondeterminism.
+
+Replayability is the fault-tolerance contract from PR 7: a serve stream
+re-run with the same FaultPlan must be bit-identical, which is only true
+if serving code never reads a wall clock or draws fresh entropy.  Clocks
+are *injected* (``MicrobatchScheduler(clock=...)``), sampling keys are
+*carried* through ``DecodeState``, and ``FaultPlan.seeded`` draws its plan
+once at build time.
+
+Flags **calls** (never bare references — ``clock: Callable =
+time.monotonic`` as an injectable default is the approved idiom) to:
+
+- ``time.time/monotonic/perf_counter/...`` and ``datetime.now/utcnow``;
+- stdlib ``random.*`` and ``np.random.*``;
+- fresh key construction ``jax.random.PRNGKey`` / ``jax.random.key``
+  (``split``/``fold_in`` on a carried key are fine).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astpass import ModuleContext, Rule, dotted
+from repro.analysis.findings import Finding
+
+_CLOCKS = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.clock_gettime",
+})
+_DATETIME = frozenset({
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "date.today", "datetime.date.today",
+})
+_FRESH_KEYS = frozenset({
+    "jax.random.PRNGKey", "jax.random.key", "jrandom.PRNGKey",
+    "jrandom.key", "random.PRNGKey",
+})
+# stdlib random API (so `from jax import random; random.split(key)` is not
+# mistaken for the stdlib module)
+_STDLIB_RANDOM = frozenset({
+    "seed", "random", "randint", "randrange", "choice", "choices",
+    "shuffle", "sample", "uniform", "gauss", "normalvariate",
+    "expovariate", "betavariate", "getrandbits", "randbytes", "triangular",
+})
+
+
+class NondeterminismRule(Rule):
+    id = "serve-time-nondeterminism"
+    description = ("wall-clock reads, RNG draws, or fresh PRNGKeys in "
+                   "serving modules — clocks must be injected, keys carried")
+    hot_path_only = True
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted(node.func)
+            if fname is None:
+                continue
+            if fname in _CLOCKS or fname in _DATETIME:
+                yield ctx.finding(
+                    self.id, node,
+                    f"{fname}() reads the wall clock in a serving module — "
+                    "inject it (clock=... parameter) so replays and tests "
+                    "can control time")
+            elif fname.split(".", 1)[0] == "random" and \
+                    fname.split(".")[-1] in _STDLIB_RANDOM:
+                yield ctx.finding(
+                    self.id, node,
+                    f"{fname}() draws serve-time entropy — carry explicit "
+                    "seeded state instead")
+            elif fname.startswith(("np.random.", "numpy.random.")):
+                yield ctx.finding(
+                    self.id, node,
+                    f"{fname}() draws serve-time entropy — draw plans at "
+                    "build time (FaultPlan.seeded) and replay them")
+            elif fname in _FRESH_KEYS:
+                yield ctx.finding(
+                    self.id, node,
+                    f"{fname}() mints a fresh key in serving code — keys "
+                    "are carried through DecodeState and split, never "
+                    "re-seeded mid-stream")
+
+    triggers = (
+        """\
+import time
+import numpy as np
+import jax
+
+def serve_tick(reqs):
+    t0 = time.monotonic()
+    noise = np.random.rand()
+    key = jax.random.PRNGKey(0)
+    return t0, noise, key
+""",
+        """\
+import random
+
+def pick_slot(slots):
+    return random.choice(slots)
+""",
+    )
+    non_triggers = (
+        """\
+import time
+from typing import Callable
+
+def make_scheduler(clock: Callable[[], float] = time.monotonic):
+    return clock
+
+def split_key(key):
+    import jax
+    return jax.random.split(key)
+""",
+    )

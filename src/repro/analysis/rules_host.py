@@ -1,0 +1,159 @@
+"""Rule: host-sync-in-hot-path.
+
+The serve path's latency claims (PR 2's 171x host-transfer cut, PR 5's
+overlapped dispatch) rest on nothing blocking on device values mid-path.
+This rule flags the classic sync idioms in hot-path modules:
+
+- ``.item()`` / ``jax.device_get`` anywhere in a hot-path module (both
+  exist only to move device values to the host);
+- ``float()`` / ``int()`` / ``bool()`` / ``.tolist()`` applied to a
+  *tainted* (traced) value inside a traced body — under jit these raise
+  ``ConcretizationError`` at trace time, but in transitively-traced
+  helpers they are latent syncs;
+- ``np.asarray`` / ``np.array`` inside a traced body (numpy pulls the
+  operand to the host; use ``jnp``);
+- implicit ``__bool__`` of a traced value: ``if x:`` / ``while x:`` /
+  ``assert x`` / ``not x`` where ``x`` is a bare tainted name.
+
+Shape/dtype reads (``x.shape[0]``, ``len(x)``) are static under tracing
+and never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astpass import ModuleContext, Rule, dotted, expr_tainted
+from repro.analysis.findings import Finding
+
+_SYNC_METHODS = frozenset({"item"})
+_TRACED_SYNC_METHODS = frozenset({"item", "tolist", "to_py"})
+_CONVERSIONS = frozenset({"float", "int", "bool", "complex"})
+_NP_PULLS = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                       "numpy.array", "onp.asarray", "onp.array"})
+_DEVICE_GET = frozenset({"jax.device_get", "device_get"})
+
+
+class HostSyncRule(Rule):
+    id = "host-sync-in-hot-path"
+    description = ("device->host synchronisation (.item(), jax.device_get, "
+                   "float()/np.asarray on traced values, implicit __bool__) "
+                   "in hot-path modules")
+    hot_path_only = True
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node)
+            elif isinstance(node, (ast.If, ast.While)):
+                yield from self._check_bool(ctx, node, node.test)
+            elif isinstance(node, ast.Assert):
+                yield from self._check_bool(ctx, node, node.test)
+            elif isinstance(node, ast.IfExp):
+                yield from self._check_bool(ctx, node, node.test)
+            elif isinstance(node, ast.BoolOp):
+                for v in node.values:
+                    yield from self._check_bool(ctx, node, v)
+            elif isinstance(node, ast.UnaryOp) and \
+                    isinstance(node.op, ast.Not):
+                yield from self._check_bool(ctx, node, node.operand)
+
+    def _check_call(self, ctx: ModuleContext,
+                    node: ast.Call) -> Iterator[Finding]:
+        fname = dotted(node.func)
+        in_trace = ctx.in_traced_body(node)
+        if fname in _DEVICE_GET:
+            yield ctx.finding(self.id, node,
+                              "jax.device_get blocks on the device — keep "
+                              "values on device or sync at parse time only")
+            return
+        if isinstance(node.func, ast.Attribute):
+            meth = node.func.attr
+            if meth in _SYNC_METHODS or \
+                    (in_trace and meth in _TRACED_SYNC_METHODS):
+                yield ctx.finding(
+                    self.id, node,
+                    f".{meth}() synchronises device->host — slice on "
+                    "device and convert whole arrays at parse time")
+                return
+        if not in_trace:
+            return
+        if fname in _NP_PULLS:
+            yield ctx.finding(self.id, node,
+                              f"{fname} inside a traced body pulls the "
+                              "operand to the host — use jnp")
+            return
+        if fname in _CONVERSIONS and node.args:
+            fn = ctx.traced_fn(node)
+            taint = ctx.tainted_names(fn.node) if fn else frozenset()
+            if not isinstance(node.args[0], ast.Constant) and \
+                    expr_tainted(node.args[0], taint):
+                yield ctx.finding(
+                    self.id, node,
+                    f"{fname}() of a traced value forces a host sync "
+                    "(ConcretizationError under jit)")
+
+    def _check_bool(self, ctx: ModuleContext, node: ast.AST,
+                    test: ast.AST) -> Iterator[Finding]:
+        # bare tainted name (or `not name`): implicit __bool__ of a traced
+        # array; comparisons on traced values are recompile-hazard's beat
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            test = test.operand
+        if not isinstance(test, ast.Name):
+            return
+        fn = ctx.traced_fn(node)
+        if fn is None:
+            return
+        if test.id in ctx.tainted_names(fn.node):
+            yield ctx.finding(
+                self.id, node,
+                f"truthiness of traced value '{test.id}' calls __bool__ "
+                "on an abstract array — use jnp.where / lax.cond")
+
+    triggers = (
+        """\
+import jax
+
+@jax.jit
+def f(x):
+    if x:
+        x = x + 1
+    return float(x)
+
+def g(y):
+    return y.item()
+""",
+        """\
+import jax
+import numpy as np
+
+@jax.jit
+def f(x):
+    y = np.asarray(x)
+    return jax.device_get(y)
+""",
+    )
+    non_triggers = (
+        """\
+import functools
+import jax
+import jax.numpy as jnp
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def f(x, n):
+    if n > 0:
+        x = x + int(n)
+    b = x.shape[0]
+    return x * b
+
+def g(y):
+    return jnp.asarray(y)
+""",
+        """\
+import numpy as np
+
+def host_side_parse(rows):
+    lens = np.asarray(rows)
+    return lens.tolist()
+""",
+    )

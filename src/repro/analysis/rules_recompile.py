@@ -1,0 +1,181 @@
+"""Rule: recompile-hazard.
+
+The "0 recompiles after warmup" gate (read from ``COMPILE_COUNTS``) is a
+throughput invariant: one silent recompile per microbatch erases the
+fused-decode win.  Three statically-visible hazards:
+
+- **jit-in-loop**: ``jax.jit(...)`` constructed inside a ``for``/``while``
+  body builds a fresh cache entry per iteration — hoist it;
+- **Python branch on a traced value**: ``if x.sum() > 0:`` inside a traced
+  body either fails to trace or, via shape polymorphism workarounds,
+  triggers per-value retraces — use ``lax.cond``/``jnp.where``;
+- **unhashable static argument**: a list/dict/set (or fresh ndarray)
+  passed at a ``static_argnums`` position of a same-module jitted
+  function raises at best and retraces per call at worst.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Tuple
+
+from repro.analysis.astpass import (ModuleContext, Rule, _FunctionNode,
+                                    dotted, expr_tainted, jit_statics)
+from repro.analysis.findings import Finding
+
+_JIT_CALLS = frozenset({"jax.jit", "jit", "jax.pmap", "pmap"})
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+_ARRAY_MAKERS = frozenset({"np.array", "np.asarray", "numpy.array",
+                           "numpy.asarray", "jnp.array", "jnp.asarray",
+                           "jax.numpy.array", "jax.numpy.asarray"})
+
+
+class RecompileHazardRule(Rule):
+    id = "recompile-hazard"
+    description = ("jit built inside a loop, Python branches on traced "
+                   "values, or unhashable static-argnum arguments")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        jitted = self._jitted_statics(ctx)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_jit_in_loop(ctx, node)
+                yield from self._check_static_args(ctx, node, jitted)
+            elif isinstance(node, (ast.If, ast.While)):
+                yield from self._check_branch(ctx, node)
+
+    def _jitted_statics(self, ctx: ModuleContext
+                        ) -> Dict[str, Tuple[int, ...]]:
+        out: Dict[str, Tuple[int, ...]] = {}
+        for fn in ctx.tree.body:
+            if not isinstance(fn, _FunctionNode):
+                continue
+            for dec in fn.decorator_list:
+                st = jit_statics(dec)
+                if st is not None and st[0]:
+                    out[fn.name] = tuple(sorted(st[0]))
+        return out
+
+    def _check_jit_in_loop(self, ctx: ModuleContext,
+                           node: ast.Call) -> Iterator[Finding]:
+        if dotted(node.func) not in _JIT_CALLS:
+            return
+        cur = ctx.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+                yield ctx.finding(
+                    self.id, node,
+                    "jax.jit constructed inside a loop compiles a fresh "
+                    "executable per iteration — hoist it out")
+                return
+            if isinstance(cur, _FunctionNode):
+                # a loop *outside* this def doesn't re-run the jit call
+                return
+            cur = ctx.parents.get(cur)
+
+    def _check_branch(self, ctx: ModuleContext,
+                      node: ast.AST) -> Iterator[Finding]:
+        fn = ctx.traced_fn(node)
+        if fn is None:
+            return
+        test = node.test
+        # bare-name truthiness belongs to host-sync-in-hot-path
+        bare = test
+        if isinstance(bare, ast.UnaryOp) and isinstance(bare.op, ast.Not):
+            bare = bare.operand
+        if isinstance(bare, ast.Name):
+            return
+        if expr_tainted(test, ctx.tainted_names(fn.node)):
+            yield ctx.finding(
+                self.id, node,
+                "Python branch on a traced value cannot be staged — use "
+                "jnp.where or lax.cond (static config branches are fine)")
+
+    def _check_static_args(self, ctx: ModuleContext, node: ast.Call,
+                           jitted: Dict[str, Tuple[int, ...]]
+                           ) -> Iterator[Finding]:
+        if not isinstance(node.func, ast.Name):
+            return
+        statics = jitted.get(node.func.id)
+        if not statics:
+            return
+        for ix in statics:
+            if ix >= len(node.args):
+                continue
+            arg = node.args[ix]
+            if isinstance(arg, _UNHASHABLE):
+                yield ctx.finding(
+                    self.id, arg,
+                    f"unhashable literal at static position {ix} of "
+                    f"{node.func.id}() — statics must be hashable "
+                    "(tuple, int, NamedTuple)")
+            elif isinstance(arg, ast.Call) and \
+                    dotted(arg.func) in _ARRAY_MAKERS:
+                yield ctx.finding(
+                    self.id, arg,
+                    f"fresh array at static position {ix} of "
+                    f"{node.func.id}() — arrays are unhashable and every "
+                    "call would retrace")
+
+    triggers = (
+        """\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def f(x, cfg):
+    return x * 2
+
+def caller(x):
+    for lr in (0.1, 0.2):
+        step = jax.jit(lambda y: y * lr)
+        x = step(x)
+    return f(x, [1, 2, 3])
+
+@jax.jit
+def g(x):
+    if x.sum() > 0:
+        return x
+    return -x
+""",
+    )
+    non_triggers = (
+        """\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def f(x, n):
+    if n > 2:
+        return x * 2.0
+    return x
+
+_step = jax.jit(lambda y: y * 2.0)
+
+def caller(x):
+    for _ in range(3):
+        x = _step(x)
+    return f(x, 3)
+""",
+        """\
+import functools
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _kernel(q_ref, o_ref, *, softcap: float, window: int):
+    s = q_ref[...]
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    if window > 0:
+        s = s * 2.0
+    o_ref[...] = s
+
+def launch(q, interpret):
+    return pl.pallas_call(
+        functools.partial(_kernel, softcap=20.0, window=0),
+        grid=(4,),
+        out_shape=q,
+        interpret=interpret,
+    )(q)
+""",
+    )

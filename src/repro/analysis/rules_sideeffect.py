@@ -1,0 +1,174 @@
+"""Rule: traced-body-side-effect.
+
+A traced body runs at *trace* time, once per compilation — not once per
+call.  Mutating state that outlives the trace (module globals, closed-over
+mutables, ``self``) from inside a jitted/scanned body therefore records
+trace-time artifacts, breaks replay, and silently diverges between the
+first call and every cached one.
+
+Flagged inside traced bodies:
+
+- ``global`` declarations, and ``nonlocal`` targets bound *outside* the
+  outermost traced function (writes escaping the trace boundary);
+- attribute / subscript stores and augmented assigns whose base object is
+  defined outside the traced root (``self.n += 1``, ``CACHE[k] = v``);
+- mutating method calls (``.append`` / ``.update`` / ``.add`` / ...) on
+  such outside objects.
+
+State created *inside* the traced root is fresh per trace and fine — the
+sampler's ``flat_cache`` staging dict is the canonical example.  The
+``COMPILE_COUNTS`` counter is whitelisted by name: incrementing it inside
+the traced body is the repo's deliberate once-per-compilation
+instrumentation idiom (see ``serving/sampler.py``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set
+
+from repro.analysis.astpass import ModuleContext, Rule, _FunctionNode
+from repro.analysis.findings import Finding
+
+WHITELIST = frozenset({"COMPILE_COUNTS"})
+_MUTATORS = frozenset({
+    "append", "extend", "insert", "add", "update", "setdefault", "pop",
+    "popitem", "clear", "remove", "discard", "write", "appendleft",
+})
+
+
+def _base_name(node: ast.AST) -> Optional[str]:
+    """Leftmost Name of an attribute/subscript chain (``a`` in ``a.b[c]``)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _root_locals(ctx: ModuleContext, root: ast.AST) -> Set[str]:
+    """Every name bound anywhere within ``root`` (any nesting depth).
+
+    Coarse by design: an object bound anywhere inside the traced root was
+    created during this trace, so mutating it cannot leak state across
+    calls.  Stores in a function that declares the name ``nonlocal`` /
+    ``global`` do not count — those bind outside their scope.
+    """
+    declared: dict = {}
+    for node in ast.walk(root):
+        if isinstance(node, (ast.Nonlocal, ast.Global)):
+            fn = ctx.enclosing_function(node)
+            declared.setdefault(fn, set()).update(node.names)
+    names: Set[str] = set()
+    for node in ast.walk(root):
+        if isinstance(node, _FunctionNode):
+            names.add(node.name)
+            a = node.args
+            names.update(p.arg for p in
+                         (a.posonlyargs + a.args + a.kwonlyargs))
+            if a.vararg:
+                names.add(a.vararg.arg)
+            if a.kwarg:
+                names.add(a.kwarg.arg)
+        elif isinstance(node, ast.Name) and \
+                isinstance(node.ctx, (ast.Store, ast.Del)):
+            fn = ctx.enclosing_function(node)
+            if node.id not in declared.get(fn, ()):
+                names.add(node.id)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            names.add(node.name)
+    return names
+
+
+class TracedSideEffectRule(Rule):
+    id = "traced-body-side-effect"
+    description = ("mutation of state outliving the trace (globals, "
+                   "closures, self) inside jitted/scanned bodies; "
+                   "COMPILE_COUNTS is whitelisted")
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        locals_of = {}
+        for node in ast.walk(ctx.tree):
+            root = ctx.traced_root(node)
+            if root is None:
+                continue
+            if root not in locals_of:
+                locals_of[root] = _root_locals(ctx, root)
+            rl = locals_of[root]
+            if isinstance(node, ast.Global):
+                bad = [n for n in node.names if n not in WHITELIST]
+                if bad:
+                    yield ctx.finding(
+                        self.id, node,
+                        f"global {', '.join(bad)} inside a traced body — "
+                        "writes happen at trace time, not per call")
+            elif isinstance(node, ast.Nonlocal):
+                bad = [n for n in node.names
+                       if n not in rl and n not in WHITELIST]
+                if bad:
+                    yield ctx.finding(
+                        self.id, node,
+                        f"nonlocal {', '.join(bad)} escapes the traced "
+                        "body — carry it through the scan/jit return value")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for tgt in targets:
+                    if not isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                        continue
+                    base = _base_name(tgt)
+                    if base is None or base in WHITELIST or base in rl:
+                        continue
+                    yield ctx.finding(
+                        self.id, tgt,
+                        f"store into '{base}' defined outside the traced "
+                        "body mutates trace-persistent state")
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _MUTATORS:
+                base = _base_name(node.func.value)
+                if base is None or base in WHITELIST or base in rl:
+                    continue
+                yield ctx.finding(
+                    self.id, node,
+                    f"'{base}.{node.func.attr}(...)' mutates an object "
+                    "defined outside the traced body")
+
+    triggers = (
+        """\
+import jax
+
+_CALLS = []
+
+@jax.jit
+def f(x):
+    _CALLS.append(1)
+    return x * 2
+
+def outer():
+    total = 0
+
+    @jax.jit
+    def g(x):
+        nonlocal total
+        total += 1
+        return x
+
+    return g
+""",
+    )
+    non_triggers = (
+        """\
+import jax
+from collections import Counter
+
+COMPILE_COUNTS = Counter()
+
+@jax.jit
+def f(x):
+    COMPILE_COUNTS["f"] += 1
+    scratch = {}
+    scratch["x"] = x
+    return x * 2
+""",
+    )

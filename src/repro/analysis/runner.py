@@ -1,0 +1,111 @@
+"""scopelint driver: scan files, apply suppressions, run the jaxpr pass."""
+from __future__ import annotations
+
+import pathlib
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.astpass import ModuleContext, Rule
+from repro.analysis.findings import Finding
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", "build",
+              "dist", ".mypy_cache", ".pytest_cache"}
+
+
+def all_rules() -> List[Rule]:
+    from repro.analysis.rules_determinism import NondeterminismRule
+    from repro.analysis.rules_host import HostSyncRule
+    from repro.analysis.rules_pallas import PallasContractRule
+    from repro.analysis.rules_recompile import RecompileHazardRule
+    from repro.analysis.rules_sideeffect import TracedSideEffectRule
+    return [HostSyncRule(), NondeterminismRule(), RecompileHazardRule(),
+            TracedSideEffectRule(), PallasContractRule()]
+
+
+def scan_source(source: str, path: str,
+                hot_path: Optional[bool] = None) -> List[Finding]:
+    """Run every applicable rule over one module's source."""
+    try:
+        ctx = ModuleContext(source, path, hot_path=hot_path)
+    except SyntaxError as exc:
+        return [Finding("parse-error", path, exc.lineno or 0, str(exc))]
+    findings: List[Finding] = []
+    for rule in all_rules():
+        if rule.applies(ctx):
+            findings.extend(rule.check(ctx))
+    findings = ctx.suppressions.apply(findings)
+    findings.extend(ctx.suppressions.meta_findings(path))
+    return findings
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterable[pathlib.Path]:
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in _SKIP_DIRS for part in f.parts):
+                    yield f
+
+
+def scan_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(scan_source(f.read_text(), str(f)))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="scopelint: static serve-path invariant checks "
+                    "(AST rules + jaxpr pass)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to scan (default: src)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the rule corpus + jaxpr poison checks")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip tracing the registered hot-path executables")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            scope = "hot-path" if rule.hot_path_only else "all files"
+            print(f"{rule.id:28s} [{scope}] {rule.description}")
+        return 0
+
+    failed = False
+
+    if args.self_test:
+        from repro.analysis.selftest import run_self_test
+        failures = run_self_test()
+        for msg in failures:
+            print(f"self-test FAILED: {msg}")
+        n_rules = len(all_rules())
+        if failures:
+            failed = True
+        else:
+            print(f"self-test: {n_rules} rules fire/stay-silent on their "
+                  "corpus twins; jaxpr poison checks pass")
+
+    findings = scan_paths(args.paths or ["src"])
+    if not args.no_jaxpr:
+        from repro.analysis import jaxpr_pass
+        findings.extend(jaxpr_pass.run_jaxpr_pass())
+        n_exec = len(jaxpr_pass.registered())
+    else:
+        n_exec = 0
+
+    hard = [f for f in findings if not f.suppressed]
+    soft = [f for f in findings if f.suppressed]
+    for f in hard + soft:
+        print(f.render())
+    print(f"scopelint: {len(hard)} findings ({len(soft)} suppressed)"
+          + (f"; jaxpr pass: {n_exec} executables traced"
+             if n_exec else ""))
+    if hard:
+        failed = True
+    return 1 if failed else 0

@@ -175,7 +175,7 @@ class PredictionCache:
         if len(keys) != len(preds):
             raise ValueError(f"{len(keys)} keys for {len(preds)} entries")
         store = self._store
-        for key, pred in zip(keys, preds):
+        for key, pred in zip(keys, preds, strict=True):
             if self._downgrades(key, pred):
                 continue
             store[key] = pred

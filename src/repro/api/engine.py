@@ -896,7 +896,7 @@ class ScopeEngine:
                           cost_hat=float(pool.cost_hat[i, c]),
                           status=("OK" if pool.status is None else
                                   status_name(int(pool.status[i, c]))))
-            for i, (q, c) in enumerate(zip(query_ids, choices))]
+            for i, (q, c) in enumerate(zip(query_ids, choices, strict=True))]
         share = {m: 0 for m in pool.models}
         for d in decisions:
             share[d.model] += 1
@@ -956,7 +956,7 @@ class ScopeEngine:
             return BatchReport.empty(policy_name, pool.models)
         choices = np.asarray(decision.choices, int)
         accs, costs, tokens = [], [], 0
-        for q, c in zip(qids, choices):
+        for q, c in zip(qids, choices, strict=True):
             rec = data.record(q, pool.models[int(c)])
             accs.append(rec.y)
             costs.append(rec.cost)

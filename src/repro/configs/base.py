@@ -146,21 +146,22 @@ class ModelConfig:
         head_dim = max(32, d_model // num_heads)
         kv = max(1, min(self.num_kv_heads, num_heads))
         # keep the family's pattern but shrink counts
-        changes = dict(
-            num_layers=num_layers,
-            d_model=d_model,
-            num_heads=num_heads,
-            num_kv_heads=kv,
-            head_dim=head_dim,
-            d_ff=d_model * 4,
-            vocab_size=vocab_size,
-            sliding_window=64,
-            long_context_window=64,
-            encoder_seq_len=32 if self.is_encoder_decoder else self.encoder_seq_len,
-            num_encoder_layers=2 if self.is_encoder_decoder else 0,
-            num_stub_patches=8 if self.num_stub_patches else 0,
-            dtype="float32",
-        )
+        changes = {
+            "num_layers": num_layers,
+            "d_model": d_model,
+            "num_heads": num_heads,
+            "num_kv_heads": kv,
+            "head_dim": head_dim,
+            "d_ff": d_model * 4,
+            "vocab_size": vocab_size,
+            "sliding_window": 64,
+            "long_context_window": 64,
+            "encoder_seq_len":
+                32 if self.is_encoder_decoder else self.encoder_seq_len,
+            "num_encoder_layers": 2 if self.is_encoder_decoder else 0,
+            "num_stub_patches": 8 if self.num_stub_patches else 0,
+            "dtype": "float32",
+        }
         if self.has_moe():
             changes.update(
                 num_experts=min(self.num_experts, max_experts),

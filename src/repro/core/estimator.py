@@ -425,7 +425,7 @@ class SlotRun:
                                      np.int32),
                              np.ones(self.batch, np.int64))
         mask, mat, lens = self._pending
-        for (tag, prompt, length), row in zip(items, free):
+        for (tag, prompt, length), row in zip(items, free, strict=False):
             if not self.can_admit():
                 raise ValueError(
                     "cannot admit: the kv pool has no room for a "

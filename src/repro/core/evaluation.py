@@ -30,7 +30,7 @@ def evaluate_choices(data: ScopeData, qids: Sequence[int],
                      ) -> RoutingEval:
     accs, costs, tokens = [], [], 0
     share = {m: 0 for m in models}
-    for q, c in zip(qids, choices):
+    for q, c in zip(qids, choices, strict=True):
         r = data.record(int(q), models[int(c)])
         accs.append(r.y)
         costs.append(r.cost)

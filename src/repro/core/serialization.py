@@ -42,7 +42,7 @@ def serialize_prompt(model: PoolModel, model_index: int,
             tok.REASONING if model.reasoning else tok.STANDARD,
             tok.PRICE_BASE + tok.price_bucket(model.price_out),
             tok.SEP]
-    for s, i in zip(sims, idx):
+    for s, i in zip(sims, idx, strict=True):
         aq = anchor_set.queries[int(i)]
         toks += [tok.ANCHOR,
                  tok.domain_token(aq.domain),

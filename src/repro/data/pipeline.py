@@ -26,7 +26,7 @@ def make_lm_batch(prompts: List[List[int]], targets: List[List[int]],
     bsz = len(prompts)
     tokens = np.full((bsz, max_len), PAD, np.int32)
     labels = np.full((bsz, max_len), -100, np.int32)
-    for i, (p, t) in enumerate(zip(prompts, targets)):
+    for i, (p, t) in enumerate(zip(prompts, targets, strict=True)):
         seq = (p + t)[:max_len]
         tokens[i, : len(seq)] = seq
         # label at position j predicts tokens[j+1]

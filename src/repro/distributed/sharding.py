@@ -27,7 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 def axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     if isinstance(axes, str):
         return sizes[axes]
     return int(np.prod([sizes[a] for a in axes]))

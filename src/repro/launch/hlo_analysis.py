@@ -206,8 +206,6 @@ def analyze(text: str) -> Dict:
         if cond is None or cond not in comps:
             return 1
         ints = []
-        for ins in comps[cond]:
-            pass
         # constants appear in instruction text; scan raw rest strings
         for ins in comps[cond]:
             ints += [int(x) for x in re.findall(r"constant\((\d+)\)",

@@ -190,7 +190,7 @@ def main(argv=None):
         mesh = make_serve_mesh()
         engine.estimator.shard(mesh)
         print(f"# estimator sharded over "
-              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))}")
 
     policy = pick_policy(args)
     qids = [int(q) for q in data.test_qids[: args.queries]]

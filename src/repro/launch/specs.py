@@ -8,7 +8,7 @@ Audio/VLM stub frontends surface here as precomputed embedding inputs.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,7 +83,7 @@ def _split_microbatches(batch, m: int):
     return out
 
 
-def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
                     microbatches: int = 1):
     """Train step with optional gradient accumulation.
 
@@ -92,6 +92,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
     lever for fitting large-activation train steps into HBM; the dry-run
     auto-doubles it until memory_analysis() fits the 16 GB chip budget.
     """
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig()
+
     def train_step(params, opt_state, batch):
         if microbatches == 1:
             (loss, metrics), grads = jax.value_and_grad(

@@ -47,7 +47,7 @@ def shard_activation(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
     if ctx is None:
         return x
     mesh, rules = ctx
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
 
     def resolve(dim_size, logical):
         if logical is None:

@@ -145,7 +145,8 @@ def _encode(params, cfg: ModelConfig, enc_features):
     s = h.shape[1]
     h = h + sinusoidal_positions(s, cfg.d_model, h.dtype)[None]
     for seg, (unit, count) in zip(enc["segments"],
-                                  [(("attn",), cfg.num_encoder_layers)]):
+                                  [(("attn",), cfg.num_encoder_layers)],
+                                  strict=False):
         h, _, _ = tf.segment_full(seg, None, cfg, unit, count, h, None, None,
                                   causal=False)
     return rmsnorm(enc["final_norm"], h, cfg.rmsnorm_eps)
@@ -170,7 +171,7 @@ def _forward_full(params, cfg: ModelConfig, batch: Dict, *,
     shared = params.get("shared_attn")
     aux_total = jnp.zeros((), jnp.float32)
     caches = []
-    for seg, (unit, count) in zip(params["segments"], plan):
+    for seg, (unit, count) in zip(params["segments"], plan, strict=True):
         h, aux, cache = tf.segment_full(seg, shared, cfg, unit, count, h,
                                         cos, sin, enc_out=enc_out,
                                         want_cache=want_cache)
@@ -235,7 +236,8 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos, *, paged=None):
     plan = tf.build_plan(cfg)
     shared = params.get("shared_attn")
     new_caches = []
-    for seg, cache, (unit, count) in zip(params["segments"], caches, plan):
+    for seg, cache, (unit, count) in zip(params["segments"], caches, plan,
+                                      strict=True):
         h, nc = tf.segment_decode(seg, shared, cfg, unit, count, h, cos, sin,
                                   cache, pos, paged=paged)
         new_caches.append(nc)
@@ -288,6 +290,7 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
             S = min(max_len, w) if w > 0 else max_len
             spec = _block_cache_spec(cfg, kk, batch_size, S, dt)
             unit_cache[str(j)] = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), spec)
+                lambda a, count=count: jnp.broadcast_to(a[None], (count,) + a.shape),
+                spec)
         caches.append(unit_cache)
     return tuple(caches)

@@ -90,7 +90,7 @@ class FaultPlan:
         """Bernoulli plan: each of the first ``n_events`` events at a site
         fires with that site's rate.  Deterministic in ``seed`` — the draw
         happens here, never at serve time."""
-        rng = np.random.default_rng(seed)
+        rng = np.random.default_rng(seed)  # scopelint: allow[serve-time-nondeterminism] -- build-time plan draw, deterministic in seed; serve time only replays it
         specs = []
         for site in SITES:                      # fixed draw order
             rate = float((rates or {}).get(site, 0.0))

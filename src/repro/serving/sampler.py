@@ -542,6 +542,7 @@ def decode_segment(params, cfg: ModelConfig, state: DecodeState, steps: int,
             "stochastic decoding (temperature > 0) requires an explicit "
             "rng key — the old PRNGKey(0) fallback made every call sample "
             "the identical key stream")
+    # scopelint: allow[serve-time-nondeterminism] -- greedy placeholder: temperature > 0 without a carried key raises above, so this key is never sampled from
     key = state.key if state.key is not None else jax.random.PRNGKey(0)
     if refill is None:
         if pg is not None:
@@ -642,7 +643,7 @@ def refill_slots(params, cfg: ModelConfig, state: DecodeState,
         raise ValueError(f"{r} rows for only {p} prompts")
     if r == 0:
         return state
-    if len(set(int(x) for x in rows)) != r:
+    if len({int(x) for x in rows}) != r:
         raise ValueError(f"duplicate refill rows: {rows.tolist()}")
     if rows.min() < 0 or rows.max() >= state.batch:
         raise ValueError(

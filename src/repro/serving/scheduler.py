@@ -90,12 +90,12 @@ class BucketConfig:
     def __post_init__(self):
         if not self.batch_sizes:
             raise ValueError("batch_sizes must be non-empty")
-        bs = tuple(sorted(set(int(b) for b in self.batch_sizes)))
+        bs = tuple(sorted({int(b) for b in self.batch_sizes}))
         if bs[0] <= 0:
             raise ValueError(f"batch sizes must be positive, got {bs}")
         object.__setattr__(self, "batch_sizes", bs)
         object.__setattr__(self, "prompt_lens",
-                           tuple(sorted(set(int(x) for x in self.prompt_lens))))
+                           tuple(sorted({int(x) for x in self.prompt_lens})))
 
     @property
     def max_batch(self) -> int:

@@ -118,7 +118,7 @@ class GRPOTrainer:
     def _sample_tasks(self, n: int):
         qids = self.rng.choice(self.data.train_qids, size=n)
         models = self.rng.choice(self.data.models, size=n)
-        return list(zip(qids.tolist(), models.tolist()))
+        return list(zip(qids.tolist(), models.tolist(), strict=True))
 
     def _build_prompts(self, tasks):
         world = self.data.world

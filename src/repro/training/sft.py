@@ -53,7 +53,7 @@ def build_sft_dataset(data: ScopeData, library: FingerprintLibrary,
             sims[qi], idx[qi], q, rec.y, rec.tokens, cot=cot)
         prompts.append(p)
         targets.append(t)
-    max_len = max(len(p) + len(t) for p, t in zip(prompts, targets))
+    max_len = max(len(p) + len(t) for p, t in zip(prompts, targets, strict=True))
     return make_lm_batch(prompts, targets, max_len)
 
 

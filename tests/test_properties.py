@@ -177,7 +177,7 @@ def test_routing_constant_between_breakpoints(pool):
     p, s, _ = pool
     bps = alpha_search.breakpoints(p, s)
     grid = np.concatenate([[0.0], bps, [1.0]])
-    for lo, hi in zip(grid[:-1], grid[1:]):
+    for lo, hi in zip(grid[:-1], grid[1:], strict=True):
         if hi - lo < 1e-9:
             continue
         a1 = lo + (hi - lo) * 0.25

@@ -72,12 +72,21 @@ def test_decode_segments_match_one_shot(tiny_trained):
     prompts = np.random.default_rng(2).integers(
         3, 100, size=(4, 18)).astype(np.int32)
     g1, d1 = sampler.generate(params, cfg, prompts, max_new_tokens=8)
-    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
-    gs, ds = [], []
+    # warm the per-segment-length executables, then re-run the segment loop
+    # under a device->host transfer guard: the hot loop must dispatch with
+    # no implicit sync (runtime complement of scopelint's static pass); the
+    # np.asarray conversions below are the intended syncs, outside the guard
+    warm = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
     for steps in (3, 3, 2):
-        state, g, d = sampler.decode_segment(params, cfg, state, steps)
-        gs.append(np.asarray(g))
-        ds.append(np.asarray(d))
+        warm, _, _ = sampler.decode_segment(params, cfg, warm, steps)
+    segs = []
+    with jax.transfer_guard_device_to_host("disallow"):
+        state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8)
+        for steps in (3, 3, 2):
+            state, g, d = sampler.decode_segment(params, cfg, state, steps)
+            segs.append((g, d))
+    gs = [np.asarray(g) for g, _ in segs]
+    ds = [np.asarray(d) for _, d in segs]
     np.testing.assert_array_equal(np.concatenate(gs, axis=1), g1)
     np.testing.assert_array_equal(np.concatenate(ds, axis=1), d1)
     assert int(state.positions[0]) == 18 + 8 and state.used == 18 + 8
@@ -92,13 +101,20 @@ def test_decode_segments_match_one_shot_temperature(tiny_trained):
     key = jax.random.PRNGKey(7)
     g1, _ = sampler.generate(params, cfg, prompts, max_new_tokens=8,
                              temperature=0.8, rng=key)
-    state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8,
-                                  rng=key)
-    gs = []
+    warm = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8,
+                                 rng=key)
     for steps in (5, 3):
-        state, g, _ = sampler.decode_segment(params, cfg, state, steps,
-                                             temperature=0.8)
-        gs.append(np.asarray(g))
+        warm, _, _ = sampler.decode_segment(params, cfg, warm, steps,
+                                            temperature=0.8)
+    segs = []
+    with jax.transfer_guard_device_to_host("disallow"):
+        state = sampler.prefill_state(params, cfg, prompts, max_new_tokens=8,
+                                      rng=key)
+        for steps in (5, 3):
+            state, g, _ = sampler.decode_segment(params, cfg, state, steps,
+                                                 temperature=0.8)
+            segs.append(g)
+    gs = [np.asarray(g) for g in segs]
     np.testing.assert_array_equal(np.concatenate(gs, axis=1), g1)
 
 

@@ -33,7 +33,16 @@ def prompts():
 
 def _assert_decode_parity(params, prompts, **kw):
     g_old, full = legacy_generate(params, TINY, prompts, **kw)
-    g_new, dec = sampler.generate(params, TINY, prompts, **kw)
+    # warm the executables, then re-run under a device->host transfer guard:
+    # the fused path must produce its device outputs without a single
+    # implicit sync (the runtime complement of scopelint's static pass) —
+    # the only intended syncs are the np.asarray conversions at parse time,
+    # which happen outside the guard below
+    sampler.generate(params, TINY, prompts, **kw)
+    with jax.transfer_guard_device_to_host("disallow"):
+        gen_dev, dec_dev = sampler.generate_async(params, TINY, prompts,
+                                                  **kw)
+    g_new, dec = np.asarray(gen_dev), np.asarray(dec_dev)
     np.testing.assert_array_equal(g_old, g_new)
     np.testing.assert_allclose(
         full[:, :, list(sampler.DECISION_TOKENS)], dec,

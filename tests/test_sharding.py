@@ -35,8 +35,8 @@ def test_param_specs_divisible(arch):
         specs, is_leaf=lambda x: isinstance(x, P))
     sizes = {"data": 16, "model": 16}
     assert len(flat_p) == len(flat_s)
-    for leaf, spec in zip(flat_p, flat_s):
-        for dim, ax in zip(leaf.shape, tuple(spec)):
+    for leaf, spec in zip(flat_p, flat_s, strict=True):
+        for dim, ax in zip(leaf.shape, tuple(spec), strict=False):
             if ax is None:
                 continue
             axes = (ax,) if isinstance(ax, str) else ax
@@ -57,8 +57,8 @@ def test_cache_specs_divisible_batch1():
     flat_s = jax.tree_util.tree_leaves(
         specs, is_leaf=lambda x: isinstance(x, P))
     sizes = {"data": 16, "model": 16}
-    for leaf, spec in zip(flat_c, flat_s):
-        for dim, ax in zip(leaf.shape, tuple(spec)):
+    for leaf, spec in zip(flat_c, flat_s, strict=True):
+        for dim, ax in zip(leaf.shape, tuple(spec), strict=False):
             if ax is None:
                 continue
             axes = (ax,) if isinstance(ax, str) else ax

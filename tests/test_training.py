@@ -74,7 +74,8 @@ def test_checkpoint_roundtrip(tmp_path):
     checkpoint.save(path, params)
     zeros = jax.tree.map(jnp.zeros_like, params)
     restored = checkpoint.load(path, zeros)
-    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
