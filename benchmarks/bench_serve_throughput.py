@@ -36,6 +36,20 @@ Sections:
                     consistent fault ledger, zero recompiles after
                     warmup, and that the zero-fault plan is bit-identical
                     to running with no plan at all
+  tier0_sweep     — two-tier routing: a tier-0 pre-router head distilled
+                    from the engine's own estimator answers high-confidence
+                    (query, model) pairs in one jitted forward, and only
+                    the rest escalate to the reasoning decode.  The same
+                    ragged stream runs at ~0% / ~10% / ~50% / 100%
+                    escalation (confidence quantiles of the head); every
+                    row carries the scheduler's tier ledger plus decision
+                    quality vs the 100%-escalation reference.  --smoke
+                    asserts zero recompiles after warmup in every row, the
+                    ~10% row at >= 3x the full-reasoning q/s, and — with
+                    caching on — that threshold > 1 is bit-identical to
+                    running without a tier-0 head at all (predictions,
+                    cache contents, deterministic scheduler stats modulo
+                    the tier ledger)
   stream_naive    — ``predict`` called per ragged tick (the pre-scheduler
                     behavior): every distinct tick size compiles a fresh
                     (batch, len) executable
@@ -587,6 +601,166 @@ def bench_chaos(engine, queries, *, bucket_sizes, segment_len: int = 4,
                    "recompiles_after_warmup": recompiles}}]
 
 
+def bench_tier0(engine, queries, *, bucket_sizes, data, mk,
+                distill_steps: int = 200, max_pairs: int = 1200,
+                repeats: int = 2, smoke: bool = False) -> List[Dict]:
+    """Escalation-threshold sweep for two-tier routing + identity gate.
+
+    A tier-0 pre-router head is distilled from ``engine``'s own estimator
+    (teacher labels come from the reasoning decode's parsed outputs), then
+    the same ragged stream runs at four escalation thresholds: 0 (every
+    pair answered by the head), the head's 10% and 50% confidence
+    quantiles over this exact workload (~10% / ~50% of pairs escalate),
+    and 2.0 (every pair pays the full reasoning decode — the reference
+    row).  Tier-0 answered pairs never enter the microbatch scheduler, so
+    the q/s gain tracks the decode tokens the ledger says were saved.
+
+    Decision quality is measured against the 100%-escalation reference:
+    ``FixedAlphaPolicy`` choice agreement and confidence MAE per row.
+    The separate identity check streams with caching *on* through two
+    fresh engines — tier-0 at threshold 2.0 vs no tier-0 at all — and
+    compares every prediction field, the cache stores, and the
+    deterministic scheduler stats (everything except wall-clock queue
+    ages and the new tier ledger); --smoke asserts all of it.
+    """
+    from benchmarks.common import tier_ledger
+    from repro.api import FixedAlphaPolicy, RouteRequest
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+    from repro.serving.scheduler import decode_compile_counts
+    from repro.training.tier0 import distill_tier0
+
+    head = distill_tier0(data, engine.config.library,
+                         engine.config.retriever, engine.estimator,
+                         max_pairs=max_pairs, steps=distill_steps, seed=0)
+    ticks = _as_ticks(queries, _tick_sizes(len(queries), max_tick=3))
+    cfg = BucketConfig(batch_sizes=bucket_sizes)
+    n_pairs = len(queries) * len(engine.registry.routable())
+
+    def stream(eng, *, use_cache=False):
+        sched = MicrobatchScheduler(cfg)
+        t0 = time.perf_counter()
+        pools = list(eng.predict_stream(
+            (RouteRequest(t) for t in ticks), scheduler=sched,
+            use_cache=use_cache))
+        return pools, time.perf_counter() - t0, sched
+
+    def cat(pools, field):
+        return np.concatenate([np.asarray(getattr(p, field)).reshape(-1)
+                               for p in pools])
+
+    # head confidences over this exact workload: at threshold 0 every
+    # pair is answered by the head, so p_hat IS the calibrated tier-0
+    # probability and max(p, 1-p) the escalation signal the gate sees
+    policy = FixedAlphaPolicy(0.6)
+    results = {}
+    try:
+        engine.config.tier0 = head
+        engine.config.escalation_threshold = 0.0
+        probe_pools, _, _ = stream(engine)
+        p0 = cat(probe_pools, "p_hat")
+        conf = np.maximum(p0, 1.0 - p0)
+        sweep = [("esc_0", 0.0),
+                 ("esc_10", float(np.quantile(conf, 0.10))),
+                 ("esc_50", float(np.quantile(conf, 0.50))),
+                 ("esc_100", 2.0)]
+        for tag, thr in sweep:
+            engine.config.escalation_threshold = thr
+            stream(engine)          # warm this row's decode bucket shapes
+            warmed = decode_compile_counts()
+            best = pools = sched = None
+            for _ in range(repeats):
+                pools, dt, sched = stream(engine)
+                best = dt if best is None else min(best, dt)
+            choices = np.concatenate(
+                [np.asarray(policy.decide(p, engine).choices)
+                 for p in pools])
+            results[tag] = {
+                "thr": thr, "qps": len(queries) / best, "pools": pools,
+                "stats": sched.stats, "choices": choices,
+                "recompiles": _compile_delta(warmed,
+                                             decode_compile_counts())}
+    finally:
+        engine.config.tier0 = None
+        engine.config.escalation_threshold = 0.9
+
+    # -- identity gate: threshold > 1 must equal no tier-0 head at all --
+    ref_eng, t0_eng = mk(), mk(tier0=head, escalation_threshold=2.0)
+    ref_pools, _, ref_sched = stream(ref_eng, use_cache=True)
+    t0_pools, dt_id, t0_sched = stream(t0_eng, use_cache=True)
+    fields = ("p_hat", "y_hat", "len_hat", "well_formed", "cost_hat",
+              "pred_overhead", "status")
+    identical_fields = all(
+        np.array_equal(cat(t0_pools, f), cat(ref_pools, f))
+        for f in fields)
+    identical_cache = t0_eng.cache._store == ref_eng.cache._store
+
+    def det_stats(sched_stats):
+        return {k: v for k, v in sched_stats.as_dict().items()
+                if k not in ("queue_age_ms", "tiers")}
+
+    identical_stats = det_stats(t0_sched.stats) == det_stats(ref_sched.stats)
+
+    rate = {tag: results[tag]["stats"].escalation_rate
+            for tag, _ in sweep}
+    if smoke:
+        for tag, _ in sweep:
+            assert results[tag]["recompiles"] == 0, (
+                f"tier-0 row {tag} recompiled "
+                f"{results[tag]['recompiles']} executables after warmup — "
+                f"the gate must reuse the warmed pair buckets and decode "
+                f"shapes")
+        assert rate["esc_0"] == 0.0, (
+            f"threshold 0 escalated {rate['esc_0']:.2%} of pairs — "
+            f"conf = max(p, 1-p) >= 0.5 must answer everything")
+        assert rate["esc_100"] == 1.0, (
+            f"threshold 2.0 escalated only {rate['esc_100']:.2%} — "
+            f"a threshold > 1 must escalate every pair")
+        assert 0.0 < rate["esc_10"] <= 0.3, (
+            f"10%-quantile threshold escalated {rate['esc_10']:.2%}")
+        assert 0.2 <= rate["esc_50"] <= 0.8, (
+            f"50%-quantile threshold escalated {rate['esc_50']:.2%}")
+        assert results["esc_10"]["qps"] >= 3.0 * results["esc_100"]["qps"], (
+            f"~10% escalation q/s {results['esc_10']['qps']:.2f} is not "
+            f">= 3x full reasoning {results['esc_100']['qps']:.2f} — "
+            f"tier-0 answers are not skipping the decode")
+        assert identical_fields, (
+            "tier-0 at threshold 2.0 changed prediction fields vs no "
+            "tier-0 head — 100% escalation must be bit-identical")
+        assert identical_cache, (
+            "tier-0 at threshold 2.0 left different cache contents vs no "
+            "tier-0 head")
+        assert identical_stats, (
+            "tier-0 at threshold 2.0 perturbed deterministic scheduler "
+            "stats vs no tier-0 head")
+
+    ref_p = cat(results["esc_100"]["pools"], "p_hat")
+    ref_choices = results["esc_100"]["choices"]
+    rows = []
+    for tag, thr in sweep:
+        r = results[tag]
+        agree = float(np.mean(r["choices"] == ref_choices))
+        p_mae = float(np.mean(np.abs(cat(r["pools"], "p_hat") - ref_p)))
+        rows.append({
+            "name": f"serve_throughput/tier0_{tag}", "qps": r["qps"],
+            "detail": {"threshold": round(thr, 4), "pairs": n_pairs,
+                       "tiers": tier_ledger(r["stats"]),
+                       "decision_agreement": round(agree, 4),
+                       "p_conf_mae": round(p_mae, 4),
+                       "recompiles_after_warmup": r["recompiles"],
+                       "speedup_vs_full_reasoning": round(
+                           r["qps"] / max(results["esc_100"]["qps"], 1e-9),
+                           3)}})
+    rows.append({
+        "name": "serve_throughput/tier0_identity",
+        "qps": len(queries) / dt_id,
+        "detail": {"threshold": 2.0,
+                   "identical_fields": identical_fields,
+                   "identical_cache": identical_cache,
+                   "identical_stats": identical_stats,
+                   "temperature": round(head.temperature, 3)}})
+    return rows
+
+
 def bench_sharded(engine, queries, *, bucket_sizes) -> List[Dict]:
     """Bucketed stream with the estimator placed on the serve mesh."""
     import jax
@@ -658,6 +832,9 @@ def run(bundle) -> List[Tuple[str, float, str]]:
     rows += bench_chaos(bundle.engine(bundle.seen, kv_paged=True,
                                       kv_page_size=8),
                         queries, bucket_sizes=BUCKETS)
+    rows += bench_tier0(bundle.engine(bundle.seen), queries,
+                        bucket_sizes=BUCKETS, data=bundle.data,
+                        mk=lambda **kw: bundle.engine(bundle.seen, **kw))
     rows += bench_sharded(bundle.engine(bundle.seen), queries,
                           bucket_sizes=BUCKETS)
     _emit(rows, smoke=False)
@@ -728,14 +905,17 @@ def _smoke_trained_setup():
                            max_examples=800, seed=0)
     params = M.init_params(jax.random.PRNGKey(0), TINY)
     params, _ = train_sft(params, TINY, ds, steps=50, batch_size=32)
-    engine = _smoke_engine(world, data, library, retriever, params,
-                           max_new_tokens=16)
+
+    def mk(**ekw):
+        return _smoke_engine(world, data, library, retriever, params,
+                             max_new_tokens=16, **ekw)
+
+    engine = mk()
     # paged twin: same params and pool, block-paged decode KV — streams
     # must be bit-identical to the dense engine's refill streams
-    paged = _smoke_engine(world, data, library, retriever, params,
-                          max_new_tokens=16, kv_paged=True, kv_page_size=8)
+    paged = mk(kv_paged=True, kv_page_size=8)
     queries = [data.queries[int(q)] for q in data.test_qids[:16]]
-    return engine, paged, queries
+    return engine, paged, queries, data, mk
 
 
 def main(argv=None) -> int:
@@ -759,13 +939,17 @@ def main(argv=None) -> int:
                             repeats=args.repeats or 2, max_tick=3,
                             smoke=True)
         rows += bench_deadline(engine, queries[:6], smoke=True)
-        trained, tpaged, tqueries = _smoke_trained_setup()
+        trained, tpaged, tqueries, tdata, tmk = _smoke_trained_setup()
         rows += bench_refill(trained, tqueries, bucket_sizes=(1, 2, 4, 8),
                              repeats=args.repeats or 2, smoke=True)
         rows += bench_paged(trained, tpaged, tqueries,
                             bucket_sizes=(1, 2, 4, 8),
                             repeats=args.repeats or 2, smoke=True)
         rows += bench_chaos(tpaged, tqueries, bucket_sizes=(1, 2, 4, 8),
+                            smoke=True)
+        rows += bench_tier0(trained, tqueries, bucket_sizes=(1, 2, 4, 8),
+                            data=tdata, mk=tmk, distill_steps=60,
+                            max_pairs=256, repeats=args.repeats or 2,
                             smoke=True)
         rows += bench_sharded(engine, queries, bucket_sizes=(1, 2, 4, 8))
         _emit(rows, smoke=True)
@@ -776,7 +960,9 @@ def main(argv=None) -> int:
               "routing decisions, paged KV bit-identical to dense at "
               "lower peak KV tokens, chaos stream delivers every pair "
               "exactly once with a consistent fault ledger and the "
-              "zero-fault plan bit-identical to no plan")
+              "zero-fault plan bit-identical to no plan, tier-0 gating "
+              "answers high-confidence pairs at >= 3x full-reasoning q/s "
+              "with 100% escalation bit-identical to no tier-0 head")
     else:
         from benchmarks.common import get_bundle
         rows_csv = run(get_bundle())

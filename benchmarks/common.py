@@ -140,3 +140,15 @@ def pool_predictions_cached(bundle: Bundle, *, ood: bool, which: str = "scope",
 def route_alpha(engine, pool, alpha: float, **kw) -> np.ndarray:
     """argmax-utility choices at a fixed alpha (Eq. 15) via the engine."""
     return np.argmax(engine.utilities(pool, float(alpha), **kw), axis=1)
+
+
+def tier_ledger(stats) -> Dict[str, object]:
+    """Two-tier routing ledger for bench JSON rows.
+
+    Pulls the ``tiers`` block straight from ``SchedulerStats.as_dict()``
+    (tier-0 answered pairs, escalations, escalation rate, degraded
+    fallbacks to the stashed tier-0 answer, and decode tokens saved) so
+    every bench that streams through a scheduler attaches the same ledger
+    shape to its rows.
+    """
+    return stats.as_dict()["tiers"]

@@ -16,10 +16,11 @@ walked recursively (scan bodies, pjit sub-jaxprs, pallas kernels) for:
   (``device_put`` to a host memory kind).
 
 Registry: ``register("name")(builder)`` where ``builder() -> ClosedJaxpr``.
-The default registry covers the serve path's five jitted executables —
+The default registry covers the serve path's six jitted executables —
 fused decode (``_scan_decode``), fused refill (``_refill_scan_decode``),
-the paged segment scan (``_paged_scan_decode``, XLA and Pallas kernels)
-and the paged fused refill — built over the TINY estimator config.  A
+the paged segment scan (``_paged_scan_decode``, XLA and Pallas kernels),
+the paged fused refill, and the tier-0 pre-router forward
+(``tier0_forward``) — built over the TINY estimator config.  A
 builder that *fails to trace* is itself a finding: the hot path no longer
 compiles, which is worse than any primitive it might contain.
 """
@@ -244,3 +245,17 @@ def _register_defaults() -> None:
         return jax.make_jaxpr(fn)(s["params"], s["last"], pcaches,
                                   s["key"], table, s["pos"], s["done"],
                                   mask, s["tokens"], rlens, ids)
+
+    @register("tier0_forward")
+    def _tier0_forward():
+        from repro.models import tier0 as T0
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        cfg = T0.Tier0Config()
+        params = jax.eval_shape(
+            functools.partial(T0.init_tier0, cfg=cfg), key)
+        n, K = T0.PAIR_BUCKETS[0], 5
+        qf = jax.ShapeDtypeStruct((n, T0.QUERY_FEATS), jnp.float32)
+        af = jax.ShapeDtypeStruct((n, K, T0.ANCHOR_FEATS), jnp.float32)
+        mf = jax.ShapeDtypeStruct((n, T0.MODEL_FEATS), jnp.float32)
+        mid = jax.ShapeDtypeStruct((n,), jnp.int32)
+        return jax.make_jaxpr(T0.tier0_forward)(params, qf, af, mf, mid)

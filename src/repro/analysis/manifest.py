@@ -20,6 +20,7 @@ HOT_PATH_PREFIXES = (
 )
 HOT_PATH_FILES = (
     "repro/api/engine.py",
+    "repro/models/tier0.py",    # tier-0 pre-router: gates every request
 )
 
 

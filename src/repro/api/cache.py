@@ -34,9 +34,10 @@ class CachedPrediction:
     """The estimator's raw parsed output for one (query, model) pair.
 
     ``status`` marks degraded-mode entries (``core.status``): a DEGRADED
-    entry is a provisional answer from retrieval priors, and the cache
-    lets a later full (OK) prediction overwrite it while never allowing
-    the reverse — the tier-0/tier-1 overwrite scheme.
+    entry is a provisional answer from retrieval priors.  ``tier`` marks
+    which estimator produced the entry: 0 for the pre-router head, 1 for
+    the reasoning decode.  Both feed the same overwrite rule — see
+    ``PredictionCache._downgrades``.
     """
     y_hat: int
     len_hat: float
@@ -45,6 +46,7 @@ class CachedPrediction:
     pred_tokens: int            # overhead spent when this entry was computed
     prompt_tokens: int          # serialized prompt length (cost accounting)
     status: int = STATUS_OK
+    tier: int = 1               # 0 = pre-router head, 1 = reasoning decode
 
 
 @dataclasses.dataclass
@@ -110,16 +112,23 @@ class PredictionCache:
         self.stats.hits += 1
         return entry
 
+    @staticmethod
+    def _rank(pred: CachedPrediction) -> Tuple[int, int]:
+        """Overwrite rank: health first (OK beats DEGRADED/FAILED), then
+        tier (reasoning decode beats pre-router head)."""
+        return (1 if pred.status == STATUS_OK else 0, pred.tier)
+
     def _downgrades(self, key: Tuple[int, str, str],
                     pred: CachedPrediction) -> bool:
-        """Whether writing ``pred`` would replace a full prediction with a
-        degraded one.  OK entries overwrite anything (a late real decode
-        heals the degraded entry written at quarantine/expiry); non-OK
-        entries never clobber an existing OK entry."""
-        if pred.status == STATUS_OK:
-            return False
+        """Whether writing ``pred`` would replace a strictly better entry.
+
+        An entry's rank is ``(status == OK, tier)``: an OK escalated
+        (tier-1) decode heals anything; an OK tier-0 answer heals degraded
+        entries but never clobbers a real decode; non-OK entries never
+        clobber an OK entry of either tier.  Equal-rank writes refresh in
+        place (a newer answer of the same quality wins)."""
         old = self._store.get(key)
-        return old is not None and old.status == STATUS_OK
+        return old is not None and self._rank(pred) < self._rank(old)
 
     def put(self, query_id: int, model: str, version: str,
             pred: CachedPrediction) -> None:

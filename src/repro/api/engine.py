@@ -70,6 +70,15 @@ class _PredictState:
     prompts: List[List[int]]    # serialized prompt per missing pair
     use_cache: bool
     status: Optional[np.ndarray] = None     # (Q, M) core.status codes
+    # two-tier gate outcome: after ``_gate_tier0`` runs, ``missing`` /
+    # ``prompts`` hold only the escalated pairs; answered pairs were
+    # scattered into the prediction columns directly.  ``t0_rows`` keeps
+    # the escalated pairs' tier-0 (p, len_hat, y_hat) so a quarantined or
+    # expired escalation degrades to the head's answer, not the retrieval
+    # prior.
+    tier0_answered: int = 0
+    escalated: int = 0
+    t0_rows: Optional[Dict[int, Tuple[float, float, int]]] = None
 
 
 class _StreamEntry:
@@ -149,6 +158,9 @@ class _StreamControl:
         self.t_submit: Dict[Any, float] = {}
         self.n_prompt: Dict[Any, int] = {}
         self.unresolved: Dict[Any, bool] = {}   # insertion-ordered set
+        # escalated pairs' stashed tier-0 (p, len_hat, y_hat): the degrade
+        # ladder prefers the head's answer over the retrieval prior
+        self.t0_rows: Dict[Any, Tuple[float, float, int]] = {}
         self.sleep = time.sleep                 # injectable in tests
 
     def now(self) -> float:
@@ -224,10 +236,13 @@ class _StreamControl:
 
     # -- graceful degradation ---------------------------------------------
     def degrade(self, key) -> None:
-        """Answer every waiter on ``key`` from retrieval priors (or mark
-        the pair FAILED when ``EngineConfig.degrade`` is off) and resolve
-        the key.  All waiters share one fallback row — they are the same
-        (query, model) content by construction of the dedup key."""
+        """Answer every waiter on ``key`` in degraded mode and resolve the
+        key.  The fallback ladder: the pair's stashed tier-0 answer (an
+        escalation that never completed its decode still has the head's
+        calibrated estimate), then retrieval priors, then FAILED when
+        ``EngineConfig.degrade`` is off.  All waiters share one fallback
+        row — they are the same (query, model) content by construction of
+        the dedup key."""
         waiters = self.inflight.pop(key, None)
         self.note_resolved(key)
         if not waiters:
@@ -237,7 +252,19 @@ class _StreamControl:
         owner, miss_i = waiters[0]
         st = owner.state
         qi, mi = st.missing[miss_i]
-        if cfg.degrade:
+        tier = 1
+        if cfg.degrade and key in self.t0_rows:
+            from repro.core.estimator import ParsedBatch
+            from repro.core.status import STATUS_DEGRADED
+            p, lh, y = self.t0_rows[key]
+            batch = ParsedBatch(
+                np.asarray([y]), np.asarray([lh]), np.ones(1, bool),
+                np.asarray([p]), np.zeros(1, int), np.zeros(1, int),
+                status=np.full(1, STATUS_DEGRADED, np.int8))
+            stats.degraded += 1
+            stats.tier0_fallbacks += 1
+            tier = 0
+        elif cfg.degrade:
             batch = self.fallback.predict_pairs(
                 st.sims[qi:qi + 1], st.idx[qi:qi + 1], [st.models[mi]])
             stats.degraded += 1
@@ -252,7 +279,7 @@ class _StreamControl:
                 well_formed=bool(batch.well_formed[0]),
                 p_conf=float(batch.p_conf[0]), pred_tokens=0,
                 prompt_tokens=self.prompt_tokens(key),
-                status=int(batch.status[0]))])
+                status=int(batch.status[0]), tier=tier)])
 
 
 class ScopeEngine:
@@ -378,15 +405,82 @@ class ScopeEngine:
 
         missing = np.argwhere(~hit)                     # (n, 2) row-major
         prompts: List[List[int]] = []
+        feats = None
+        if cfg.tier0 is not None and len(missing):
+            from repro.models.tier0 import pair_features
+            feats = []
         for qi, mi in missing:
             m = models[mi]
+            meta = self.registry.meta(m)
+            midx = self.registry.index(m)
+            fp = self.library.get(m)
             prompts.append(serialization.serialize_prompt(
-                self.registry.meta(m), self.registry.index(m),
-                self.library.anchor_set, self.library.get(m),
+                meta, midx, self.library.anchor_set, fp,
                 sims[qi], idx[qi], queries[qi]))
-        return _PredictState(models, queries, qkeys, sims, idx, hit, y_hat,
-                             len_hat, wf, p_conf, prompt_tok, missing,
-                             prompts, use_cache, status=status)
+            if feats is not None:
+                feats.append(pair_features(
+                    meta, midx, self.library.anchor_set, fp,
+                    sims[qi], idx[qi], queries[qi]))
+        st = _PredictState(models, queries, qkeys, sims, idx, hit, y_hat,
+                           len_hat, wf, p_conf, prompt_tok, missing,
+                           prompts, use_cache, status=status)
+        if feats is not None:
+            self._gate_tier0(st, feats)
+        return st
+
+    def _gate_tier0(self, st: "_PredictState", feats: List) -> None:
+        """Tier-0 gating stage: one jitted head forward over the missing
+        pairs; pairs whose calibrated confidence clears
+        ``escalation_threshold`` are answered in place (OK status, zero
+        decode overhead, the serialized prompt length for Eq. 24 cost
+        accounting) and removed from ``missing``/``prompts`` so they never
+        reach the estimator, the scheduler, or the in-flight dedup map.
+        The rest escalate unchanged, with their tier-0 rows stashed for
+        quarantine/deadline fallback."""
+        cfg = self.config
+        batch0 = cfg.tier0.predict_features(feats)
+        answer = batch0.conf >= cfg.escalation_threshold
+        st.tier0_answered = int(answer.sum())
+        st.escalated = len(feats) - st.tier0_answered
+        keep = np.flatnonzero(~answer)
+        st.t0_rows = {int(new_i): (float(batch0.p[i]),
+                                   float(batch0.len_hat[i]),
+                                   int(batch0.y_hat[i]))
+                      for new_i, i in enumerate(keep)}
+        if st.tier0_answered == 0:
+            return
+        taken = np.flatnonzero(answer)
+        aq, am = st.missing[taken, 0], st.missing[taken, 1]
+        st.y_hat[aq, am] = batch0.y_hat[taken]
+        st.len_hat[aq, am] = batch0.len_hat[taken]
+        st.wf[aq, am] = True
+        st.p_conf[aq, am] = batch0.p[taken]
+        plens = np.fromiter((len(st.prompts[i]) for i in taken), int,
+                            count=len(taken))
+        st.prompt_tok[aq, am] = plens
+        if st.use_cache:
+            self.cache.put_many(
+                [(st.qkeys[qi], st.models[mi], cfg.estimator_version)
+                 for qi, mi in st.missing[taken]],
+                [CachedPrediction(
+                    y_hat=int(batch0.y_hat[i]),
+                    len_hat=float(batch0.len_hat[i]),
+                    well_formed=True, p_conf=float(batch0.p[i]),
+                    pred_tokens=0, prompt_tokens=int(plens[j]),
+                    status=STATUS_OK, tier=0)
+                 for j, i in enumerate(taken)])
+        st.missing = st.missing[keep]
+        st.prompts = [st.prompts[i] for i in keep]
+
+    def _fold_tier_stats(self, stats, st: "_PredictState") -> None:
+        """Accumulate the per-request gate outcome into the stream's
+        ``SchedulerStats`` tier ledger."""
+        if self.config.tier0 is None:
+            return
+        stats.tier0_answered += st.tier0_answered
+        stats.escalated += st.escalated
+        budget = int(getattr(self.estimator, "max_new_tokens", 0) or 0)
+        stats.tier0_decode_tokens_saved += st.tier0_answered * budget
 
     def _finalize(self, st: "_PredictState", batch, *,
                   put_cache: bool = True) -> PoolPredictions:
@@ -445,7 +539,9 @@ class ScopeEngine:
                                overhead, st.sims, st.idx,
                                cache_hits=int(st.hit.sum()),
                                cache_misses=len(missing),
-                               status=st.status)
+                               status=st.status,
+                               tier0_answered=st.tier0_answered,
+                               escalated=st.escalated)
 
     def predict(self, request: RouteRequest, *,
                 rng: Optional[jax.Array] = None,
@@ -531,6 +627,8 @@ class ScopeEngine:
             inflight[key] = [(entry, miss_i)]
             if control is not None:
                 control.note_submit(key, prompt)
+                if st.t0_rows is not None:
+                    control.t0_rows[key] = st.t0_rows[miss_i]
             sched.submit(key, prompt)
         return serial
 
@@ -674,6 +772,7 @@ class ScopeEngine:
         with runtime:
             for request in requests:
                 st = self._prepare(request, use_cache)
+                self._fold_tier_stats(sched.stats, st)
                 entry = _StreamEntry(st)
                 pending.append(entry)
                 serial = self._submit_misses(st, entry, sched, inflight,
@@ -775,6 +874,7 @@ class ScopeEngine:
 
         for request in requests:
             st = self._prepare(request, use_cache)
+            self._fold_tier_stats(sched.stats, st)
             entry = _StreamEntry(st)
             pending.append(entry)
             serial = self._submit_misses(st, entry, sched, inflight,

@@ -22,6 +22,7 @@ if TYPE_CHECKING:                               # components, no runtime cycle
     from repro.core.fingerprint import FingerprintLibrary
     from repro.core.retrieval import AnchorRetriever
     from repro.data.worldsim import PoolModel
+    from repro.models.tier0 import Tier0Head
     from repro.serving.faults import FaultPlan
 
 
@@ -80,6 +81,16 @@ class EngineConfig:
     deadline_ms: Optional[float] = None
     degrade: bool = True
     fault_plan: Optional["FaultPlan"] = None
+    # two-tier routing: a distilled pre-router head answers (query, model)
+    # pairs whose calibrated confidence max(p, 1-p) clears
+    # escalation_threshold in one jitted forward; only the remainder pays
+    # the reasoning decode.  Thresholds <= 0.5 escalate nothing (conf is
+    # always >= 0.5); thresholds > 1.0 escalate everything, bit-identical
+    # to tier0=None.  Tier-0 answers never enter the scheduler or the
+    # in-flight dedup map, and their cache entries carry tier=0 so an
+    # escalated decode overwrites them but never the reverse.
+    tier0: Optional["Tier0Head"] = None
+    escalation_threshold: float = 0.9
 
 
 @dataclasses.dataclass

@@ -33,6 +33,10 @@ class PoolPredictions:
     cache_misses: int = 0       # pairs that ran the estimator
     status: Optional[np.ndarray] = None     # (Q, M) core.status codes;
     #                                         None -> all OK (batch path)
+    tier0_answered: int = 0     # pairs answered by the tier-0 pre-router
+    escalated: int = 0          # pairs the gate sent to the reasoning
+    #                             decode (== cache_misses with a tier-0
+    #                             head configured; 0 without one)
 
     @property
     def degraded_fraction(self) -> float:

@@ -19,6 +19,8 @@ retraining — and serves a batch of queries under a chosen routing policy.
       --max-pending 2
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
       --chaos 0 --max-retries 2 --deadline-ms 500
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --tier0 --escalation-threshold 0.9
 """
 from __future__ import annotations
 
@@ -123,6 +125,17 @@ def main(argv=None):
                          "this value (FaultPlan.seeded: dispatch/segment/"
                          "parse/pool failures at ~10%% rates) into the "
                          "stream — requires --stream-ticks")
+    ap.add_argument("--tier0", action="store_true",
+                    help="two-tier routing: distill a tier-0 pre-router "
+                         "head from the estimator and answer high-"
+                         "confidence (query, model) pairs in one jitted "
+                         "forward; only the rest pay the reasoning decode")
+    ap.add_argument("--escalation-threshold", type=float, default=0.9,
+                    help="tier-0 confidence max(p, 1-p) below which a pair "
+                         "escalates to the reasoning decode (<= 0.5 "
+                         "escalates nothing, > 1.0 escalates everything)")
+    ap.add_argument("--tier0-steps", type=int, default=300,
+                    help="distillation steps for the --tier0 head")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -153,13 +166,26 @@ def main(argv=None):
             args.chaos, rates={"dispatch": 0.1, "segment": 0.1,
                                "parse": 0.1, "pool": 0.1})
 
+    estimator = ReasoningEstimator(cfg, params)
+    tier0_head = None
+    if args.tier0:
+        from repro.training.tier0 import distill_tier0
+        print("distilling tier-0 pre-router from the estimator...")
+        tier0_head = distill_tier0(data, lib, retr, estimator,
+                                   max_pairs=3000, steps=args.tier0_steps,
+                                   seed=args.seed)
+        print(f"# tier-0 calibration temperature "
+              f"{tier0_head.temperature:.3f}")
+
     engine = ScopeEngine.build(EngineConfig(
-        estimator=ReasoningEstimator(cfg, params), retriever=retr,
+        estimator=estimator, retriever=retr,
         library=lib, models_meta={m: world.models[m] for m in data.models},
         kv_paged=args.kv_paged, kv_page_size=args.kv_page_size,
         kv_pool_pages=args.kv_pool_pages,
         max_retries=args.max_retries, deadline_ms=args.deadline_ms,
-        degrade=not args.no_degrade, fault_plan=fault_plan))
+        degrade=not args.no_degrade, fault_plan=fault_plan,
+        tier0=tier0_head,
+        escalation_threshold=args.escalation_threshold))
 
     if args.kv_paged and args.kv_pool_pages is not None:
         # a request admitted at a boundary may decode its whole budget:

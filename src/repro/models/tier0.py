@@ -1,0 +1,235 @@
+"""Tier-0 pre-router: one cross-attention forward instead of a reasoning
+decode ("One Head, Many Models" applied to the SCOPE serve path).
+
+The reasoning estimator spends ``max_new_tokens`` decode steps per
+(query, model) pair.  The tier-0 head reads *exactly the features the
+serialized prompt encodes* — the query embedding + domain, the retrieved
+anchor slice of the model's fingerprint (similarities, outcomes, token
+counts, anchor domains), and the model's metadata (price bucket, reasoning
+flag, seen flag, identity embedding) — and emits the same prediction tuple
+(p_correct, len_bucket) plus a calibrated confidence, in a single jitted
+forward over all pairs.  ``ScopeEngine._prepare`` answers pairs whose
+confidence clears ``EngineConfig.escalation_threshold`` directly from this
+head; only the low-confidence remainder escalates to the reasoning decode.
+
+Serve-path invariants (this module is on the scopelint hot-path manifest):
+
+- **fixed bucket shapes**: pair batches are padded up to ``PAIR_BUCKETS``
+  sizes so steady-state traffic reuses a handful of compiled executables —
+  ``COMPILE_COUNTS["tier0"]`` is incremented inside the traced body, once
+  per compilation, and feeds the "0 recompiles after warmup" CI gate;
+- **no serve-time nondeterminism**: ``init_tier0`` takes its PRNG key as a
+  parameter; nothing here reads clocks or constructs fresh keys;
+- **temperature on the host**: calibration scales the correctness logit in
+  numpy *after* the forward, so refitting the temperature never invalidates
+  a compiled executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fingerprint import AnchorSet, Fingerprint
+from repro.data import tokenizer as tok
+from repro.data.worldsim import EMBED_DIM, NUM_DOMAINS, PoolModel, Query
+from repro.models.common import dense_init, embed_init
+
+# traced-body compile instrumentation (same idiom as serving/sampler.py)
+COMPILE_COUNTS: "Counter[str]" = Counter()
+
+# feature widths — derived from the same quantities serialize_prompt tokenizes
+QUERY_FEATS = EMBED_DIM + NUM_DOMAINS       # raw embedding + domain one-hot
+ANCHOR_FEATS = 3 + NUM_DOMAINS              # sim, fp.y, log-len + domain
+MODEL_FEATS = 3                             # price bucket, reasoning, seen
+N_MODEL_SLOTS = tok.NUM_MODEL_TOKENS + 1    # identity slots + shared UNK
+
+# fixed pair-batch grid: a batch of n pairs is padded to the smallest
+# bucket >= n (multiples of the largest bucket beyond it), so the jit
+# cache holds one executable per bucket, never one per traffic shape
+PAIR_BUCKETS = (16, 64, 256, 1024)
+
+
+def pair_bucket(n: int) -> int:
+    """Smallest configured pair-bucket >= n (largest-bucket multiples
+    beyond the grid)."""
+    for b in PAIR_BUCKETS:
+        if b >= n:
+            return b
+    top = PAIR_BUCKETS[-1]
+    return -(-n // top) * top
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier0Config:
+    d_model: int = 32
+    d_hidden: int = 64
+    n_len_buckets: int = tok.NUM_LEN_BUCKETS
+
+
+def init_tier0(key: jax.Array, cfg: Tier0Config = Tier0Config()):
+    """Head parameters; ``key`` is supplied by the caller (training code) —
+    serve code never constructs keys."""
+    ks = jax.random.split(key, 7)
+    d, h = cfg.d_model, cfg.d_hidden
+    slot = ANCHOR_FEATS + MODEL_FEATS + d
+    return {
+        "model_emb": embed_init(ks[0], (N_MODEL_SLOTS, d)),
+        "wq": dense_init(ks[1], (QUERY_FEATS, d)),
+        "wk": dense_init(ks[2], (slot, d)),
+        "wv": dense_init(ks[3], (slot, d)),
+        "w1": dense_init(ks[4], (3 * d, h)),
+        "b1": jnp.zeros((h,), jnp.float32),
+        "w_p": dense_init(ks[5], (h, 1)),
+        "b_p": jnp.zeros((1,), jnp.float32),
+        "w_len": dense_init(ks[6], (h, cfg.n_len_buckets)),
+        "b_len": jnp.zeros((cfg.n_len_buckets,), jnp.float32),
+    }
+
+
+def tier0_forward(params, qf: jax.Array, af: jax.Array, mf: jax.Array,
+                  mid: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Cross-attention forward over (n,) pairs.
+
+    ``qf`` (n, QUERY_FEATS) query features; ``af`` (n, K, ANCHOR_FEATS)
+    retrieved anchor slice; ``mf`` (n, MODEL_FEATS) model metadata; ``mid``
+    (n,) model identity slot.  Returns the correctness logit (n,) and the
+    length-bucket logits (n, n_len_buckets).
+    """
+    d = params["wq"].shape[1]
+    me = params["model_emb"][mid]                           # (n, d)
+    qv = jnp.tanh(qf @ params["wq"])                        # (n, d)
+    K = af.shape[1]
+    slot = jnp.concatenate(
+        [af,
+         jnp.broadcast_to(mf[:, None, :], (af.shape[0], K, mf.shape[1])),
+         jnp.broadcast_to(me[:, None, :], (af.shape[0], K, d))], axis=-1)
+    k = jnp.tanh(slot @ params["wk"])                       # (n, K, d)
+    v = slot @ params["wv"]                                 # (n, K, d)
+    attn = jax.nn.softmax(
+        jnp.einsum("nd,nkd->nk", qv, k) / jnp.sqrt(jnp.float32(d)), axis=-1)
+    pooled = jnp.einsum("nk,nkd->nd", attn, v)              # (n, d)
+    h = jax.nn.relu(
+        jnp.concatenate([qv, pooled, me], axis=-1) @ params["w1"]
+        + params["b1"])
+    p_logit = (h @ params["w_p"] + params["b_p"])[:, 0]
+    len_logits = h @ params["w_len"] + params["b_len"]
+    return p_logit, len_logits
+
+
+@jax.jit
+def _tier0_jit(params, qf, af, mf, mid):
+    COMPILE_COUNTS["tier0"] += 1            # traced once per compilation
+    return tier0_forward(params, qf, af, mf, mid)
+
+
+# ---------------------------------------------------------------------------
+# Featurization — mirrors serialize_prompt's inputs field for field
+# ---------------------------------------------------------------------------
+def pair_features(model: PoolModel, model_index: int, anchor_set: AnchorSet,
+                  fp: Fingerprint, sims: np.ndarray, idx: np.ndarray,
+                  query: Query
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """(qf, af, mf, mid) for one (query, model) pair — the same signature
+    (and information) as ``serialization.serialize_prompt``, so the gate
+    needs no retrieval or serialization pass of its own."""
+    qf = np.zeros(QUERY_FEATS, np.float32)
+    qf[:EMBED_DIM] = query.embedding
+    qf[EMBED_DIM + int(query.domain)] = 1.0
+    K = len(sims)
+    af = np.zeros((K, ANCHOR_FEATS), np.float32)
+    fy = np.asarray(fp.y, np.float64)
+    ft = np.asarray(fp.tokens, np.float64)
+    for j in range(K):
+        i = int(idx[j])
+        af[j, 0] = float(sims[j])
+        af[j, 1] = float(fy[i])
+        af[j, 2] = float(np.log1p(ft[i])) / 10.0
+        af[j, 3 + int(anchor_set.queries[i].domain)] = 1.0
+    mf = np.asarray(
+        [tok.price_bucket(model.price_out) / tok.NUM_PRICE_BUCKETS,
+         float(bool(model.reasoning)), float(bool(model.seen))], np.float32)
+    mid = (int(model_index) % tok.NUM_MODEL_TOKENS if model.seen
+           else tok.NUM_MODEL_TOKENS)
+    return qf, af, mf, mid
+
+
+@dataclasses.dataclass
+class Tier0Batch:
+    """Columnar tier-0 predictions for n pairs (``ParsedBatch``-shaped
+    fields plus the calibrated escalation signal)."""
+    p: np.ndarray               # (n,) calibrated P(correct)
+    y_hat: np.ndarray           # (n,) int, p >= 0.5
+    len_hat: np.ndarray         # (n,) float, LEN_CENTERS[argmax]
+    conf: np.ndarray            # (n,) max(p, 1-p) in [0.5, 1]
+
+    def __len__(self) -> int:
+        return len(self.p)
+
+
+class Tier0Head:
+    """Trained tier-0 parameters + calibration temperature.
+
+    ``predict_pairs`` pads the pair batch to the ``PAIR_BUCKETS`` grid,
+    runs the jitted forward once, and converts on the host: the calibrated
+    probability is ``sigmoid(p_logit / temperature)`` and the confidence
+    is its distance from chance, ``max(p, 1 - p)``.
+    """
+
+    def __init__(self, params, cfg: Tier0Config = Tier0Config(), *,
+                 temperature: float = 1.0):
+        if temperature <= 0.0:
+            raise ValueError(f"temperature must be > 0, got {temperature}")
+        self.params = params
+        self.cfg = cfg
+        self.temperature = float(temperature)
+
+    def forward_raw(self, qf: np.ndarray, af: np.ndarray, mf: np.ndarray,
+                    mid: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Bucket-padded jitted forward; returns host (p_logit, len_logits)
+        trimmed back to the true pair count."""
+        n = len(qf)
+        if n == 0:
+            return (np.zeros(0, np.float32),
+                    np.zeros((0, self.cfg.n_len_buckets), np.float32))
+        b = pair_bucket(n)
+        qf_b = np.zeros((b, QUERY_FEATS), np.float32)
+        af_b = np.zeros((b, af.shape[1], ANCHOR_FEATS), np.float32)
+        mf_b = np.zeros((b, MODEL_FEATS), np.float32)
+        mid_b = np.zeros(b, np.int32)
+        qf_b[:n], af_b[:n], mf_b[:n], mid_b[:n] = qf, af, mf, mid
+        p_logit, len_logits = _tier0_jit(self.params, qf_b, af_b, mf_b,
+                                         mid_b)
+        return (np.asarray(p_logit)[:n], np.asarray(len_logits)[:n])
+
+    def predict_pairs(self, qf: np.ndarray, af: np.ndarray, mf: np.ndarray,
+                      mid: np.ndarray) -> Tier0Batch:
+        p_logit, len_logits = self.forward_raw(qf, af, mf, mid)
+        z = np.asarray(p_logit, np.float64) / self.temperature
+        p = 1.0 / (1.0 + np.exp(-z))
+        lb = np.argmax(len_logits, axis=-1) if len(p) else \
+            np.zeros(0, int)
+        return Tier0Batch(
+            p=p, y_hat=(p >= 0.5).astype(int),
+            len_hat=np.asarray(tok.LEN_CENTERS)[lb].astype(np.float64),
+            conf=np.maximum(p, 1.0 - p))
+
+    def predict_features(
+            self, feats: List[Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    int]]) -> Tier0Batch:
+        """``predict_pairs`` over a list of ``pair_features`` tuples."""
+        if not feats:
+            return Tier0Batch(np.zeros(0), np.zeros(0, int), np.zeros(0),
+                              np.zeros(0))
+        qf = np.stack([f[0] for f in feats])
+        af = np.stack([f[1] for f in feats])
+        mf = np.stack([f[2] for f in feats])
+        mid = np.asarray([f[3] for f in feats], np.int32)
+        return self.predict_pairs(qf, af, mf, mid)
+
+    def with_temperature(self, temperature: float) -> "Tier0Head":
+        return Tier0Head(self.params, self.cfg, temperature=temperature)

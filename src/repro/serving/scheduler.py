@@ -61,6 +61,7 @@ def decode_compile_counts() -> Dict[str, int]:
     degrade.  The counters are process-global and monotonic; callers
     interested in the cost of a traffic window should diff two snapshots.
     """
+    from repro.models import tier0
     from repro.serving import sampler
     return {"prefill": int(sampler.COMPILE_COUNTS["prefill"]),
             "scan_decode": int(sampler.COMPILE_COUNTS["scan_decode"]),
@@ -72,7 +73,8 @@ def decode_compile_counts() -> Dict[str, int]:
             "paged_refill_prefill":
                 int(sampler.COMPILE_COUNTS["paged_refill_prefill"]),
             "paged_refill_scan_decode":
-                int(sampler.COMPILE_COUNTS["paged_refill_scan_decode"])}
+                int(sampler.COMPILE_COUNTS["paged_refill_scan_decode"]),
+            "tier0": int(tier0.COMPILE_COUNTS["tier0"])}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +171,18 @@ class SchedulerStats:
     failed_pairs: int = 0           # prompts answered FAILED (no fallback)
     injected_faults: int = 0        # FaultInjector events that fired
     kv_exhausted_rows: int = 0      # rows failed by KV pool exhaustion
+    # two-tier routing ledger (folded in by the engine per request, before
+    # submission): ``tier0_answered`` pairs were served by the pre-router
+    # head and never entered this scheduler; ``escalated`` pairs continued
+    # into the decode path (and are the only ones counted in
+    # ``submitted``).  ``tier0_fallbacks`` counts quarantined/expired
+    # escalations answered from their stashed tier-0 row instead of the
+    # retrieval prior; ``tier0_decode_tokens_saved`` is the decode budget
+    # the answered pairs never spent.
+    tier0_answered: int = 0
+    escalated: int = 0
+    tier0_fallbacks: int = 0
+    tier0_decode_tokens_saved: int = 0
     occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)       # (batch, len) bucket -> microbatch count
     queue_ages: Deque[float] = dataclasses.field(
@@ -200,6 +214,14 @@ class SchedulerStats:
         if not self.submitted:
             return 0.0
         return (self.degraded + self.failed_pairs) / self.submitted
+
+    @property
+    def escalation_rate(self) -> float:
+        """Fraction of tier-0-gated pairs that escalated to the reasoning
+        decode.  1.0 when no tier-0 head gated anything (every pair paid
+        the decode)."""
+        gated = self.tier0_answered + self.escalated
+        return self.escalated / gated if gated else 1.0
 
     def queue_age_percentiles(self) -> Dict[str, float]:
         """Seconds spent queued, per emitted prompt (p50/p95/max)."""
@@ -246,6 +268,12 @@ class SchedulerStats:
                            "kv_exhausted_rows": self.kv_exhausted_rows,
                            "degraded_fraction":
                                round(self.degraded_fraction, 4)},
+                "tiers": {"tier0_answered": self.tier0_answered,
+                          "escalated": self.escalated,
+                          "escalation_rate": round(self.escalation_rate, 4),
+                          "tier0_fallbacks": self.tier0_fallbacks,
+                          "decode_tokens_saved":
+                              self.tier0_decode_tokens_saved},
                 "queue_age_ms": {k: round(v * 1e3, 3)
                                  for k, v in ages.items()},
                 "buckets": {f"{b}x{l}": c
