@@ -14,8 +14,8 @@ through this package.)
 from repro.api.cache import CachedPrediction, CacheStats, PredictionCache
 from repro.api.engine import ScopeEngine
 from repro.api.policy import (
-    AccuracyFloorPolicy, CostCeilingPolicy, FixedAlphaPolicy, PolicyDecision,
-    RoutingPolicy, SetBudgetPolicy)
+    AccuracyFloorPolicy, CostCeilingPolicy, DriftAwarePolicy,
+    FixedAlphaPolicy, PolicyDecision, RoutingPolicy, SetBudgetPolicy)
 from repro.api.registry import PoolRegistry
 from repro.api.types import (
     BatchReport, EngineConfig, PoolPredictions, RouteDecision, RouteRequest)
@@ -26,6 +26,7 @@ __all__ = [
     "CacheStats",
     "CachedPrediction",
     "CostCeilingPolicy",
+    "DriftAwarePolicy",
     "EngineConfig",
     "FixedAlphaPolicy",
     "PolicyDecision",

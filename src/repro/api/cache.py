@@ -18,7 +18,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.status import STATUS_OK
+from repro.core.status import STATUS_DRIFTED, STATUS_OK
 from repro.data.worldsim import Query
 
 
@@ -113,17 +113,33 @@ class PredictionCache:
         return entry
 
     @staticmethod
-    def _rank(pred: CachedPrediction) -> Tuple[int, int]:
-        """Overwrite rank: health first (OK beats DEGRADED/FAILED), then
-        tier (reasoning decode beats pre-router head)."""
-        return (1 if pred.status == STATUS_OK else 0, pred.tier)
+    def _health(status: int) -> int:
+        """Three-level health: OK(2) > DRIFTED(1) > DEGRADED/FAILED(0).
+
+        DRIFTED entries are real decodes conditioned on a stale
+        fingerprint — more trustworthy than a retrieval prior, less than a
+        fresh decode — so they sit on the middle rung: an OK write (e.g.
+        the first probe after ``onboard(refresh=True)``) heals them, and a
+        drifted write never clobbers an OK entry."""
+        if status == STATUS_OK:
+            return 2
+        if status == STATUS_DRIFTED:
+            return 1
+        return 0
+
+    @classmethod
+    def _rank(cls, pred: CachedPrediction) -> Tuple[int, int]:
+        """Overwrite rank: health first (OK beats DRIFTED beats
+        DEGRADED/FAILED), then tier (reasoning decode beats pre-router
+        head)."""
+        return (cls._health(pred.status), pred.tier)
 
     def _downgrades(self, key: Tuple[int, str, str],
                     pred: CachedPrediction) -> bool:
         """Whether writing ``pred`` would replace a strictly better entry.
 
-        An entry's rank is ``(status == OK, tier)``: an OK escalated
-        (tier-1) decode heals anything; an OK tier-0 answer heals degraded
+        An entry's rank is ``(health, tier)``: an OK escalated (tier-1)
+        decode heals anything; an OK tier-0 answer heals drifted/degraded
         entries but never clobbers a real decode; non-OK entries never
         clobber an OK entry of either tier.  Equal-rank writes refresh in
         place (a newer answer of the same quality wins)."""
@@ -193,6 +209,25 @@ class PredictionCache:
             while len(store) > self.capacity:
                 store.popitem(last=False)
                 self.stats.evictions += 1
+
+    def demote_model(self, model: str,
+                     status: int = STATUS_DRIFTED) -> int:
+        """Demote every *healthier* entry for ``model`` to ``status`` in
+        place (drift quarantine: the entries' numbers are genuine decodes,
+        but the fingerprint they were conditioned on is stale).
+
+        This is an administrative rewrite, not a ``put``: it bypasses
+        ``_downgrades`` (which exists to stop *data* writes from clobbering
+        better entries) and preserves LRU recency.  Entries already at or
+        below the target health (degraded/failed provisional answers) are
+        left alone.  Returns the number of entries demoted."""
+        target = self._health(status)
+        n = 0
+        for key, e in self._store.items():
+            if key[1] == model and self._health(e.status) > target:
+                self._store[key] = dataclasses.replace(e, status=status)
+                n += 1
+        return n
 
     def invalidate_model(self, model: str) -> int:
         """Drop every entry for ``model`` (e.g. after re-fingerprinting)."""

@@ -42,14 +42,17 @@ from repro.api.types import (
 from repro.core import calibration, serialization, utility
 from repro.core.fingerprint import Fingerprint
 from repro.core.router import PoolPredictions
-from repro.core.status import STATUS_OK, status_name
+from repro.core.status import STATUS_DRIFTED, STATUS_OK, status_name
 from repro.data.datasets import ScopeData
 from repro.data.worldsim import PoolModel, World
 
 if TYPE_CHECKING:
+    from repro.serving.feedback import FeedbackMonitor
     from repro.serving.scheduler import MicrobatchScheduler
 
 FALLBACK_LEN_HAT = 512.0    # tokens charged when the estimate is malformed
+
+_UNSET = object()           # hot_swap: "caller passed no tier-0 head"
 
 
 @dataclasses.dataclass
@@ -253,10 +256,16 @@ class _StreamControl:
         st = owner.state
         qi, mi = st.missing[miss_i]
         tier = 1
-        if cfg.degrade and key in self.t0_rows:
+        stash = self.t0_rows.get(key) if cfg.degrade else None
+        if stash is not None and stash[0] != cfg.estimator_version:
+            # stashed at submit time under a since-swapped estimator: the
+            # old head's answer is miscalibrated for the new version — fall
+            # through to the retrieval-prior rung (exactly-once unchanged)
+            stash = None
+        if stash is not None:
             from repro.core.estimator import ParsedBatch
             from repro.core.status import STATUS_DEGRADED
-            p, lh, y = self.t0_rows[key]
+            p, lh, y = stash[1]
             batch = ParsedBatch(
                 np.asarray([y]), np.asarray([lh]), np.ones(1, bool),
                 np.asarray([p]), np.zeros(1, int), np.zeros(1, int),
@@ -284,10 +293,20 @@ class _StreamControl:
 
 class ScopeEngine:
     def __init__(self, config: EngineConfig, registry: PoolRegistry,
-                 cache: PredictionCache):
+                 cache: PredictionCache, *,
+                 monitor: Optional["FeedbackMonitor"] = None):
+        from repro.serving.faults import FaultInjector
         self.config = config
         self.registry = registry
         self.cache = cache
+        # drift-aware self-healing: the outcome monitor (None unless
+        # EngineConfig.drift_detect), the engine-lifetime injector that
+        # arms model_drift faults at outcome-observation events (streams
+        # own separate injectors for the serve-boundary sites), and the
+        # hot-swap ledger
+        self.monitor = monitor
+        self._outcome_injector = FaultInjector(config.fault_plan)
+        self._hot_swaps = 0
 
     # -- construction --------------------------------------------------
     @classmethod
@@ -304,7 +323,16 @@ class ScopeEngine:
             registry = PoolRegistry(config.library, config.models_meta)
         elif registry.library is not config.library:
             raise ValueError("registry.library and config.library differ")
-        return cls(config, registry, PredictionCache(config.cache_capacity))
+        monitor = None
+        if config.drift_detect:
+            from repro.serving.feedback import FeedbackMonitor
+            monitor = FeedbackMonitor(
+                capacity=config.feedback_capacity,
+                delta=config.drift_delta,
+                threshold=config.drift_threshold,
+                min_obs=config.drift_min_obs)
+        return cls(config, registry, PredictionCache(config.cache_capacity),
+                   monitor=monitor)
 
     # -- owned components ----------------------------------------------
     @property
@@ -324,6 +352,46 @@ class ScopeEngine:
         self.config.estimator = estimator
         self.config.estimator_version = version
 
+    def hot_swap(self, estimator, version: str, *, tier0=_UNSET) -> None:
+        """Swap the estimator under live traffic, exactly-once preserved.
+
+        Safe mid-stream on the refill path: the live slot state keeps the
+        old params (its rows finish on them — ``ReasoningEstimator.
+        open_slots`` closed over the params at state open), while the next
+        state opened at a segment boundary binds the new estimator.  The
+        required version bump invalidates the ``PredictionCache`` and the
+        in-flight dedup keys for free — both are keyed on
+        ``estimator_version`` — and stashed tier-0 fallback answers carry
+        their submit-time version, so ``_StreamControl.degrade`` refuses
+        any stash minted before the swap.
+
+        ``tier0``: a head distilled/calibrated against the *new* estimator
+        (stamped with ``version``); omitted, any configured head is
+        dropped — its probabilities and temperature calibrate the old
+        estimator, and serving miscalibrated tier-0 answers under a new
+        version would poison the fresh cache space.  Pass ``tier0=None``
+        explicitly for the same drop without the implicit-behavior read.
+
+        Stages no new executables: this is a host-side pointer swap (the
+        new params pytree was compiled against the same bucketed shapes),
+        so the jaxpr registry gains nothing from it.
+        """
+        cfg = self.config
+        if version == cfg.estimator_version:
+            raise ValueError(
+                f"hot_swap requires a new estimator_version (got "
+                f"{version!r}, already current); the version bump is what "
+                "invalidates the cache and the tier-0 stashes")
+        cfg.estimator = estimator
+        cfg.estimator_version = version
+        if tier0 is _UNSET:
+            cfg.tier0 = None
+        else:
+            if tier0 is not None:
+                tier0.version = version
+            cfg.tier0 = tier0
+        self._hot_swaps += 1
+
     # -- pool lifecycle ------------------------------------------------
     def onboard(self, world: World, name: str, *, seed: int = 0,
                 meta: Optional[PoolModel] = None,
@@ -331,12 +399,28 @@ class ScopeEngine:
         """Training-free: register + one fingerprint pass, no weight update.
 
         ``refresh=True`` re-fingerprints an already-known model and drops
-        its cached predictions (they were computed from the old fingerprint).
+        its cached predictions (they were computed from the old
+        fingerprint).  With a drift monitor attached and replay-buffer
+        outcomes recorded for the model, the refresh is synthesized from
+        *served traffic* (``FeedbackMonitor.refresh_fingerprint``) instead
+        of a world pass — the self-healing path needs no offline dataset —
+        and the model's quarantine and detector are cleared.
         """
+        monitor = self.monitor
+        if refresh and monitor is not None and monitor.can_refresh(name):
+            self.registry.add_model(meta if meta is not None
+                                    else world.models[name])
+            fp = monitor.refresh_fingerprint(name, self.library)
+            self.library.add(fp)
+            self.cache.invalidate_model(name)
+            monitor.clear(name)
+            return fp
         fp = self.registry.onboard(world, name, seed=seed, meta=meta,
                                    refresh=refresh)
         if refresh:
             self.cache.invalidate_model(name)
+            if monitor is not None:
+                monitor.clear(name)
         return fp
 
     def remove_model(self, name: str) -> None:
@@ -482,6 +566,27 @@ class ScopeEngine:
         budget = int(getattr(self.estimator, "max_new_tokens", 0) or 0)
         stats.tier0_decode_tokens_saved += st.tier0_answered * budget
 
+    def _fold_drift_stats(self, stats) -> None:
+        """Snapshot the drift ledger into a stream's ``SchedulerStats``.
+
+        Pure snapshot, no accumulation: the monitor owns the monotonic
+        counters.  Without a monitor only ``hot_swaps`` is stamped (the
+        counter exists monitor or not) and the rest stay at their zero
+        defaults, so a detector-off stream's ``as_dict()["drift"]`` block
+        matches a detector-on stream that never alarmed on everything but
+        the buffer bookkeeping.
+        """
+        stats.hot_swaps = self._hot_swaps
+        m = self.monitor
+        if m is None:
+            return
+        stats.drift_alarms = m.alarms
+        stats.models_quarantined = len(m.drifted)
+        stats.replay_buffer_len = len(m.buffer)
+        p50, p95 = m.residual_percentiles()
+        stats.drift_residual_p50 = p50
+        stats.drift_residual_p95 = p95
+
     def _finalize(self, st: "_PredictState", batch, *,
                   put_cache: bool = True) -> PoolPredictions:
         """Scatter fresh estimator rows over the cache-probe columns and
@@ -526,6 +631,20 @@ class ScopeEngine:
                 self.cache.put_many(
                     [(st.qkeys[qi], st.models[mi], cfg.estimator_version)
                      for qi, mi in missing], entries)
+
+        # quarantine stamping: a drifted model's *presented* status drops
+        # OK pairs to DRIFTED so policies and reports see the quarantine,
+        # while the stored cache entries stay truthful (demote_model
+        # rewrote them once at alarm time; post-refresh OK writes heal
+        # them).  An empty drifted set touches nothing — detector-on
+        # serving stays bit-identical to detector-off without a fault.
+        if (self.monitor is not None and self.monitor.drifted
+                and st.status is not None):
+            for mi, m in enumerate(st.models):
+                if m in self.monitor.drifted:
+                    col = st.status[:, mi]
+                    st.status[:, mi] = np.where(
+                        col == STATUS_OK, STATUS_DRIFTED, col)
 
         lh = np.where(wf, len_hat, FALLBACK_LEN_HAT)
         price_in = np.asarray([self.registry.meta(m).price_in
@@ -628,7 +747,10 @@ class ScopeEngine:
             if control is not None:
                 control.note_submit(key, prompt)
                 if st.t0_rows is not None:
-                    control.t0_rows[key] = st.t0_rows[miss_i]
+                    # versioned stash: a hot_swap mid-stream must not let
+                    # degrade() serve a fallback the *old* head computed
+                    control.t0_rows[key] = (self.config.estimator_version,
+                                            st.t0_rows[miss_i])
             sched.submit(key, prompt)
         return serial
 
@@ -816,7 +938,16 @@ class ScopeEngine:
                 f"(ReasoningEstimator); {type(est).__name__} lacks it — "
                 "stream with refill=False instead")
         cfg = self.config
-        open_fn = open_slots
+
+        def open_base(tokens, **kw):
+            # resolved per state-open, not per stream: a hot_swap between
+            # segments binds the *new* estimator's params to the next
+            # opened state, while the live state's slots finish on the old
+            # params they closed over — the swap lands at a segment
+            # boundary with exactly-once and FIFO untouched
+            return self.estimator.open_slots(tokens, **kw)
+
+        open_fn = open_base
         if cfg.kv_paged:
             if cfg.refill_horizon is not None:
                 raise ValueError(
@@ -831,8 +962,6 @@ class ScopeEngine:
                 raise ValueError(f"unknown kv_kernel {cfg.kv_kernel!r} "
                                  "(expected 'xla' or 'pallas')")
             page = int(cfg.kv_page_size)
-            budget = int(getattr(est, "max_new_tokens", 0) or 0)
-            budget_steps = -(-budget // segment_len) * segment_len
             shared = (None if cfg.kv_pool_pages is None
                       else KVPool(n_pages=int(cfg.kv_pool_pages),
                                   page_size=page))
@@ -843,13 +972,17 @@ class ScopeEngine:
                 else:
                     # auto-size: the opening bucket's dense worst case —
                     # paged still wins whenever rows finish early or the
-                    # run outlives one horizon
+                    # run outlives one horizon.  Budget read per open so a
+                    # hot-swapped estimator sizes its own pools.
+                    budget = int(getattr(self.estimator, "max_new_tokens",
+                                         0) or 0)
+                    budget_steps = -(-budget // segment_len) * segment_len
                     b, width = np.asarray(tokens).shape
                     pool = KVPool(
                         n_pages=b * (-(-(width + budget_steps) // page)),
                         page_size=page)
-                return open_slots(tokens, kv_pool=pool, kv_kernel=kernel,
-                                  **kw)
+                return open_base(tokens, kv_pool=pool, kv_kernel=kernel,
+                                 **kw)
 
         pending: Deque[_StreamEntry] = deque()
         inflight: Dict[Tuple, List[Tuple[_StreamEntry, int]]] = {}
@@ -933,7 +1066,12 @@ class ScopeEngine:
                 yield BatchReport.empty(policy.name, pool_models)
                 continue
             decision = policy.decide(pool, self)
-            yield self.execute(data, qids, pool, decision, policy.name)
+            report = self.execute(data, qids, pool, decision, policy.name)
+            if scheduler is not None:
+                # executed outcomes just landed — snapshot the drift
+                # ledger so every yielded tick's stats are current
+                self._fold_drift_stats(scheduler.stats)
+            yield report
 
     def _run_estimator(self, prompts, rng: Optional[jax.Array]):
         """Columnar estimator call on token lists or a (b, L) int array;
@@ -1055,12 +1193,34 @@ class ScopeEngine:
         if not qids:
             return BatchReport.empty(policy_name, pool.models)
         choices = np.asarray(decision.choices, int)
+        monitor = self.monitor
         accs, costs, tokens = [], [], 0
-        for q, c in zip(qids, choices, strict=True):
-            rec = data.record(q, pool.models[int(c)])
-            accs.append(rec.y)
-            costs.append(rec.cost)
-            tokens += rec.tokens
+        for i, (q, c) in enumerate(zip(qids, choices, strict=True)):
+            model = pool.models[int(c)]
+            rec = data.record(q, model)
+            # one outcome-observation event per served pair: an armed
+            # model_drift fault degrades the *realized* outcome (the
+            # deployed model genuinely got worse — accounting sees it too);
+            # with no plan this is a dict probe, bit-identical to before
+            y, tok_i, cost = self._outcome_injector.corrupt_outcome(
+                model, rec.y, rec.tokens, rec.cost)
+            accs.append(y)
+            costs.append(cost)
+            tokens += tok_i
+            if monitor is not None:
+                from repro.serving.feedback import Outcome
+                newly = monitor.observe(Outcome(
+                    query_id=query_key(data.queries[q]), model=model,
+                    predicted_p=float(pool.p_hat[i, int(c)]),
+                    predicted_cost=float(pool.cost_hat[i, int(c)]),
+                    observed_y=float(y), observed_cost=float(cost),
+                    observed_tokens=int(tok_i),
+                    sims=pool.sims[i], idx=pool.idx[i],
+                    well_formed=bool(pool.well_formed[i, int(c)])))
+                if newly is not None:
+                    # new alarm: demote the model's cached predictions so
+                    # later probes surface DRIFTED until a refresh heals
+                    self.cache.demote_model(newly)
         return self._assemble(
             policy_name, decision, pool, qids,
             accuracy=float(np.mean(accs)), total_cost=float(np.sum(costs)),

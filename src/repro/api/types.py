@@ -91,6 +91,27 @@ class EngineConfig:
     # escalated decode overwrites them but never the reverse.
     tier0: Optional["Tier0Head"] = None
     escalation_threshold: float = 0.9
+    # drift-aware self-healing (serving.feedback): with drift_detect on,
+    # every executed (query, model) pair's (predicted, observed) outcome
+    # lands in a bounded replay buffer and feeds a per-model Page–Hinkley
+    # detector over the calibration residual p_hat - y.  On alarm the
+    # model's cached predictions are demoted to DRIFTED (an OK write
+    # after onboard(refresh=True) heals them), its serve-time status
+    # columns are stamped DRIFTED, and DriftAwarePolicy can exclude or
+    # down-weight it.  Collection is passive: with no model_drift fault
+    # in the plan, detector-on serving is bit-identical to detector-off
+    # (predictions, cache contents, deterministic stats outside the
+    # drift block).  drift_threshold is the Page–Hinkley alarm mass
+    # (lambda) — sized above the bounded oscillation calibrated Bernoulli
+    # residuals show on run-structured traffic — drift_delta the
+    # per-observation drift allowance, drift_min_obs the observations a
+    # model needs before it may alarm, feedback_capacity the
+    # replay-buffer bound in rows.
+    drift_detect: bool = False
+    drift_threshold: float = 5.0
+    drift_delta: float = 0.05
+    drift_min_obs: int = 8
+    feedback_capacity: int = 4096
 
 
 @dataclasses.dataclass

@@ -47,7 +47,10 @@ def serialize_prompt(model: PoolModel, model_index: int,
         toks += [tok.ANCHOR,
                  tok.domain_token(aq.domain),
                  tok.SIM_BASE + tok.sim_bucket(float(s)),
-                 tok.yesno(int(fp.y[int(i)])),
+                 # round, not truncate: a buffer-refreshed fingerprint
+                 # (serving.feedback) carries expected correctness in
+                 # [0, 1]; binary fingerprints round to themselves
+                 tok.yesno(int(round(float(fp.y[int(i)])))),
                  tok.LEN_BASE + tok.len_bucket(float(fp.tokens[int(i)]))]
     toks += [tok.QUERY, tok.domain_token(query.domain)]
     toks += tok.feat_tokens(query.embedding)

@@ -21,6 +21,10 @@ retraining — and serves a batch of queries under a chosen routing policy.
       --chaos 0 --max-retries 2 --deadline-ms 500
   PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
       --tier0 --escalation-threshold 0.9
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --drift-detect --drift-threshold 5.0
+  PYTHONPATH=src python -m repro.launch.serve --stream-ticks 12 \
+      --refill --hot-swap
 """
 from __future__ import annotations
 
@@ -136,6 +140,25 @@ def main(argv=None):
                          "escalates nothing, > 1.0 escalates everything)")
     ap.add_argument("--tier0-steps", type=int, default=300,
                     help="distillation steps for the --tier0 head")
+    ap.add_argument("--drift-detect", action="store_true",
+                    help="self-healing serving: record every executed "
+                         "(predicted, observed) outcome in a replay buffer, "
+                         "run a per-model Page-Hinkley drift detector over "
+                         "the calibration residuals, quarantine alarmed "
+                         "models (DriftAwarePolicy routes around them) "
+                         "until onboard(refresh=True) heals them")
+    ap.add_argument("--drift-threshold", type=float, default=5.0,
+                    help="Page-Hinkley alarm mass for --drift-detect "
+                         "(residual mass a model must accumulate above its "
+                         "running mean before the alarm fires; default 5.0)")
+    ap.add_argument("--hot-swap", action="store_true",
+                    help="demo a live estimator hot-swap halfway through "
+                         "the stream: donate the params under a bumped "
+                         "estimator_version at a tick boundary — in-flight "
+                         "rows finish on the old params, queued rows "
+                         "dispatch on the new, the prediction cache and "
+                         "stale tier-0 stashes invalidate for free — "
+                         "requires --stream-ticks")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -155,6 +178,10 @@ def main(argv=None):
                  "keeps dense per-microbatch caches)")
     if args.kv_page_size < 1:
         ap.error(f"--kv-page-size must be >= 1, got {args.kv_page_size}")
+
+    if args.hot_swap and args.stream_ticks <= 0:
+        ap.error("--hot-swap requires --stream-ticks (the swap lands at a "
+                 "live tick boundary)")
 
     fault_plan = None
     if args.chaos is not None:
@@ -185,7 +212,9 @@ def main(argv=None):
         max_retries=args.max_retries, deadline_ms=args.deadline_ms,
         degrade=not args.no_degrade, fault_plan=fault_plan,
         tier0=tier0_head,
-        escalation_threshold=args.escalation_threshold))
+        escalation_threshold=args.escalation_threshold,
+        drift_detect=args.drift_detect,
+        drift_threshold=args.drift_threshold))
 
     if args.kv_paged and args.kv_pool_pages is not None:
         # a request admitted at a boundary may decode its whole budget:
@@ -219,6 +248,9 @@ def main(argv=None):
               f"{dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))}")
 
     policy = pick_policy(args)
+    if args.drift_detect:
+        from repro.api import DriftAwarePolicy
+        policy = DriftAwarePolicy(policy)
     qids = [int(q) for q in data.test_qids[: args.queries]]
 
     if args.stream_ticks > 0:
@@ -229,12 +261,34 @@ def main(argv=None):
             min_fill=args.min_fill)
         chunks = [[int(q) for q in c]
                   for c in np.array_split(qids, args.stream_ticks)]
-        reports = list(engine.serve_stream(data, chunks, policy,
-                                           models=pool, scheduler=sched,
-                                           overlap=not args.no_overlap,
-                                           refill=args.refill,
-                                           segment_len=args.segment_len,
-                                           max_pending=args.max_pending))
+        swap_at = len(chunks) // 2 if args.hot_swap else None
+        reports = []
+        for i, r in enumerate(engine.serve_stream(
+                data, chunks, policy, models=pool, scheduler=sched,
+                overlap=not args.no_overlap, refill=args.refill,
+                segment_len=args.segment_len,
+                max_pending=args.max_pending)):
+            reports.append(r)
+            if swap_at is not None and i + 1 == swap_at:
+                # live swap between ticks: same params pytree donated
+                # under a bumped version — the point is the serve-path
+                # machinery (cache space, dedup keys, tier-0 stashes all
+                # roll over), not new weights.  A tier-0 head rides along
+                # re-tempered on the replay buffer's observed outcomes.
+                t0 = engine.config.tier0
+                if (t0 is not None and engine.monitor is not None
+                        and len(engine.monitor.buffer)):
+                    from repro.training.tier0 import recalibrate_tier0
+                    rows = engine.monitor.buffer.rows()
+                    t0 = recalibrate_tier0(
+                        t0,
+                        np.asarray([o.predicted_p for o in rows]),
+                        np.asarray([o.observed_y for o in rows]))
+                version = engine.config.estimator_version + "+swap"
+                engine.hot_swap(engine.estimator, version, tier0=t0)
+                swap_at = None
+                print(f"# hot-swapped estimator to {version!r} "
+                      f"after tick {i + 1}")
         n = sum(r.n_queries for r in reports)
         print(json.dumps({
             "policy": policy.name,

@@ -181,12 +181,16 @@ class Tier0Head:
     """
 
     def __init__(self, params, cfg: Tier0Config = Tier0Config(), *,
-                 temperature: float = 1.0):
+                 temperature: float = 1.0, version: str = "v0"):
         if temperature <= 0.0:
             raise ValueError(f"temperature must be > 0, got {temperature}")
         self.params = params
         self.cfg = cfg
         self.temperature = float(temperature)
+        # which estimator this head was distilled from/calibrated against
+        # (EngineConfig.estimator_version); ScopeEngine.hot_swap stamps the
+        # post-swap head so a stale head can never ride a version bump
+        self.version = str(version)
 
     def forward_raw(self, qf: np.ndarray, af: np.ndarray, mf: np.ndarray,
                     mid: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -232,4 +236,5 @@ class Tier0Head:
         return self.predict_pairs(qf, af, mf, mid)
 
     def with_temperature(self, temperature: float) -> "Tier0Head":
-        return Tier0Head(self.params, self.cfg, temperature=temperature)
+        return Tier0Head(self.params, self.cfg, temperature=temperature,
+                         version=self.version)

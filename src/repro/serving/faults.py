@@ -21,6 +21,15 @@ Sites and their real boundaries:
   stall     — the injector's ``stall_offset`` clock jumps forward ``arg``
               seconds; only the engine's SLO-deadline check consults the
               offset, so queue-age statistics are unperturbed
+  model_drift — the named ``model``'s observed outcomes are perturbed
+              *persistently* from event index ``index`` on: once the spec
+              fires, every later ``corrupt_outcome`` for that model forces
+              the realized correctness to 0 and inflates the realized cost
+              by ``1 + arg``.  Events are outcome observations (the
+              engine's ``execute`` boundary), so "drifts at tick T" is
+              "drifts at the K-th served query".  This is what the drift
+              detector (``serving.feedback``) is tested against — a
+              deployed model silently degrading mid-stream.
 
 The **no-op default** (``FaultPlan.none()`` or no plan at all) must not
 perturb the serve path: ``tick`` is a dict probe returning ``None`` and
@@ -35,7 +44,9 @@ from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
-SITES = ("dispatch", "segment", "parse", "pool", "stall")
+# model_drift is last: FaultPlan.seeded draws per site in tuple order, so
+# appending keeps every older seeded plan's specs bit-identical
+SITES = ("dispatch", "segment", "parse", "pool", "stall", "model_drift")
 
 
 class InjectedFault(RuntimeError):
@@ -47,11 +58,14 @@ class FaultSpec:
     """One planned failure: the ``index``-th event at ``site`` fires.
 
     ``arg`` is site-specific: stall seconds for ``stall``, the live-row
-    selector for ``pool``, unused elsewhere.
+    selector for ``pool``, the relative cost inflation for
+    ``model_drift``, unused elsewhere.  ``model`` names the pool model a
+    ``model_drift`` spec degrades (required there, unused elsewhere).
     """
     site: str
     index: int
     arg: float = 0.0
+    model: str = ""
 
     def __post_init__(self):
         if self.site not in SITES:
@@ -59,6 +73,8 @@ class FaultSpec:
                              f"(expected one of {SITES})")
         if self.index < 0:
             raise ValueError(f"fault index must be >= 0, got {self.index}")
+        if self.site == "model_drift" and not self.model:
+            raise ValueError("model_drift specs must name a model")
 
 
 class FaultPlan:
@@ -90,6 +106,11 @@ class FaultPlan:
         """Bernoulli plan: each of the first ``n_events`` events at a site
         fires with that site's rate.  Deterministic in ``seed`` — the draw
         happens here, never at serve time."""
+        if (rates or {}).get("model_drift"):
+            raise ValueError(
+                "model_drift cannot be rate-drawn (a spec must name the "
+                "drifting model); add FaultSpec('model_drift', K, "
+                "model=...) to the plan explicitly")
         rng = np.random.default_rng(seed)  # scopelint: allow[serve-time-nondeterminism] -- build-time plan draw, deterministic in seed; serve time only replays it
         specs = []
         for site in SITES:                      # fixed draw order
@@ -128,6 +149,10 @@ class FaultInjector:
         self.counts: Dict[str, int] = {site: 0 for site in SITES}
         self.fired = 0
         self.stall_offset = 0.0
+        # model -> cost inflation arg; set when a model_drift spec fires
+        # and persistent from then on (the deployed model stays degraded
+        # until the pool heals it out of band)
+        self.drift_active: Dict[str, float] = {}
 
     def tick(self, site: str) -> Optional[FaultSpec]:
         i = self.counts[site]
@@ -137,12 +162,27 @@ class FaultInjector:
             self.fired += 1
             if site == "stall":
                 self.stall_offset += float(spec.arg)
+            elif site == "model_drift":
+                self.drift_active[spec.model] = float(spec.arg)
         return spec
 
     def raise_if(self, site: str) -> None:
         spec = self.tick(site)
         if spec is not None:
             raise InjectedFault(f"injected {site} fault (event {spec.index})")
+
+    def corrupt_outcome(self, model: str, y, tokens: int, cost: float
+                        ) -> Tuple[float, int, float]:
+        """One outcome-observation event: tick the ``model_drift`` counter
+        (arming any spec whose index this event reaches) and, if drift is
+        active for ``model``, degrade the observation — correctness forced
+        to 0, cost inflated by ``1 + arg``.  With no plan this is a dict
+        probe and an untouched return: bit-identical to no injector."""
+        self.tick("model_drift")
+        arg = self.drift_active.get(model)
+        if arg is None:
+            return y, tokens, cost
+        return 0.0, tokens, float(cost) * (1.0 + arg)
 
     def corrupt_parse(self, batch):
         """One parse event: if the matching spec fires, scramble every row

@@ -183,6 +183,21 @@ class SchedulerStats:
     escalated: int = 0
     tier0_fallbacks: int = 0
     tier0_decode_tokens_saved: int = 0
+    # drift ledger (folded in by the engine from its FeedbackMonitor when
+    # EngineConfig.drift_detect is on): snapshots, not increments —
+    # ``drift_alarms`` is the monitor's monotonic alarm count,
+    # ``models_quarantined`` the currently-drifted model count,
+    # ``hot_swaps`` the engine's lifetime estimator swaps,
+    # ``replay_buffer_len`` the outcome ledger's current size, and the
+    # residual percentiles summarize |predicted_p - observed_y| over the
+    # buffer.  All stay zero with the detector off, so detector-on and
+    # detector-off stats differ only inside the ``drift`` block.
+    drift_alarms: int = 0
+    models_quarantined: int = 0
+    hot_swaps: int = 0
+    replay_buffer_len: int = 0
+    drift_residual_p50: float = 0.0
+    drift_residual_p95: float = 0.0
     occupancy: Dict[Tuple[int, int], int] = dataclasses.field(
         default_factory=dict)       # (batch, len) bucket -> microbatch count
     queue_ages: Deque[float] = dataclasses.field(
@@ -274,6 +289,14 @@ class SchedulerStats:
                           "tier0_fallbacks": self.tier0_fallbacks,
                           "decode_tokens_saved":
                               self.tier0_decode_tokens_saved},
+                "drift": {"alarms": self.drift_alarms,
+                          "models_quarantined": self.models_quarantined,
+                          "hot_swaps": self.hot_swaps,
+                          "replay_buffer_len": self.replay_buffer_len,
+                          "residual_p50":
+                              round(self.drift_residual_p50, 4),
+                          "residual_p95":
+                              round(self.drift_residual_p95, 4)},
                 "queue_age_ms": {k: round(v * 1e3, 3)
                                  for k, v in ages.items()},
                 "buckets": {f"{b}x{l}": c

@@ -114,6 +114,24 @@ def fit_temperature(p_logit: np.ndarray, q: np.ndarray,
     return float(temps[int(np.argmin(nll))])
 
 
+def recalibrate_tier0(head: T0.Tier0Head, p_pred: np.ndarray,
+                      y_obs: np.ndarray) -> T0.Tier0Head:
+    """Re-temper a trained head against *observed* outcomes (the drift
+    hot-swap path: the replay buffer holds the head's served probabilities
+    and what the world actually returned).
+
+    The head's raw logit is recovered by inverting its current
+    calibration, ``raw = T * logit(p)``, then ``fit_temperature`` re-fits
+    on the observed labels — no weight update, parameters are shared with
+    the input head (``with_temperature`` keeps the pytree, so the swap
+    stages no new executables).
+    """
+    p = np.clip(np.asarray(p_pred, np.float64), 1e-6, 1.0 - 1e-6)
+    raw = head.temperature * np.log(p / (1.0 - p))
+    return head.with_temperature(
+        fit_temperature(raw, np.asarray(y_obs, np.float64)))
+
+
 @dataclasses.dataclass
 class DistillReport:
     losses: list

@@ -1,0 +1,472 @@
+"""Drift-aware self-healing serving: outcome ledger, Page–Hinkley
+detection, model quarantine, replay-buffer fingerprint refresh, live
+estimator hot-swap, and the DriftAwarePolicy wrapper — unit coverage of
+serving.feedback plus the closed inject -> detect -> quarantine ->
+refresh -> recover loop through the engine."""
+import numpy as np
+import pytest
+
+from repro.api import (
+    DriftAwarePolicy, EngineConfig, FixedAlphaPolicy, RouteRequest,
+    ScopeEngine)
+from repro.api.cache import CachedPrediction, PredictionCache
+from repro.core.estimator import ReasoningEstimator
+from repro.core.fingerprint import FingerprintLibrary
+from repro.core.status import STATUS_DEGRADED, STATUS_DRIFTED, STATUS_OK
+from repro.data.datasets import build_scope_data
+from repro.serving.faults import FaultInjector, FaultPlan, FaultSpec
+from repro.serving.feedback import (
+    FeedbackMonitor, Outcome, PageHinkley, ReplayBuffer)
+
+
+def _out(model="m", p=0.8, y=1.0, qid=0, wf=True, t=0.0,
+         sims=None, idx=None, tokens=10, cost=0.01):
+    return Outcome(
+        query_id=qid, model=model, predicted_p=p, predicted_cost=cost,
+        observed_y=y, observed_cost=cost, observed_tokens=tokens,
+        sims=(np.array([0.9, 0.5, 0.3, 0.2, 0.1]) if sims is None
+              else np.asarray(sims, np.float64)),
+        idx=(np.arange(5) if idx is None else np.asarray(idx, int)),
+        t=t, well_formed=wf)
+
+
+# ---------------------------------------------------------------------------
+# Page–Hinkley units
+# ---------------------------------------------------------------------------
+def test_page_hinkley_validation():
+    with pytest.raises(ValueError, match="threshold"):
+        PageHinkley(threshold=0.0)
+    with pytest.raises(ValueError, match="min_obs"):
+        PageHinkley(min_obs=0)
+
+
+def test_page_hinkley_deterministic_and_reset():
+    xs = [0.7, -0.3, -0.3, 0.7, 0.6, 0.6, 0.6, 0.6, 0.6]
+    a = PageHinkley(delta=0.05, threshold=1.0, min_obs=1)
+    b = PageHinkley(delta=0.05, threshold=1.0, min_obs=1)
+    fired_a = [a.update(x) for x in xs]
+    fired_b = [b.update(x) for x in xs]
+    assert fired_a == fired_b
+    assert (a.n, a.mean, a.m, a.score) == (b.n, b.mean, b.m, b.score)
+    a.reset()
+    assert a.n == 0 and a.mean == 0.0 and a.score == 0.0
+
+
+def test_page_hinkley_min_obs_gates_alarm():
+    det = PageHinkley(delta=0.0, threshold=0.1, min_obs=6)
+    xs = [0.0, 0.0, 0.9, 0.9, 0.9]         # mass is there by obs 5...
+    assert not any(det.update(x) for x in xs)
+    assert det.score > det.threshold        # ...but the gate held it
+    assert det.update(0.9)                  # obs 6 may alarm
+
+
+def test_page_hinkley_clean_bounded_drift_unbounded():
+    """A calibrated Bernoulli residual stream (p=0.7 predictions against
+    70%-correct outcomes, in runs like real traffic) keeps the drift mass
+    bounded below the 5.0 default; a persistent overconfidence shift
+    accumulates without bound and alarms."""
+    tile = [0.7, 0.7, 0.7] + [-0.3] * 7     # mean-zero, run-structured
+    clean = PageHinkley()                   # defaults: 0.05 / 5.0 / 8
+    assert not any(clean.update(x) for x in tile * 20)
+    assert clean.score < clean.threshold
+    drifted = PageHinkley()
+    fired = [drifted.update(x) for x in tile * 2 + [0.7] * 40]
+    assert any(fired)                       # the shift crosses 5.0
+    assert not any(fired[: len(tile) * 2])  # but not on the clean prefix
+
+
+# ---------------------------------------------------------------------------
+# ReplayBuffer units
+# ---------------------------------------------------------------------------
+def test_replay_buffer_capacity_fifo_and_filters():
+    with pytest.raises(ValueError, match="capacity"):
+        ReplayBuffer(0)
+    buf = ReplayBuffer(capacity=4)
+    for i in range(6):
+        buf.append(_out(model="a" if i % 2 else "b", p=0.5 + 0.1 * i, y=0.0,
+                        qid=i))
+    assert len(buf) == 4
+    assert [r.query_id for r in buf.rows()] == [2, 3, 4, 5]   # oldest fell
+    assert [r.query_id for r in buf.rows("a")] == [3, 5]
+    np.testing.assert_allclose(buf.residuals("a"), [0.8, 1.0])
+    assert buf.rows("nope") == []
+
+
+def test_outcome_residual_sign():
+    assert _out(p=0.9, y=0.0).residual == pytest.approx(0.9)   # overconfident
+    assert _out(p=0.2, y=1.0).residual == pytest.approx(-0.8)
+
+
+# ---------------------------------------------------------------------------
+# FeedbackMonitor units
+# ---------------------------------------------------------------------------
+def _drive_drift(mon, model="m"):
+    """One calibrated row to anchor the detector's mean, then a run of
+    overconfident ones (Page–Hinkley detects the *shift*, not the level)."""
+    hits = [mon.observe(_out(model=model, p=0.9, y=1.0))]
+    hits += [mon.observe(_out(model=model, p=0.9, y=0.0)) for _ in range(5)]
+    return [h for h in hits if h]
+
+
+def test_monitor_alarms_once_until_cleared():
+    mon = FeedbackMonitor(threshold=0.5, min_obs=1, delta=0.0)
+    assert _drive_drift(mon) == ["m"]           # exactly one alarm event
+    assert mon.drifted == {"m"} and mon.alarms == 1
+    assert _drive_drift(mon) == []              # quarantined: no re-alarm
+    mon.clear("m")
+    assert mon.drifted == set()
+    assert mon.detector("m").n == 0             # detector reset with it
+    assert _drive_drift(mon) == ["m"]           # re-alarm after heal allowed
+    assert mon.alarms == 2
+    mon.clear("never-seen")                     # unknown model: no-op
+
+
+def test_monitor_malformed_rows_buffered_not_scored():
+    mon = FeedbackMonitor(threshold=0.5, min_obs=1, delta=0.0)
+    for _ in range(10):
+        assert mon.observe(_out(model="m", p=0.5, y=0.0, wf=False)) is None
+    assert len(mon.buffer) == 10                # outcomes kept for refresh
+    assert mon.detector("m").n == 0             # never scored
+    assert mon.drifted == set() and mon.alarms == 0
+
+
+def test_monitor_injectable_clock_stamps_rows():
+    mon = FeedbackMonitor(clock=lambda: 42.0)
+    mon.observe(_out(t=0.0))
+    mon.observe(_out(t=7.0))
+    assert [r.t for r in mon.buffer.rows()] == [42.0, 7.0]
+
+
+def test_monitor_percentiles_and_can_refresh():
+    mon = FeedbackMonitor()
+    assert mon.residual_percentiles() == (0.0, 0.0)
+    assert not mon.can_refresh("m")
+    mon.observe(_out(model="m", p=0.8, y=1.0))      # residual -0.2
+    mon.observe(_out(model="m", p=0.9, y=0.0))      # residual +0.9
+    p50, p95 = mon.residual_percentiles()
+    assert p50 == pytest.approx(0.55) and p95 == pytest.approx(0.865)
+    assert mon.can_refresh("m") and mon.can_refresh("m", min_rows=2)
+    assert not mon.can_refresh("m", min_rows=3)
+
+
+def test_refresh_fingerprint_blend_math(world, library):
+    """Observation mass pulls touched anchors toward the observed values
+    by w/(w+1); untouched anchors keep the old fingerprint exactly."""
+    model = next(m.name for m in world.pool if m.seen)
+    old = library.get(model)
+    mon = FeedbackMonitor()
+    with pytest.raises(ValueError, match="no replay-buffer outcomes"):
+        mon.refresh_fingerprint(model, library)
+    # one observation, all similarity mass on anchor 0, observed wrong
+    mon.observe(_out(model=model, p=0.8, y=0.0, tokens=20, cost=0.5,
+                     sims=[1.0, 0.0, 0.0, 0.0, 0.0], idx=[0, 1, 2, 3, 4]))
+    fp = mon.refresh_fingerprint(model, library)
+    n = len(library.anchor_set)
+    assert len(fp.y) == len(fp.tokens) == len(fp.cost) == n
+    # blend = 1/(1+1) = 0.5: halfway from the old value toward observed 0
+    assert fp.y[0] == pytest.approx(0.5 * old.y[0])
+    assert fp.cost[0] == pytest.approx(0.5 * 0.5 + 0.5 * old.cost[0])
+    assert fp.tokens[0] == round(0.5 * 20 + 0.5 * old.tokens[0])
+    np.testing.assert_array_equal(fp.y[1:], old.y[1:])      # untouched
+    np.testing.assert_array_equal(fp.tokens[1:], old.tokens[1:])
+    assert fp.tokens.dtype.kind == "i"          # library.add-compatible
+    assert library.get(model) is old            # refresh never mutates
+
+
+# ---------------------------------------------------------------------------
+# model_drift fault site
+# ---------------------------------------------------------------------------
+def test_model_drift_spec_validation():
+    with pytest.raises(ValueError, match="must name a model"):
+        FaultSpec("model_drift", 0)
+    with pytest.raises(ValueError, match="model_drift cannot be rate-drawn"):
+        FaultPlan.seeded(0, rates={"model_drift": 0.5})
+    FaultSpec("model_drift", 0, arg=1.0, model="m")     # well-formed
+
+
+def test_corrupt_outcome_persistent_from_index():
+    inj = FaultInjector(FaultPlan([FaultSpec("model_drift", 2, arg=1.0,
+                                             model="m")]))
+    assert inj.corrupt_outcome("m", 1.0, 10, 0.5) == (1.0, 10, 0.5)  # ev 0
+    assert inj.corrupt_outcome("m", 1.0, 10, 0.5) == (1.0, 10, 0.5)  # ev 1
+    # event 2 arms the drift; this and every later observation degrades
+    assert inj.corrupt_outcome("m", 1.0, 10, 0.5) == (0.0, 10, 1.0)
+    assert inj.corrupt_outcome("m", 1.0, 12, 0.2) == (0.0, 12, 0.4)
+    # other models are untouched even while the drift is active
+    assert inj.corrupt_outcome("other", 1.0, 10, 0.5) == (1.0, 10, 0.5)
+
+
+def test_corrupt_outcome_no_plan_is_identity():
+    inj = FaultInjector(FaultPlan.none())
+    for _ in range(8):
+        assert inj.corrupt_outcome("m", 1.0, 10, 0.5) == (1.0, 10, 0.5)
+    assert inj.fired == 0
+
+
+# ---------------------------------------------------------------------------
+# Cache quarantine rank: demote / heal / invalidate
+# ---------------------------------------------------------------------------
+def _ok(p=0.7, status=STATUS_OK, tier=1):
+    return CachedPrediction(1, 12.0, True, p, 5, 49, status=status, tier=tier)
+
+
+def test_cache_demote_model_and_heal():
+    cache = PredictionCache()
+    cache.put(1, "m", "v0", _ok(0.9))
+    cache.put(2, "m", "v0", _ok(0.8))
+    cache.put(3, "m", "v0", _ok(0.2, status=STATUS_DEGRADED))
+    cache.put(1, "n", "v0", _ok(0.6))
+    assert cache.demote_model("m") == 2         # degraded row left alone
+    assert cache.get(1, "m", "v0").status == STATUS_DRIFTED
+    assert cache.get(1, "m", "v0").p_conf == 0.9    # numbers kept
+    assert cache.get(3, "m", "v0").status == STATUS_DEGRADED
+    assert cache.get(1, "n", "v0").status == STATUS_OK  # other models kept
+    # a DRIFTED write never clobbers OK; an OK write heals DRIFTED
+    cache.put(1, "n", "v0", _ok(0.1, status=STATUS_DRIFTED))
+    assert cache.get(1, "n", "v0").status == STATUS_OK
+    cache.put(1, "m", "v0", _ok(0.75))
+    assert cache.get(1, "m", "v0").status == STATUS_OK
+    assert cache.get(1, "m", "v0").p_conf == 0.75
+    # DRIFTED outranks DEGRADED (a stale decode beats a retrieval prior)
+    cache.put(3, "m", "v0", _ok(0.4, status=STATUS_DRIFTED))
+    assert cache.get(3, "m", "v0").status == STATUS_DRIFTED
+    assert cache.invalidate_model("m") == 3
+    assert cache.get(1, "m", "v0") is None and len(cache) == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: the closed self-healing loop
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def drift_setup(tiny_trained, world, retriever, anchor_set, library):
+    """Engine factory with a *private* fingerprint library per engine —
+    onboard(refresh=True) mutates it, and the session library is shared."""
+    cfg, params, _ = tiny_trained
+    data = build_scope_data(world, n_queries=160, seed=9)
+
+    def mk(**kw):
+        lib = FingerprintLibrary(anchor_set)
+        for m in world.pool:
+            if m.seen:
+                lib.add(library.get(m.name))
+        # 12-token budget (not the 6 most engine tests use): room for the
+        # CoT span plus the YES/LEN/EOS body, so rows parse well-formed —
+        # the drift detector only scores well-formed residuals
+        return ScopeEngine.build(EngineConfig(
+            estimator=ReasoningEstimator(cfg, params, max_new_tokens=12),
+            retriever=retriever, library=lib,
+            models_meta={m: world.models[m] for m in data.models}, **kw))
+    return mk, data
+
+
+def test_engine_builds_monitor_only_when_drift_detect(drift_setup):
+    mk, _ = drift_setup
+    assert mk().monitor is None
+    eng = mk(drift_detect=True, drift_threshold=1.5, drift_min_obs=2,
+             feedback_capacity=32)
+    assert eng.monitor is not None
+    assert eng.monitor.buffer.capacity == 32
+    det = eng.monitor.detector("any")
+    assert det.threshold == 1.5 and det.min_obs == 2
+
+
+def test_serve_collects_outcomes_passively(drift_setup):
+    """Detector-on serving with no fault: identical decisions to
+    detector-off, one buffered outcome per executed query, no alarms."""
+    mk, data = drift_setup
+    qids = [int(q) for q in data.test_qids[:6]]
+    pol = FixedAlphaPolicy(0.6)
+    ref = mk().serve(data, qids, pol)
+    eng = mk(drift_detect=True)
+    got = eng.serve(data, qids, pol)
+    assert [d.model for d in got.decisions] == [d.model for d in ref.decisions]
+    np.testing.assert_array_equal([d.p_hat for d in got.decisions],
+                                  [d.p_hat for d in ref.decisions])
+    assert len(eng.monitor.buffer) == len(qids)
+    assert eng.monitor.alarms == 0 and eng.monitor.drifted == set()
+    row = eng.monitor.buffer.rows()[0]
+    assert row.model == got.decisions[0].model
+    assert row.predicted_p == got.decisions[0].p_hat
+    assert row.sims.shape == row.idx.shape == (eng.config.k,)
+
+
+def test_drift_closed_loop_detect_quarantine_refresh_recover(drift_setup):
+    mk, data = drift_setup
+    world = data.world
+    qids = [int(q) for q in data.test_qids[:8]]
+    queries = [data.queries[q] for q in qids]
+    pol = FixedAlphaPolicy(0.6)
+    # victim: the model whose estimator rows parse best on these queries
+    # (the detector only scores well-formed rows)
+    probe = mk().predict(RouteRequest(queries))
+    victim = probe.models[int(np.argmax(probe.well_formed.sum(axis=0)))]
+    # drift starts at outcome event len(qids): the first serve is clean
+    eng = mk(drift_detect=True, drift_threshold=3.0, drift_delta=0.05,
+             drift_min_obs=3,
+             fault_plan=FaultPlan([FaultSpec("model_drift", len(qids),
+                                             arg=1.0, model=victim)]))
+    eng.serve(data, qids, pol, models=[victim])
+    assert eng.monitor.alarms == 0          # clean traffic: no false alarm
+    for _ in range(4):                      # drifted traffic until alarm
+        if victim in eng.monitor.drifted:
+            break
+        eng.serve(data, qids, pol, models=[victim])
+    assert victim in eng.monitor.drifted and eng.monitor.alarms == 1
+    # quarantine: cached entries demoted in place, probes present DRIFTED
+    ent = {k: e for k, e in eng.cache._store.items() if k[1] == victim}
+    assert ent and all(e.status == STATUS_DRIFTED for e in ent.values())
+    pool = eng.predict(RouteRequest(queries, models=[victim]))
+    assert (pool.status == STATUS_DRIFTED).all()
+    # heal: replay-buffer re-fingerprint + live hot-swap
+    fp_before = float(np.mean(eng.library.get(victim).y))
+    assert eng.monitor.can_refresh(victim)
+    fp = eng.onboard(world, victim, refresh=True)
+    assert eng.library.get(victim) is fp
+    assert float(np.mean(fp.y)) < fp_before     # drifted outcomes pulled down
+    assert victim not in eng.monitor.drifted
+    assert eng.monitor.detector(victim).n == 0
+    assert all(k[1] != victim for k in eng.cache._store)    # invalidated
+    eng.hot_swap(eng.estimator, eng.config.estimator_version + "+heal")
+    after = eng.predict(RouteRequest(queries, models=[victim]))
+    assert after.cache_hits == 0                # version bump: fresh space
+    assert not (after.status == STATUS_DRIFTED).any()
+    report = eng.serve(data, qids, pol, models=[victim])
+    assert all(d.status != "DRIFTED" for d in report.decisions)
+
+
+def test_hot_swap_version_bump_and_parity(drift_setup):
+    mk, data = drift_setup
+    eng = mk()
+    queries = [data.queries[int(q)] for q in data.test_qids[:3]]
+    a = eng.predict(RouteRequest(queries))
+    with pytest.raises(ValueError, match="new estimator_version"):
+        eng.hot_swap(eng.estimator, "v0")
+    eng.hot_swap(eng.estimator, "v0+swap")
+    assert eng.config.estimator_version == "v0+swap" and eng._hot_swaps == 1
+    b = eng.predict(RouteRequest(queries))
+    assert b.cache_hits == 0                    # old entries unreachable
+    assert b.cache_misses == a.cache_misses
+    np.testing.assert_array_equal(a.p_hat, b.p_hat)     # same params, same
+    np.testing.assert_array_equal(a.y_hat, b.y_hat)     # predictions
+
+
+def test_hot_swap_drops_stale_tier0_and_stamps_fresh_one(drift_setup):
+    from repro.models import tier0 as T0
+    import jax
+    mk, _ = drift_setup
+    head = T0.Tier0Head(T0.init_tier0(jax.random.PRNGKey(5)))
+    eng = mk(tier0=head, escalation_threshold=0.9)
+    eng.hot_swap(eng.estimator, "v1")           # implicit: head dropped
+    assert eng.config.tier0 is None
+    head2 = T0.Tier0Head(T0.init_tier0(jax.random.PRNGKey(6)))
+    eng.hot_swap(eng.estimator, "v2", tier0=head2)
+    assert eng.config.tier0 is head2 and head2.version == "v2"
+
+
+def test_hot_swap_at_tick_boundary_matches_fresh_engine(drift_setup):
+    """Post-swap bit-parity: ticks served after a mid-stream hot_swap are
+    bit-identical to a fresh engine that started on the new params
+    (whole-retire, overlap off: tick boundaries align with prompt
+    serialization, so the swap lands exactly between ticks)."""
+    import jax
+    from repro.configs.scope_estimator import TINY
+    from repro.models import model as M
+    mk, data = drift_setup
+    pol = FixedAlphaPolicy(0.6)
+    ticks = [[int(q) for q in data.test_qids[:4]],
+             [int(q) for q in data.test_qids[4:8]]]
+    params_b = M.init_params(jax.random.PRNGKey(1), TINY)
+
+    eng = mk()
+    reports = []
+    for i, r in enumerate(eng.serve_stream(
+            data, [list(t) for t in ticks], pol, use_cache=False,
+            overlap=False, refill=False)):
+        reports.append(r)
+        if i == 0:
+            eng.hot_swap(ReasoningEstimator(TINY, params_b,
+                                            max_new_tokens=12), "v0+swap")
+    ref = mk()
+    ref.set_estimator(ReasoningEstimator(TINY, params_b,
+                                       max_new_tokens=12), "v0+swap")
+    want = next(iter(ref.serve_stream(data, [list(ticks[1])], pol,
+                                      use_cache=False, overlap=False,
+                                      refill=False)))
+    got = reports[1]
+    assert [d.model for d in got.decisions] == \
+        [d.model for d in want.decisions]
+    np.testing.assert_array_equal([d.p_hat for d in got.decisions],
+                                  [d.p_hat for d in want.decisions])
+    np.testing.assert_array_equal([d.cost_hat for d in got.decisions],
+                                  [d.cost_hat for d in want.decisions])
+
+
+# ---------------------------------------------------------------------------
+# DriftAwarePolicy
+# ---------------------------------------------------------------------------
+def test_drift_aware_policy_validation():
+    inner = FixedAlphaPolicy(0.6)
+    with pytest.raises(ValueError, match="unknown mode"):
+        DriftAwarePolicy(inner, mode="bogus")
+    with pytest.raises(ValueError, match="weight"):
+        DriftAwarePolicy(inner, mode="downweight", weight=1.5)
+    assert DriftAwarePolicy(inner).name == f"drift_aware({inner.name})"
+
+
+def test_drift_aware_policy_excludes_and_downweights(drift_setup):
+    mk, data = drift_setup
+    eng = mk(drift_detect=True)
+    queries = [data.queries[int(q)] for q in data.test_qids[:6]]
+    pool = eng.predict(RouteRequest(queries))
+    inner = FixedAlphaPolicy(0.6)
+    base = inner.decide(pool, eng)
+    # empty quarantine set: decision-identical pass-through
+    thru = DriftAwarePolicy(inner).decide(pool, eng)
+    np.testing.assert_array_equal(thru.choices, base.choices)
+    assert "drift_excluded" not in thru.info
+    # quarantine the most-chosen model: exclude routes around it
+    counts = np.bincount(np.asarray(base.choices, int),
+                         minlength=len(pool.models))
+    victim = pool.models[int(np.argmax(counts))]
+    eng.monitor.drifted.add(victim)
+    excl = DriftAwarePolicy(inner).decide(pool, eng)
+    assert victim not in {pool.models[int(c)] for c in excl.choices}
+    assert excl.info["drift_excluded"] == [victim]
+    # downweight keeps the model in the pool at scaled p_hat
+    down = DriftAwarePolicy(inner, mode="downweight",
+                            weight=0.5).decide(pool, eng)
+    assert down.info["drift_downweighted"] == [victim]
+    assert all(0 <= int(c) < len(pool.models) for c in down.choices)
+    # all models quarantined: exclude falls back to the full pool
+    eng.monitor.drifted.update(pool.models)
+    allq = DriftAwarePolicy(inner).decide(pool, eng)
+    np.testing.assert_array_equal(allq.choices, base.choices)
+    assert allq.info["drift_all_quarantined"] is True
+    eng.monitor.drifted.clear()
+
+
+def test_drift_aware_policy_without_monitor_is_passthrough(drift_setup):
+    mk, data = drift_setup
+    eng = mk()                                  # no monitor at all
+    queries = [data.queries[int(q)] for q in data.test_qids[:3]]
+    pool = eng.predict(RouteRequest(queries))
+    inner = FixedAlphaPolicy(0.6)
+    got = DriftAwarePolicy(inner).decide(pool, eng)
+    np.testing.assert_array_equal(got.choices, inner.decide(pool, eng).choices)
+
+
+# ---------------------------------------------------------------------------
+# Tier-0 recalibration from observed outcomes (the drift hot-swap path)
+# ---------------------------------------------------------------------------
+def test_recalibrate_tier0_refits_temperature_shares_params():
+    import jax
+    from repro.models import tier0 as T0
+    from repro.training.tier0 import recalibrate_tier0
+    head = T0.Tier0Head(T0.init_tier0(jax.random.PRNGKey(7)))
+    p = np.full(64, 0.9)
+    flat = recalibrate_tier0(head, p, np.zeros(64))     # confidently wrong
+    assert flat.params is head.params                   # no weight update
+    assert flat.temperature == pytest.approx(4.0)       # grid max: flatten
+    sharp = recalibrate_tier0(head, p, np.ones(64))     # confidently right
+    assert sharp.temperature == pytest.approx(0.25)     # grid min: sharpen
+    assert head.temperature == 1.0                      # input untouched

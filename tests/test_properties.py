@@ -567,3 +567,85 @@ def test_kv_pool_starved_fail_recover_conserves_pages(ops):
         pg.retire_row(r)
     assert pool.pages_in_use == 0 and pool.reserved == 0
     assert sorted(pool._free) == list(range(pool.n_pages))
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap at a serve boundary: stale tier-0 stashes are never served
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def swap_state(tiny_trained, world, retriever, library):
+    """A real engine + one prepared request (host-only: prompts are
+    serialized and submitted, never decoded)."""
+    from repro.api import EngineConfig, RouteRequest, ScopeEngine
+    from repro.core.estimator import ReasoningEstimator
+    from repro.data.datasets import build_scope_data
+    cfg, params, _ = tiny_trained
+    data = build_scope_data(world, n_queries=40, seed=11)
+    eng = ScopeEngine.build(EngineConfig(
+        estimator=ReasoningEstimator(cfg, params, max_new_tokens=6),
+        retriever=retriever, library=library,
+        models_meta={m: world.models[m] for m in data.models}))
+    queries = [data.queries[int(q)] for q in data.test_qids[:2]]
+    return eng, eng._prepare(RouteRequest(queries), use_cache=False)
+
+
+@st.composite
+def _swap_trace(draw):
+    """Interleaved degrades, mid-stream estimator hot-swaps, and
+    post-swap re-stashes (what a fresh request's submit does)."""
+    return draw(st.lists(st.one_of(
+        st.tuples(st.just("degrade"), st.integers(0, 31)),
+        st.tuples(st.just("swap"), st.just(0)),
+        st.tuples(st.just("restash"), st.just(0))),
+        min_size=1, max_size=24))
+
+
+@given(_swap_trace())
+@settings(max_examples=100, deadline=None)
+def test_hot_swap_boundary_stash_versioning_property(swap_state, ops):
+    """Under any interleaving of degrades, hot-swaps, and re-stashes:
+    a degraded pair takes the tier-0 fallback rung iff its stash was
+    minted under the *current* estimator version (a swap stales every
+    earlier stash at once), every pair resolves at most once, and the
+    degrade ledger balances."""
+    from repro.api.engine import _StreamControl, _StreamEntry
+    from repro.serving.scheduler import BucketConfig, MicrobatchScheduler
+    eng, pstate = swap_state
+    row = (0.8, 12.0, 1)
+    try:
+        entry = _StreamEntry(pstate)
+        sched = MicrobatchScheduler(BucketConfig(batch_sizes=(2, 4)))
+        inflight = {}
+        control = _StreamControl(eng, sched, inflight, use_cache=False)
+        eng._submit_misses(pstate, entry, sched, inflight, False, 0, control)
+        keys = list(control.unresolved)
+        n = len(keys)
+        for k in keys:                  # what _submit_misses does with a
+            control.t0_rows[k] = ("v0", row)    # tier-0 head configured
+        fresh = dict.fromkeys(keys, True)       # stash minted at current ver?
+        degraded, expect_fb, swaps = set(), 0, 0
+        for op, arg in ops:
+            if op == "swap":
+                swaps += 1
+                eng.hot_swap(eng.estimator, f"v0+s{swaps}")
+                fresh = dict.fromkeys(keys, False)
+            elif op == "restash":
+                for k in keys:
+                    if k not in degraded:
+                        control.t0_rows[k] = (eng.config.estimator_version,
+                                              row)
+                        fresh[k] = True
+            else:
+                k = keys[arg % n]
+                if k not in degraded and fresh[k]:
+                    expect_fb += 1
+                degraded.add(k)
+                control.degrade(k)      # second degrade of k is a no-op
+        stats = sched.stats
+        assert stats.tier0_fallbacks == expect_fb
+        assert stats.degraded == len(degraded)
+        assert stats.failed_pairs == 0
+        assert entry.remaining == n - len(degraded)     # exactly-once fills
+        assert set(control.unresolved) == set(keys) - degraded
+    finally:
+        eng.config.estimator_version = "v0"

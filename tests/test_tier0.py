@@ -340,6 +340,40 @@ def test_degrade_cache_entry_from_tier0_is_tier0_and_healable(tier0_setup):
     assert healed.status == STATUS_OK and healed.tier == 1
 
 
+def test_stale_tier0_stash_refused_after_hot_swap(tier0_setup):
+    """Regression: ``degrade()`` must refuse a tier-0 fallback row stashed
+    under a pre-swap estimator version — the old head's calibration
+    belongs to the old params — and fall to the retrieval-prior rung
+    (still answered DEGRADED exactly once, just without the stash)."""
+    from repro.api.engine import _StreamControl, _StreamEntry
+    mk, data, head, _ = tier0_setup
+    queries = [data.queries[int(q)] for q in data.test_qids[:1]]
+
+    def degrade_one(engine, *, swap):
+        st = engine._prepare(RouteRequest(queries), use_cache=False)
+        assert st.t0_rows      # threshold 2.0: every pair escalates, stashed
+        entry = _StreamEntry(st)
+        sched = MicrobatchScheduler(BucketConfig(batch_sizes=(1, 2, 4, 8)))
+        inflight = {}
+        control = _StreamControl(engine, sched, inflight, use_cache=False)
+        engine._submit_misses(st, entry, sched, inflight, False, 0, control)
+        key = next(iter(control.t0_rows))
+        assert control.t0_rows[key][0] == "v0"      # stamped at submit time
+        if swap:
+            engine.hot_swap(engine.estimator, "v0+swap")
+        control.degrade(key)
+        assert entry.remaining == len(st.prompts) - 1   # exactly one filled
+        assert entry.status[0] == STATUS_DEGRADED
+        return sched.stats
+
+    # matching version: the stash answers on the tier-0 fallback rung
+    stats = degrade_one(mk(tier0=head, threshold=2.0), swap=False)
+    assert stats.degraded == 1 and stats.tier0_fallbacks == 1
+    # post-swap: the stale stash is refused, the retrieval prior answers
+    stats = degrade_one(mk(tier0=head, threshold=2.0), swap=True)
+    assert stats.degraded == 1 and stats.tier0_fallbacks == 0
+
+
 # ---------------------------------------------------------------------------
 # Static enforcement + ledger surfacing
 # ---------------------------------------------------------------------------
